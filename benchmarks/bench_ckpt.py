@@ -1,0 +1,72 @@
+"""Paper Table 3 analogue: checkpoint image size per rank vs checkpoint time
+(and MB/s/rank), across applications (archs) — 'checkpoint times follow image
+sizes'. Also measures the async-writer's train-stall time vs total write time
+(the overlap win), and restart latency (bench for §6.5 + elastic restart).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.launch.train import Trainer
+
+# different widths -> a spread of image sizes, like CoMD..HPCG in Table 3
+APPS = {
+    "granite-3-2b": dict(d_model=256, n_layers=4),
+    "qwen2.5-14b": dict(d_model=384, n_layers=6),
+    "minicpm3-4b": dict(d_model=256, n_layers=4),
+    "xlstm-350m": dict(d_model=256, n_layers=4),
+    "arctic-480b": dict(d_model=256, n_layers=3),
+}
+
+
+def one(arch, overrides, world=4):
+    cfg = smoke_config(arch)
+    kw = {k: v for k, v in overrides.items()}
+    if cfg.block == "xlstm":
+        kw.pop("n_layers", None)
+    cfg = replace(cfg, **kw)
+    with tempfile.TemporaryDirectory() as td:
+        tr = Trainer(cfg, batch_size=2, seq_len=32, world_size=world,
+                     ckpt_dir=td, total_steps=10)
+        tr.init_state()
+        tr.run(2, log_every=10)
+        # measure: stall (synchronous part) vs full write
+        t0 = time.perf_counter()
+        req = tr.checkpoint()
+        stall = time.perf_counter() - t0
+        stats = req.wait()
+        total = time.perf_counter() - t0
+        tr.pipeline.stop()
+        nbytes = stats["bytes_total"]
+        per_rank_mb = nbytes / world / 1e6
+        rate = per_rank_mb / max(total, 1e-9)
+        # restart latency
+        t0 = time.perf_counter()
+        tr2 = Trainer(cfg, batch_size=2, seq_len=32, world_size=world,
+                      ckpt_dir=td, total_steps=10)
+        tr2.restore(tr.cluster.writer.latest())
+        t_restart = time.perf_counter() - t0
+        tr2.pipeline.stop()
+        return per_rank_mb, total, stall, rate, t_restart
+
+
+def rows():
+    out = []
+    for arch, overrides in APPS.items():
+        mb, total, stall, rate, t_restart = one(arch, overrides)
+        out.append((f"ckpt_{arch}", 1e6 * total,
+                    f"MB/rank={mb:.1f};ckpt_s={total:.3f};stall_s={stall:.3f};"
+                    f"MB/s/rank={rate:.1f};restart_s={t_restart:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, extra in rows():
+        print(f"{name},{us:.0f},{extra}")

@@ -1,0 +1,96 @@
+"""Paper Figures 2/3/4 analogue: runtime overhead of the interposition layer.
+
+Five cases per application, as in Fig. 2:
+  native            — the jitted training step with no MANA wrappers
+  mana+legacy       — interposed, legacy string-keyed translation (old MANA)
+  mana+virtId       — interposed, new type-tagged table (this paper)
+under each backend (mpich/openmpi like Fig. 2, exampi like Fig. 3).
+
+'Applications' are three smoke-scale archs with different MPI-call densities
+(calls per step), mirroring the paper's CoMD/LAMMPS/SW4 spread: the FSGSBASE
+effect (Fig. 4) appears as the call-rate-dependent gap between the slow and
+fast translation paths.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import steps as ST
+from repro.configs import smoke_config
+from repro.core import Cluster
+from repro.data.pipeline import synth_batch
+from repro.models import Model
+from repro.optim import constant, make_optimizer
+from repro.sharding import ShardingCtx, rules_for
+
+# (application arch, wrapper calls per step) — calls/step spreads an order of
+# magnitude, like the paper's context-switch-rate spread (§6.3)
+APPS = [("granite-3-2b", 40), ("qwen2.5-14b", 400), ("hymba-1.5b", 1200)]
+STEPS = 30
+
+
+def _make_step(arch):
+    cfg = smoke_config(arch)
+    model = Model(cfg)
+    ctx = ShardingCtx(None, rules_for(cfg, "train"))
+    opt = make_optimizer(cfg, constant(1e-3))
+    params = model.init(jax.random.key(0))
+    opt_state = opt.init(params)
+    step = jax.jit(ST.make_train_step(model, ctx, opt))
+    b = synth_batch(cfg, 2, 32, seed=3, index=0)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    # warmup/compile
+    params, opt_state, _ = step(params, opt_state, batch, jnp.int32(0))
+    return step, params, opt_state, batch
+
+
+def _run(step, params, opt_state, batch, mana=None, calls_per_step=0):
+    comm = mana.comm_world() if mana else None
+    t0 = time.perf_counter()
+    for i in range(STEPS):
+        if mana is not None:
+            for c in range(calls_per_step):
+                # the wrapper hot path: translate + metadata, like MPI_Comm_size
+                mana.comm_size(comm)
+        params, opt_state, m = step(params, opt_state, batch, jnp.int32(i))
+    jax.block_until_ready(m["loss"])
+    return time.perf_counter() - t0
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def rows(backends=("mpich", "openmpi", "exampi"), trials=5):
+    out = []
+    for arch, calls in APPS:
+        step, params, opt_state, batch = _make_step(arch)
+        for backend in backends:
+            fast = Cluster(1, backend, translation="fast").mana(0)
+            slow = Cluster(1, backend, translation="slow").mana(0)
+            # paper methodology: median over alternating trials so scheduler
+            # noise on the shared host hits all variants equally
+            tn, tf, ts = [], [], []
+            _run(step, params, opt_state, batch)  # warm
+            for _ in range(trials):
+                tn.append(_run(step, params, opt_state, batch))
+                tf.append(_run(step, params, opt_state, batch, fast, calls))
+                ts.append(_run(step, params, opt_state, batch, slow, calls))
+            t_native, t_fast, t_slow = _median(tn), _median(tf), _median(ts)
+            ov_f = 100 * (t_fast - t_native) / t_native
+            ov_s = 100 * (t_slow - t_native) / t_native
+            out.append((f"overhead_{arch}_{backend}",
+                        1e6 * t_fast / STEPS,
+                        f"native_us={1e6*t_native/STEPS:.0f};"
+                        f"virtId_ov={ov_f:.1f}%;legacy_ov={ov_s:.1f}%;"
+                        f"calls/step={calls}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, extra in rows():
+        print(f"{name},{us:.1f},{extra}")

@@ -1,0 +1,117 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, three terms in SECONDS on TPU v5e:
+
+  compute    = FLOPs_global_mxu / (chips * 197e12)          [bf16 MXU peak]
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9           [per-chip ICI]
+
+FLOPs come from the trip-count-aware jaxpr counter (XLA cost_analysis counts
+while bodies once — see src/repro/flops.py); collective bytes from the HLO
+parser with while-trip multipliers (src/repro/launch/hlo_analysis.py).
+
+HBM bytes per device = compiled argument_size + output_size (params, optimizer
+state, caches — real per-device numbers from memory_analysis()) plus an
+analytic activation-traffic estimate:
+  train:   2 x (L*B*S*d*2 saved residuals + B*S*Vp*4 logits) / chips
+  prefill: (B*S*d*2 * L + cache_out) / chips     (cache_out already in outputs)
+  decode:  negligible beyond args/outputs (cache read+write dominates, in args)
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (prefill/decode);
+the ratio MODEL_FLOPS / FLOPs_mxu exposes remat + masked-attention waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per chip ICI
+
+
+def act_bytes_global(cfg, kind, B, S):
+    L, d, Vp = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    if kind == "train":
+        resid = L * B * S * d * 2
+        logits = B * S * cfg.n_codebooks * Vp * 4
+        return 2 * (resid + logits)
+    if kind == "prefill":
+        return L * B * S * d * 2
+    return 0
+
+
+def analyze(art, cfg):
+    chips = art["n_chips"]
+    kind = art["kind"]
+    B, S = art["global_batch"], art["seq_len"]
+    compute = art["flops_global_mxu"] / (chips * PEAK_FLOPS)
+    mem = art.get("memory_analysis", {})
+    hbm_dev = mem.get("argument_size_in_bytes", 0) + \
+        mem.get("output_size_in_bytes", 0) + \
+        act_bytes_global(cfg, kind, B, S) / chips
+    memory = hbm_dev / HBM_BW
+    coll_dev = sum(art["collective_bytes_per_device"].values())
+    collective = coll_dev / LINK_BW
+    n_act = art["active_params"]
+    tokens = art["tokens"]
+    model_flops = (6 if kind == "train" else 2) * n_act * tokens
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    bottleneck = max(terms, key=terms.get)
+    total = max(terms.values())
+    frac = {k: v / total for k, v in terms.items()}
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(art["flops_global_mxu"], 1.0),
+        "hbm_bytes_per_dev": hbm_dev,
+        "coll_bytes_per_dev": coll_dev,
+        # roofline fraction: how close the dominant term is to being the ONLY
+        # cost (1.0 = perfectly balanced against the hardware ceiling)
+        "step_lower_bound_s": total,
+        "roofline_fraction": max(compute, memory) / (compute + memory + collective),
+    }
+
+
+def load_cells(mesh="pod", tag=""):
+    rows = []
+    from repro.configs import get_config
+    suffix = f".{mesh}{'.' + tag if tag else ''}.json"
+    for p in sorted(ART_DIR.glob(f"*{suffix}")):
+        art = json.loads(p.read_text())
+        if (art.get("tag") or "baseline") != (tag or "baseline"):
+            continue
+        cfg = get_config(art["arch"])
+        rows.append({**art, **analyze(art, cfg)})
+    return rows
+
+
+def render(rows):
+    hdr = (f"{'arch':<22}{'shape':<13}{'compute_s':>11}{'memory_s':>10}"
+           f"{'collect_s':>11}{'bottleneck':>11}{'useful':>8}{'roofl%':>8}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:<22}{r['shape']:<13}{r['compute_s']:>11.4f}"
+            f"{r['memory_s']:>10.4f}{r['collective_s']:>11.4f}"
+            f"{r['bottleneck']:>11}{r['useful_ratio']:>8.2f}"
+            f"{100 * r['roofline_fraction']:>7.1f}%")
+    return "\n".join(out)
+
+
+def main():
+    rows = load_cells("pod")
+    print(render(rows))
+    print()
+    # csv for run.py
+    for r in rows:
+        print(f"roofline,{r['arch']},{r['shape']},{r['compute_s']:.5f},"
+              f"{r['memory_s']:.5f},{r['collective_s']:.5f},{r['bottleneck']},"
+              f"{r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

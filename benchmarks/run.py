@@ -1,0 +1,55 @@
+"""Benchmark harness: one section per paper table/figure, plus the roofline
+report from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV.
+
+  Fig 2/3 -> bench_overhead  (native vs MANA vs MANA+virtId, per backend)
+  Fig 4   -> the legacy-vs-virtId gap at high call rates (same bench)
+  §6.1    -> bench_vid       (translation micro-benchmark)
+  Table 3 -> bench_ckpt      (image size vs time vs MB/s/rank, restart)
+  §Roofline -> roofline      (from artifacts/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    sections = []
+    from benchmarks import bench_vid
+    sections.append(("vid", bench_vid.rows))
+    from benchmarks import bench_overhead
+    sections.append(("overhead", bench_overhead.rows))
+    from benchmarks import bench_ckpt
+    sections.append(("ckpt", bench_ckpt.rows))
+
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row, us, extra in fn():
+                print(f"{row},{us:.3f},{extra}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,FAILED", flush=True)
+            traceback.print_exc()
+
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_cells("pod")
+        for r in rows:
+            print(f"roofline_{r['arch']}_{r['shape']},"
+                  f"{1e6 * r['step_lower_bound_s']:.1f},"
+                  f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+                  f"collective_s={r['collective_s']:.4f};"
+                  f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f}")
+    except Exception:  # noqa: BLE001
+        failures += 1
+        print("roofline,nan,FAILED (run `python -m repro.launch.dryrun` first)")
+        traceback.print_exc()
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Preemptible serving: snapshot a server MID-GENERATION (KV caches included),
+tear it down, and resume decoding on a fresh server without recomputing the
+prefill — the paper's urgent-HPC use case (§1: preemptible jobs on minutes of
+notice) applied to inference.
+
+  PYTHONPATH=src python examples/serve_preemptible.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.launch.serve import Server
+
+
+def main():
+    cfg = smoke_config("minicpm3-4b")   # MLA: latent KV cache
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 12), dtype=np.int32)
+    with tempfile.TemporaryDirectory() as td:
+        srv = Server(cfg, ckpt_dir=td)
+        logits = srv.prefill(prompts, pad_to=32)
+        first = np.argmax(np.asarray(logits)[..., : cfg.vocab_size],
+                          -1).astype(np.int32)
+        a, _ = srv.decode(4, first)
+        srv.checkpoint(tag=1).wait()
+        print(f"preempted at pos {srv.pos} after 4 generated tokens")
+        reference, _ = srv.decode(4, a[-1])
+
+        srv2 = Server(cfg, ckpt_dir=td)
+        srv2.prefill(prompts, pad_to=32)          # structure only
+        srv2.restore(srv.cluster.writer.latest())
+        resumed, _ = srv2.decode(4, a[-1])
+        for r, c in zip(reference, resumed):
+            np.testing.assert_array_equal(r, c)
+        print("resumed generation matches un-preempted reference - OK")
+
+
+if __name__ == "__main__":
+    main()

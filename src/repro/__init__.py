@@ -1,0 +1,5 @@
+"""repro: implementation-oblivious transparent checkpoint-restart for JAX
+multi-pod training (MANA, CS.DC 2023), plus the supporting training/serving
+framework, model zoo, and Pallas kernels."""
+
+__version__ = "0.1.0"

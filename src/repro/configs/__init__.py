@@ -1,0 +1,18 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeConfig,
+    XLSTMConfig,
+    cells,
+    get_config,
+    smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "MLAConfig", "MoEConfig", "ModelConfig", "SSMConfig",
+    "ShapeConfig", "XLSTMConfig", "cells", "get_config", "smoke_config",
+]

@@ -1,0 +1,19 @@
+"""arctic-480b: 128 experts top-2 + dense residual [hf:Snowflake/snowflake-arctic].
+
+group_size=4096 (= one dispatch chunk per train_4k step): smaller chunks put
+the expert-grad reduction INSIDE the chunk scan, multiplying the dominant
+collective by n_chunks (EXPERIMENTS.md §Perf, arctic iteration 2).
+
+Adafactor + bf16 optimizer state so the 480B-param state fits 16GB/chip HBM on the
+256-chip pod (see DESIGN.md §5); decode shards params over both mesh axes.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab_size=32000, head_dim=128,
+    moe=MoEConfig(n_experts=128, top_k=2, expert_d_ff=4864, dense_residual=True,
+                  group_size=4096),
+    optimizer="adafactor", opt_state_dtype="bfloat16", fsdp_decode=True,
+)

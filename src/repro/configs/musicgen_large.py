@@ -1,0 +1,14 @@
+"""musicgen-large: decoder-only over 4 EnCodec codebooks [arXiv:2306.05284].
+
+EnCodec frontend is a stub (token ids per codebook arrive precomputed with the
+delay pattern already applied). float8 KV cache: the 32-head MHA cache at
+decode_32k is 12.9GB/chip in bf16 — f8 halves it (see DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab_size=2048, head_dim=64, n_codebooks=4,
+    cache_dtype="float8_e4m3fn",
+)

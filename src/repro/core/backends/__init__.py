@@ -1,0 +1,21 @@
+from repro.core.backends.base import Backend
+from repro.core.backends.craympi import CrayMpiBackend
+from repro.core.backends.exampi import ExaMpiBackend
+from repro.core.backends.fabric import Fabric
+from repro.core.backends.mpich import MpichBackend
+from repro.core.backends.openmpi import OpenMpiBackend
+
+BACKENDS = {
+    "mpich": MpichBackend,
+    "craympi": CrayMpiBackend,
+    "openmpi": OpenMpiBackend,
+    "exampi": ExaMpiBackend,
+}
+
+
+def make_backend(name: str, fabric: Fabric, rank: int, world_size: int) -> Backend:
+    return BACKENDS[name](fabric, rank, world_size)
+
+
+__all__ = ["Backend", "Fabric", "BACKENDS", "make_backend", "MpichBackend",
+           "CrayMpiBackend", "OpenMpiBackend", "ExaMpiBackend"]

@@ -1,0 +1,145 @@
+"""Lower-half runtime backend contract.
+
+This is the paper's §5 'MPI subset requirements' as an ABC. A backend is one
+'MPI implementation': it owns physical handles (representation is backend-
+private!), the constants discipline (§4.3), and the host-side message plumbing
+MANA needs. The interpose layer (stub library) is written ONCE against this
+contract — 'develop once, run everywhere'.
+
+Categories (paper §5):
+  1. drain:    iprobe / recv / test
+  2. decode:   comm_group / group_translate_ranks / type_get_envelope / _contents
+  3. internal: send / recv / alltoall
+plus object creation/free, which MANA replays at restart.
+
+`capabilities()` advertises optional surface (e.g. ExaMPI has no comm_split;
+the interpose layer emulates it with group math + comm_create).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Optional
+
+PREDEFINED_DTYPES = (
+    # (name, itemsize, aliases-with) — INT8/CHAR aliasing mirrors ExaMPI §4.3
+    ("MPI_CHAR", 1, "MPI_INT8_T"),
+    ("MPI_INT8_T", 1, "MPI_CHAR"),
+    ("MPI_INT32_T", 4, None),
+    ("MPI_INT64_T", 8, None),
+    ("MPI_FLOAT", 4, None),
+    ("MPI_DOUBLE", 8, None),
+    ("MPI_BFLOAT16", 2, None),
+)
+
+PREDEFINED_OPS = ("MPI_SUM", "MPI_MAX", "MPI_MIN", "MPI_PROD")
+
+
+class Backend(abc.ABC):
+    """One logical-rank view of the lower half."""
+
+    name: str = "abstract"
+
+    def __init__(self, fabric, rank: int, world_size: int):
+        self.fabric = fabric
+        self.rank = rank
+        self.world_size = world_size
+
+    # -- lifecycle ---------------------------------------------------------
+    @abc.abstractmethod
+    def init_constants(self) -> None:
+        """Resolve predefined constants per this implementation's discipline
+        (fixed ints / startup functions / lazy shared pointers)."""
+
+    @abc.abstractmethod
+    def world_comm(self) -> Any:
+        """Physical handle of COMM_WORLD (may differ across sessions!)."""
+
+    @abc.abstractmethod
+    def predefined_dtype(self, name: str) -> Any:
+        """Physical handle of a predefined datatype."""
+
+    @abc.abstractmethod
+    def predefined_op(self, name: str) -> Any:
+        ...
+
+    def capabilities(self) -> set:
+        return {"comm_split", "comm_create", "type_create", "op_create"}
+
+    # -- object creation (replayed at restart) ------------------------------
+    @abc.abstractmethod
+    def comm_create(self, ranks) -> Any:
+        ...
+
+    def comm_split(self, comm, color: int, key: int, members_by_color) -> Any:
+        """Default split: backends in the MPICH family implement natively."""
+        return self.comm_create(members_by_color)
+
+    @abc.abstractmethod
+    def comm_free(self, comm) -> None:
+        ...
+
+    @abc.abstractmethod
+    def comm_group(self, comm) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def group_translate_ranks(self, group) -> list:
+        ...
+
+    @abc.abstractmethod
+    def type_create(self, envelope: dict) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def type_get_envelope(self, dtype) -> dict:
+        ...
+
+    def type_get_contents(self, dtype) -> dict:
+        return self.type_get_envelope(dtype)
+
+    @abc.abstractmethod
+    def op_create(self, name: str, commutative: bool) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def comm_ranks(self, comm) -> list:
+        """Decode a communicator's member ranks (for reconstruction)."""
+
+    # -- messaging (host metadata) ------------------------------------------
+    def send(self, dst: int, tag: int, payload) -> None:
+        self.fabric.send(self.rank, dst, tag, payload)
+
+    def recv(self, src: int, tag: int):
+        return self.fabric.recv(self.rank, src, tag)
+
+    def iprobe(self, src: int = -1, tag: int = -1):
+        return self.fabric.iprobe(self.rank, src, tag)
+
+    def isend(self, dst: int, tag: int, payload) -> Any:
+        """Returns a backend request handle."""
+        self.fabric.send(self.rank, dst, tag, payload)
+        return self.request_create({"op": "isend", "dst": dst, "tag": tag})
+
+    @abc.abstractmethod
+    def request_create(self, info: dict) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def test(self, request) -> bool:
+        ...
+
+    def alltoall(self, comm, payloads: list) -> None:
+        ranks = self.comm_ranks(comm)
+        for dst, payload in zip(ranks, payloads):
+            self.fabric.send(self.rank, dst, 70000, payload)
+
+    def alltoall_recv(self, comm) -> list:
+        ranks = self.comm_ranks(comm)
+        return [self.fabric.recv(self.rank, src, 70000) for src in ranks]
+
+    def barrier(self, expected: int | None = None) -> None:
+        self.fabric.barrier(self.rank, expected)
+
+    # -- teardown -----------------------------------------------------------
+    def shutdown(self) -> None:
+        """Lower half is simply discarded (never checkpointed)."""

@@ -1,0 +1,79 @@
+"""In-process 'network fabric' shared by all logical ranks.
+
+Plays the role of the interconnect for MANA-internal host-metadata traffic
+(paper §5 category 1 and 3): tagged point-to-point queues between ranks.
+Tensor-data collectives live inside compiled XLA programs and are NOT routed
+here — exactly like MANA, which never touches the application's MPI traffic,
+only probes/drains it at checkpoint time.
+
+On a real cluster this object is replaced by a TCP/gRPC side channel between
+rank processes; the interface is the same.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+
+class Fabric:
+    def __init__(self, world_size: int):
+        self.world_size = world_size
+        self._lock = threading.Lock()
+        # (dst, src, tag) -> deque of payloads
+        self._queues: dict[tuple, deque] = {}
+        self._cv = threading.Condition(self._lock)
+        self._barrier_gen = 0
+        self._barrier_count = 0
+        self._barrier_cv = threading.Condition(self._lock)
+        self.delivered = 0
+
+    def send(self, src: int, dst: int, tag: int, payload):
+        if not (0 <= dst < self.world_size):
+            raise ValueError(f"bad destination rank {dst}")
+        with self._cv:
+            self._queues.setdefault((dst, src, tag), deque()).append(payload)
+            self.delivered += 1
+            self._cv.notify_all()
+
+    def iprobe(self, rank: int, src: int = -1, tag: int = -1):
+        """Any pending message for `rank` (src/tag = -1 wildcards)?
+        Returns (src, tag) or None."""
+        with self._lock:
+            for (dst, s, t), q in self._queues.items():
+                if dst != rank or not q:
+                    continue
+                if (src in (-1, s)) and (tag in (-1, t)):
+                    return (s, t)
+        return None
+
+    def recv(self, rank: int, src: int, tag: int, timeout: float = 30.0):
+        """Blocking receive (ranks run as threads for collective protocols)."""
+        deadline = timeout
+        with self._cv:
+            while True:
+                q = self._queues.get((rank, src, tag))
+                if q:
+                    return q.popleft()
+                if deadline <= 0:
+                    raise LookupError(
+                        f"no message for rank {rank} from {src} tag {tag}")
+                self._cv.wait(timeout=0.5)
+                deadline -= 0.5
+
+    def pending_count(self, rank: int) -> int:
+        with self._lock:
+            return sum(len(q) for (dst, _, _), q in self._queues.items()
+                       if dst == rank)
+
+    def barrier(self, rank: int, expected: int | None = None):
+        expected = expected or self.world_size
+        with self._barrier_cv:
+            gen = self._barrier_gen
+            self._barrier_count += 1
+            if self._barrier_count >= expected:
+                self._barrier_count = 0
+                self._barrier_gen += 1
+                self._barrier_cv.notify_all()
+            else:
+                while self._barrier_gen == gen:
+                    self._barrier_cv.wait(timeout=30)

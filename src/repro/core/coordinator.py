@@ -1,0 +1,112 @@
+"""Cluster coordinator: logical ranks, heartbeats, failure detection, and the
+auto-restart policy. This is the fault-tolerance control plane that MANA-style
+transparent checkpointing enables: any failure is handled by rebuilding the
+lower half (possibly with a different backend flavor / world size / mesh) and
+re-binding the saved upper half.
+
+In-container, ranks are objects in one process over CPU host devices; on a
+real cluster each rank is a jax.distributed process and this class runs in the
+job controller. Nothing in the checkpoint format depends on which."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.backends.fabric import Fabric
+from repro.core.ckpt import CheckpointWriter
+from repro.core.drain import drain_world
+from repro.core.interpose import Mana
+
+
+@dataclass
+class RankState:
+    mana: Mana
+    alive: bool = True
+    last_heartbeat: float = field(default_factory=time.time)
+
+
+class Cluster:
+    """World of logical ranks sharing one fabric + one JAX process."""
+
+    def __init__(self, world_size: int, backend_name: str = "mpich",
+                 *, translation: str = "fast", ckpt_dir=None, keep: int = 3):
+        self.world_size = world_size
+        self.backend_name = backend_name
+        self.translation = translation
+        self.fabric = Fabric(world_size)
+        self.ranks = [RankState(Mana(backend_name, self.fabric, r, world_size,
+                                     translation=translation))
+                      for r in range(world_size)]
+        self.writer = CheckpointWriter(ckpt_dir, world_size, keep=keep) \
+            if ckpt_dir else None
+        self.events: list = []
+        self.restart_count = 0
+
+    @property
+    def manas(self):
+        return [r.mana for r in self.ranks if r.alive]
+
+    def mana(self, rank: int) -> Mana:
+        return self.ranks[rank].mana
+
+    # -- heartbeats / failure detection ------------------------------------
+    def heartbeat(self, rank: int):
+        self.ranks[rank].last_heartbeat = time.time()
+
+    def detect_failures(self, timeout_s: float = 5.0) -> list:
+        now = time.time()
+        dead = [i for i, r in enumerate(self.ranks)
+                if r.alive and now - r.last_heartbeat > timeout_s]
+        for i in dead:
+            self.ranks[i].alive = False
+            self.events.append(("failure_detected", i, now))
+        return dead
+
+    def kill_rank(self, rank: int):
+        """Fault injection: the rank's lower half dies (network/node failure)."""
+        self.ranks[rank].alive = False
+        self.ranks[rank].mana.backend.shutdown()
+        self.events.append(("killed", rank, time.time()))
+
+    # -- transparent checkpoint --------------------------------------------
+    def checkpoint(self, step: int, arrays, mesh, extra_rank_state=None):
+        """Drain -> barrier -> snapshot -> async write. Returns the request."""
+        if self.writer is None:
+            raise RuntimeError("no ckpt_dir configured")
+        drain_stats = drain_world(self.manas)
+        rank_states = {}
+        for i, r in enumerate(self.ranks):
+            if not r.alive:
+                continue
+            st = {"mana": r.mana.snapshot(),
+                  "drain": drain_stats[i] if i < len(drain_stats) else {}}
+            if extra_rank_state:
+                st.update(extra_rank_state(i))
+            rank_states[i] = st
+        req = self.writer.checkpoint(step, arrays, mesh, rank_states,
+                                     extra_meta={"backend": self.backend_name})
+        self.events.append(("checkpoint", step, time.time()))
+        return req
+
+    # -- restart ------------------------------------------------------------
+    def restart(self, ckpt_dir, *, new_world_size: Optional[int] = None,
+                new_backend: Optional[str] = None) -> "Cluster":
+        """Build a NEW cluster (new lower halves) from a checkpoint. Elastic:
+        the new world size and backend flavor may differ (paper §9)."""
+        from repro.core.restart import load_manifest, load_rank_state
+        manifest = load_manifest(ckpt_dir)
+        old_ws = manifest["world_size"]
+        ws = new_world_size or old_ws
+        backend = new_backend or self.backend_name
+        fresh = Cluster(ws, backend, translation=self.translation,
+                        ckpt_dir=self.writer.base if self.writer else None)
+        fresh.restart_count = self.restart_count + 1
+        # re-bind each new rank from an old rank image (elastic: wrap around)
+        for r in range(ws):
+            src = r % old_ws
+            snap = load_rank_state(ckpt_dir, src)["mana"]
+            fresh.ranks[r].mana = Mana.restore(
+                snap, fresh.fabric, r, ws, backend_name=backend)
+        fresh.events.append(("restarted", manifest["step"], time.time()))
+        return fresh

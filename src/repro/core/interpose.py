@@ -1,0 +1,288 @@
+"""The MANA stub library (interposition layer, paper Fig. 1).
+
+The application sees opaque 64-bit handles whose FIRST 32 BITS are the MANA
+virtual id (mirroring 'the vid occupies the first 4 bytes of whatever handle
+type mpi.h declares', §1.2 point 2). Every wrapper translates virtual ->
+physical on entry and physical -> virtual on exit; object-creating calls are
+appended to the record-replay log. The same class runs unmodified against all
+four backend flavors — the implementation-oblivious property under test.
+
+`translation='slow'` routes lookups through the LEGACY per-kind string-keyed
+tables (paper §4.1) — the measured baseline for the virtId speedup and the
+FSGSBASE-style fast/slow path comparison in benchmarks/bench_overhead.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+from repro.core.backends import make_backend
+from repro.core.descriptors import (Descriptor, Kind, Strategy, comm_desc,
+                                    datatype_desc, group_desc, op_desc,
+                                    request_desc)
+from repro.core.legacy_vid import LegacyVidTables
+from repro.core.vid import VidTable, vid_kind
+
+HANDLE_MAGIC = 0x4D414E41  # 'MANA' in the upper 32 bits of every handle
+_TAG_SPLIT = 60001
+_TAG_USER = 50000
+
+_KIND_NAME = {Kind.COMM: "MPI_Comm", Kind.GROUP: "MPI_Group",
+              Kind.REQUEST: "MPI_Request", Kind.OP: "MPI_Op",
+              Kind.DATATYPE: "MPI_Datatype"}
+
+
+def make_handle(vid: int) -> int:
+    return (HANDLE_MAGIC << 32) | (vid & 0xFFFFFFFF)
+
+
+def handle_vid(handle: int) -> int:
+    return handle & 0xFFFFFFFF
+
+
+class Mana:
+    """Per-rank interposition runtime (upper half)."""
+
+    def __init__(self, backend_name: str, fabric, rank: int, world_size: int,
+                 *, translation: str = "fast", ggid_policy: str = "eager"):
+        assert translation in ("fast", "slow", "none")
+        self.backend_name = backend_name
+        self.rank = rank
+        self.world_size = world_size
+        self.fabric = fabric
+        self.translation = translation
+        self.vids = VidTable(ggid_policy)
+        self.legacy = LegacyVidTables() if translation == "slow" else None
+        self._legacy_of: dict[int, int] = {}   # vid -> legacy vid
+        self.log: list = []                    # record-replay creation log
+        self.pending_messages: list = []       # drained in-flight messages
+        self.translate_count = 0
+        self.backend = make_backend(backend_name, fabric, rank, world_size)
+        self._register_world()
+
+    # ------------------------------------------------------------------
+    # handle plumbing
+    # ------------------------------------------------------------------
+    def _register(self, desc: Descriptor, phys) -> int:
+        desc.phys = phys
+        desc.meta["order"] = self._order = getattr(self, "_order", 0) + 1
+        vid = self.vids.insert(desc)
+        if self.legacy is not None:
+            lvid = self.legacy.insert(_KIND_NAME[desc.kind], phys)
+            self._legacy_of[vid] = lvid
+            for k, v in desc.meta.items():
+                if isinstance(v, (int, str, float, bool)) or v is None:
+                    self.legacy.set_attr(_KIND_NAME[desc.kind], lvid, k, v)
+        return vid
+
+    def _desc(self, handle: int) -> Descriptor:
+        return self.vids.lookup(handle_vid(handle))
+
+    def _phys(self, handle: int):
+        """virtual -> physical on every call: THE hot path."""
+        self.translate_count += 1
+        vid = handle_vid(handle)
+        d = self.vids.lookup(vid)
+        if d.phys is None:
+            self._bind_lazy(d)
+        if self.legacy is not None:
+            # legacy path: string-compare map select + 3 attribute lookups
+            kn = _KIND_NAME[vid_kind(vid)]
+            lvid = self._legacy_of[vid]
+            phys = self.legacy.virtual_to_real(kn, lvid)
+            for attr in ("ranks", "axis_name", "parent"):
+                try:
+                    self.legacy.get_attr(kn, lvid, attr)
+                except KeyError:
+                    pass
+            return phys
+        return d.phys
+
+    def _bind_lazy(self, d: Descriptor):
+        """Late binding for constants (ExaMPI lazy shared pointers, §4.3)."""
+        if d.kind == Kind.COMM and d.meta.get("axis_name") == "world":
+            d.phys = self.backend.world_comm()
+        elif d.kind == Kind.DATATYPE and d.meta.get("envelope", {}).get(
+                "combiner") == "named":
+            d.phys = self.backend.predefined_dtype(d.meta["envelope"]["name"])
+        elif d.kind == Kind.OP and d.meta.get("predefined"):
+            d.phys = self.backend.predefined_op(d.meta["name"])
+        else:
+            raise KeyError(f"vid {d.vid:#x} has no physical binding")
+        if self.legacy is not None and d.vid in self._legacy_of:
+            kn = _KIND_NAME[d.kind]
+            self.legacy._maps[kn][self._legacy_of[d.vid]] = d.phys
+
+    def _register_world(self):
+        # upper-half constants (macros): bound to lower-half results of the
+        # 'constant functions' — lazily, to honor ExaMPI's discipline.
+        d = comm_desc(range(self.world_size), axis_name="world",
+                      strategy=Strategy.SERIALIZE)
+        self.world_handle = make_handle(self._register(d, None))
+        self.dtype_handles = {}
+        from repro.core.backends.base import PREDEFINED_DTYPES, PREDEFINED_OPS
+        for nm, size, _ in PREDEFINED_DTYPES:
+            dd = datatype_desc({"combiner": "named", "name": nm, "itemsize": size})
+            self.dtype_handles[nm] = make_handle(self._register(dd, None))
+        self.op_handles = {}
+        for nm in PREDEFINED_OPS:
+            od = op_desc(nm)
+            od.meta["predefined"] = True
+            self.op_handles[nm] = make_handle(self._register(od, None))
+
+    # ------------------------------------------------------------------
+    # wrappers: communicators / groups
+    # ------------------------------------------------------------------
+    def comm_world(self) -> int:
+        return self.world_handle
+
+    def comm_rank(self, comm: int) -> int:
+        ranks = self._desc(comm).meta["ranks"]
+        return ranks.index(self.rank)
+
+    def comm_size(self, comm: int) -> int:
+        self._phys(comm)  # translation happens even for metadata calls
+        return len(self._desc(comm).meta["ranks"])
+
+    def comm_split(self, comm: int, color: int, key: int) -> Optional[int]:
+        """Collective over the parent communicator's members."""
+        parent = self._desc(comm)
+        phys_parent = self._phys(comm)
+        members = parent.meta["ranks"]
+        for dst in members:
+            self.backend.send(dst, _TAG_SPLIT, (self.rank, color, key))
+        triples = [self.backend.recv(src, _TAG_SPLIT) for src in members]
+        mine = sorted([(k, r) for r, c, k in triples if c == color])
+        new_members = [r for _, r in mine]
+        if not new_members:
+            return None
+        if "comm_split" in self.backend.capabilities():
+            phys = self.backend.comm_split(phys_parent, color, key, new_members)
+        else:  # ExaMPI subset: emulate via comm_create (paper §5)
+            phys = self.backend.comm_create(new_members)
+        d = comm_desc(new_members, parent=handle_vid(comm), color=color, key=key)
+        vid = self._register(d, phys)
+        self.log.append(("comm_split", {"parent": handle_vid(comm),
+                                        "color": color, "key": key,
+                                        "ranks": new_members}))
+        return make_handle(vid)
+
+    def comm_create(self, ranks) -> int:
+        phys = self.backend.comm_create(list(ranks))
+        d = comm_desc(ranks)
+        vid = self._register(d, phys)
+        self.log.append(("comm_create", {"ranks": list(ranks)}))
+        return make_handle(vid)
+
+    def comm_group(self, comm: int) -> int:
+        phys_g = self.backend.comm_group(self._phys(comm))
+        ranks = self.backend.group_translate_ranks(phys_g)
+        d = group_desc(ranks, parent=handle_vid(comm))
+        vid = self._register(d, phys_g)
+        self.log.append(("comm_group", {"parent": handle_vid(comm),
+                                        "ranks": list(ranks)}))
+        return make_handle(vid)
+
+    def group_ranks(self, group: int) -> list:
+        return self.backend.group_translate_ranks(self._phys(group))
+
+    def comm_free(self, comm: int):
+        self.backend.comm_free(self._phys(comm))
+        self.log.append(("free", {"vid": handle_vid(comm)}))
+        self.vids.free(handle_vid(comm))
+
+    # ------------------------------------------------------------------
+    # wrappers: datatypes / ops
+    # ------------------------------------------------------------------
+    def type_contiguous(self, count: int, base: int) -> int:
+        base_env = self.backend.type_get_envelope(self._phys(base))
+        env = {"combiner": "contiguous", "count": count, "base": base_env}
+        phys = self.backend.type_create(env)
+        vid = self._register(datatype_desc(env), phys)
+        self.log.append(("type_create", {"envelope": env}))
+        return make_handle(vid)
+
+    def type_vector(self, count: int, blocklength: int, stride: int,
+                    base: int) -> int:
+        base_env = self.backend.type_get_envelope(self._phys(base))
+        env = {"combiner": "vector", "count": count, "blocklength": blocklength,
+               "stride": stride, "base": base_env}
+        phys = self.backend.type_create(env)
+        vid = self._register(datatype_desc(env), phys)
+        self.log.append(("type_create", {"envelope": env}))
+        return make_handle(vid)
+
+    def type_envelope(self, dtype: int) -> dict:
+        return self.backend.type_get_envelope(self._phys(dtype))
+
+    def op_create(self, name: str, commutative: bool = True) -> int:
+        phys = self.backend.op_create(name, commutative)
+        vid = self._register(op_desc(name, commutative), phys)
+        self.log.append(("op_create", {"name": name, "commutative": commutative}))
+        return make_handle(vid)
+
+    # ------------------------------------------------------------------
+    # wrappers: point-to-point (host metadata; drained at checkpoint)
+    # ------------------------------------------------------------------
+    def isend(self, dst: int, tag: int, payload) -> int:
+        phys = self.backend.isend(dst, _TAG_USER + tag, payload)
+        d = request_desc("isend", peer=dst, tag=tag)
+        vid = self._register(d, phys)
+        return make_handle(vid)
+
+    def recv(self, src: int, tag: int):
+        # buffered (drained-at-checkpoint) messages are consumed first,
+        # transparently — exactly MANA's restart semantics
+        for i, (s, t, payload) in enumerate(self.pending_messages):
+            if s == src and t == _TAG_USER + tag:
+                self.pending_messages.pop(i)
+                return payload
+        return self.backend.recv(src, _TAG_USER + tag)
+
+    def iprobe(self, src: int = -1, tag: int = -1):
+        for s, t, _ in self.pending_messages:
+            if (src in (-1, s)) and (tag == -1 or _TAG_USER + tag == t):
+                return (s, t - _TAG_USER)
+        return self.backend.iprobe(src, -1 if tag == -1 else _TAG_USER + tag)
+
+    def test(self, request: int) -> bool:
+        d = self._desc(request)
+        done = self.backend.test(self._phys(request))
+        d.state["done"] = bool(done)
+        return done
+
+    def wait_all(self, requests) -> None:
+        for r in requests:
+            while not self.test(r):
+                time.sleep(0.001)
+
+    def barrier(self, comm: Optional[int] = None, expected: Optional[int] = None):
+        self.backend.barrier(expected)
+
+    def alltoall(self, comm: int, payloads: list) -> list:
+        phys = self._phys(comm)
+        self.backend.alltoall(phys, payloads)
+        return self.backend.alltoall_recv(phys)
+
+    # ------------------------------------------------------------------
+    # checkpoint support (the upper-half snapshot of this subsystem)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"backend_name": self.backend_name,
+                "translation": self.translation,
+                "vids": self.vids.snapshot(),
+                "log": self.log,
+                "pending": list(self.pending_messages),
+                "translate_count": self.translate_count}
+
+    @classmethod
+    def restore(cls, snap: dict, fabric, rank: int, world_size: int,
+                backend_name: Optional[str] = None) -> "Mana":
+        """Rebuild on a NEW lower half — possibly a different backend flavor
+        (ckpt under Cray, restart under Open MPI: the paper's §9 future work,
+        implemented via descriptor serialization)."""
+        m = cls(backend_name or snap["backend_name"], fabric, rank, world_size,
+                translation=snap["translation"])
+        from repro.core.restart import rebind_objects
+        rebind_objects(m, snap)
+        return m

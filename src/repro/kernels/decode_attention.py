@@ -1,0 +1,93 @@
+"""Split-KV flash-decoding Pallas kernel (one query token, huge KV cache).
+
+The cache sequence is cut into `n_splits` slabs; each grid step computes
+unnormalized partials (m, l, o) for its slab into separate outputs, and a tiny
+jnp epilogue renormalizes across slabs. This mirrors — at the single-chip
+level — the cross-chip split the serving path performs with shard_map psum
+(models/layers.decode_attention), so the same math runs intra-chip on the MXU
+and inter-chip over ICI.
+
+Layout: q [B, H, D]; k,v [B, S, K, D] -> out [B, H, D].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *,
+            scale, split, G, window):
+    si = pl.program_id(1)
+    length = len_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale            # [H, D]
+    kk = k_ref[0].astype(jnp.float32)                   # [split, K, D]
+    K = kk.shape[1]
+    qh = q.reshape(K, G, q.shape[-1])
+    s = jnp.einsum("kgd,skd->kgs", qh, kk,
+                   preferred_element_type=jnp.float32)   # [K, G, split]
+    kpos = si * split + jax.lax.broadcasted_iota(jnp.int32, (K, G, split), 2)
+    valid = kpos < length
+    if window is not None:
+        valid = jnp.logical_and(valid, kpos >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                              # [K, G]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    vv = v_ref[0].astype(jnp.float32)                    # [split, K, D]
+    o = jnp.einsum("kgs,skd->kgd", p, vv)
+    m_ref[0, 0] = m.reshape(K * G)
+    l_ref[0, 0] = l.reshape(K * G)
+    o_ref[0, 0] = o.reshape(K * G, -1)
+
+
+def decode_attention(q, k, v, length, *, n_splits=8, window=None,
+                     interpret=None):
+    """q: [B,H,D]; k,v: [B,S,K,D]; attend to cache positions < length."""
+    B, H, D = q.shape
+    _, S, K, _ = k.shape
+    G = H // K
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_splits = min(n_splits, S)
+    while S % n_splits:
+        n_splits -= 1
+    split = S // n_splits
+    scale = 1.0 / math.sqrt(D)
+    lens = jnp.full((B,), length, jnp.int32)
+
+    m, l, o = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, split=split, G=G,
+                          window=window),
+        grid=(B, n_splits),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+            pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, split, K, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, split, K, D), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, H), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, H, D), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_splits, H, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k, v)
+
+    # renormalizing combine across splits (same algebra as the shard_map psum)
+    m_g = jnp.max(m, axis=1)                              # [B,H]
+    corr = jnp.exp(m - m_g[:, None])
+    l_g = jnp.sum(l * corr, axis=1)
+    o_g = jnp.sum(o * corr[..., None], axis=1)
+    return (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)

@@ -1,0 +1,124 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md §7): q-block x kv-block tiles staged through
+VMEM with MXU-aligned (multiple-of-128) matmul dims, online softmax carried in
+VMEM scratch across the kv grid dimension (the 'arbitrary' innermost axis),
+and blocks entirely above the diagonal / outside the sliding window skipped
+with pl.when — the causal-skip schedule the XLA path approximates with its
+'triangular' python-loop schedule.
+
+Layout: q [B*H, S, D]; k,v [B*K, S, D]; grid (B*H, nq, nk).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, q_block, kv_block, n_kv, causal, window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+    live = k_start <= q_start + q_block - 1 if causal else ki >= 0
+    if window is not None:
+        live = jnp.logical_and(live,
+                               k_start + kv_block - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [qb, D]
+        k = k_ref[0].astype(jnp.float32)                  # [kb, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal or window is not None:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = kpos <= qpos if causal else kpos == kpos
+            if window is not None:
+                mask = jnp.logical_and(mask, qpos - kpos < window)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_block=256,
+                    kv_block=256, interpret=None):
+    """q: [B,H,S,D]; k,v: [B,K,S,D] (H % K == 0). Returns [B,H,S,D].
+
+    D is zero-padded to a multiple of 128 (MXU lane width); softmax scale uses
+    the true D. Scores/accumulators live in f32 VMEM scratch.
+    """
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    while S % q_block:
+        q_block //= 2
+    while S % kv_block:
+        kv_block //= 2
+    Dp = max(128, ((D + 127) // 128) * 128)
+    if Dp != D:
+        pad = [(0, 0), (0, 0), (0, 0), (0, Dp - D)]
+        q, k, v = (jnp.pad(x, pad) for x in (q, k, v))
+    scale = 1.0 / math.sqrt(D)
+    qf = q.reshape(B * H, S, Dp)
+    kf = k.reshape(B * K, S, Dp)
+    vf = v.reshape(B * K, S, Dp)
+    nq, nk = S // q_block, S // kv_block
+
+    def kv_index(i, j, kk):
+        # fused q row b*H + h  ->  fused kv row b*K + h // G
+        return ((i // H) * K + (i % H) // G, kk, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, q_block=q_block,
+                          kv_block=kv_block, n_kv=nk, causal=causal,
+                          window=window),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, Dp), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, kv_block, Dp), kv_index),
+            pl.BlockSpec((1, kv_block, Dp), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, Dp), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, Dp)[..., :D]

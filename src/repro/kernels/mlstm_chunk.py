@@ -1,0 +1,96 @@
+"""Chunked gated-linear-attention Pallas kernel (the mLSTM / SSD hot loop).
+
+One grid row per (batch x head); the chunk axis is the sequential ('arbitrary')
+grid dimension with the [N, P] recurrent state carried in VMEM scratch:
+
+  intra-chunk:  y_i += (q_i k_j^T * exp(cum_i - cum_j))_{j<=i} v_j    (MXU)
+  inter-chunk:  y_i += (q_i * exp(cum_i)) . state                      (MXU)
+  state update: state = exp(total) * state + (k * exp(total - cum))^T v
+
+Matches models/ssm.chunked_gla (the XLA production path) and is tested against
+ref.naive_gla. Log-decays arrive pre-summed per chunk (cumsum done outside —
+cheap VPU work that XLA fuses into the producer).
+
+Layout: q,k [BH, nc, c, N]; v [BH, nc, c, P]; cum [BH, nc, c] (within-chunk
+inclusive cumsum of log decay).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, cum_ref, y_ref, state_scr, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [c, N]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)                  # [c, P]
+    cum = cum_ref[0, 0].astype(jnp.float32)              # [c]
+    total = cum[-1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [c,c]
+    dec = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    w = jnp.where(jj <= ii, jnp.exp(dec), 0.0)
+    y = jax.lax.dot_general(s * w, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    state = state_scr[...]
+    y = y + jax.lax.dot_general(q * jnp.exp(cum)[:, None], state,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    k_scaled = k * jnp.exp(total - cum)[:, None]
+    dstate = jax.lax.dot_general(k_scaled, v, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(total) + dstate
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def gla_chunk(q, k, v, lg, *, chunk=256, interpret=None):
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; lg: [B,S,H] log decays (<=0).
+    Returns y [B,S,H,P] (final state stays device-side in the scan carry of
+    the XLA path; the kernel recomputes it per call)."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nc = S // c
+
+    def to_bh(x, w):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, nc, c, w)
+
+    qf = to_bh(q, N)
+    kf = to_bh(k, N)
+    vf = to_bh(v, P)
+    # within-chunk inclusive cumsum of the log decays
+    cumc = jnp.cumsum(lg.reshape(B, nc, c, H).astype(jnp.float32), axis=2)
+    cumf = jnp.moveaxis(cumc, 3, 1).reshape(B * H, nc, c)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=c),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, P), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, nc, c, P), v.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, cumf)
+    return jnp.moveaxis(y.reshape(B * H, S, P).reshape(B, H, S, P), 1, 2)

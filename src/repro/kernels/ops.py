@@ -1,0 +1,48 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, XLA reference path on CPU
+(interpret=True is available everywhere for validation, but is far too slow
+for production shapes on CPU — the dispatchers below pick the fast legal path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.mlstm_chunk import gla_chunk as _gla_kernel
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "force"))
+def flash_attention(q, k, v, *, causal=True, window=None, force=None):
+    """q: [B,H,S,D]; k,v: [B,K,S,D]. force: None(auto)|'kernel'|'ref'."""
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        return _flash_kernel(q, k, v, causal=causal, window=window)
+    return ref.naive_attention(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("window", "n_splits", "force"))
+def decode_attention(q, k, v, length, *, window=None, n_splits=8, force=None):
+    """q: [B,H,D]; k,v: [B,S,K,D]."""
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        return _decode_kernel(q, k, v, length, n_splits=n_splits, window=window)
+    return ref.naive_decode_attention(
+        q, jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2), length, window=window)
+
+
+@partial(jax.jit, static_argnames=("chunk", "force"))
+def gla(q, k, v, lg, *, chunk=256, force=None):
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; lg: [B,S,H]."""
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        return _gla_kernel(q, k, v, lg, chunk=chunk)
+    y, _ = ref.naive_gla(q, k, v, lg)
+    return y

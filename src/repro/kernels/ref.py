@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel. Deliberately naive (full
+materialization, step-by-step recurrences) — these are the ground truth the
+kernels and the XLA production paths are both tested against."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_attention(q, k, v, *, causal=True, window=None):
+    """q: [B,H,S,D]; k,v: [B,K,S,D] with H % K == 0. Returns [B,H,S,D]."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def naive_decode_attention(q, k, v, length, *, window=None):
+    """q: [B,H,D]; k,v: [B,K,S,D]; attend to positions < length."""
+    B, H, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(D)
+    kpos = jnp.arange(k.shape[2])
+    valid = kpos < length
+    if window is not None:
+        valid &= kpos >= length - window
+    s = jnp.where(valid[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def naive_gla(q, k, v, lg):
+    """Step-by-step gated linear recurrence.
+    q,k: [B,S,H,N]; v: [B,S,H,P]; lg: [B,S,H]. h_t = exp(lg_t) h + k v^T."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    ys = []
+    for t in range(S):
+        h = h * jnp.exp(lg[:, t].astype(jnp.float32))[..., None, None]
+        h = h + jnp.einsum("bhn,bhp->bhnp", k[:, t].astype(jnp.float32),
+                           v[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhn,bhnp->bhp", q[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1).astype(v.dtype), h
+
+
+def naive_mlstm(q, k, v, ig, fg):
+    """Step-by-step stabilized mLSTM (oracle for models/ssm.chunked_mlstm)."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    C = jnp.zeros((B, H, N, P), jnp.float32)
+    n = jnp.zeros((B, H, N), jnp.float32)
+    m = jnp.full((B, H), -1e30, jnp.float32)
+    scale = 1.0 / math.sqrt(N)
+    ys = []
+    for t in range(S):
+        lf = jax.nn.log_sigmoid(fg[:, t].astype(jnp.float32))
+        li = ig[:, t].astype(jnp.float32)
+        m_new = jnp.maximum(lf + m, li)
+        fs = jnp.exp(lf + m - m_new)
+        is_ = jnp.exp(li - m_new)
+        kt = k[:, t].astype(jnp.float32) * is_[..., None]
+        C = fs[..., None, None] * C + jnp.einsum(
+            "bhn,bhp->bhnp", kt, v[:, t].astype(jnp.float32))
+        n = fs[..., None] * n + kt
+        qt = q[:, t].astype(jnp.float32) * scale
+        num = jnp.einsum("bhn,bhnp->bhp", qt, C)
+        den = jnp.einsum("bhn,bhn->bh", qt, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        ys.append(h)
+        m = m_new
+    return jnp.stack(ys, axis=1).astype(v.dtype), (C, n, m)

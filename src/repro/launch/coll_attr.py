@@ -1,0 +1,108 @@
+"""Attribute per-device collective traffic to source ops (HLO metadata
+op_name), with while-trip multipliers — the profiling tool behind the §Perf
+hypothesis loop (no real TPU, so the lowered IR is the profile)."""
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse       # noqa: E402
+import re             # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax            # noqa: E402
+
+from repro.launch import hlo_analysis as H  # noqa: E402
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def attribute(hlo_text, top=25):
+    comps = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        m = H._COMP_RE.match(raw.rstrip())
+        if m and not raw.lstrip().startswith("%param"):
+            cur = m.group(1)
+            comps[cur] = {"coll": [], "edges": []}
+            if raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        line = raw.rstrip()
+        if " while(" in line:
+            w = H._WHILE_RE.search(line)
+            if w:
+                cond, body = w.groups()
+                t = H._TRIP_RE.search(line)
+                trips = int(t.group(1)) if t else 1
+                comps[cur]["edges"].append((body, trips))
+            continue
+        for op in H._COLL_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                if f" {op}-done(" in line:
+                    continue
+                nbytes = H._line_bytes(line, op)
+                n = H._group_size(line)
+                if n > 1 and nbytes > 0:
+                    meta = _META_RE.search(line)
+                    name = meta.group(1) if meta else "?"
+                    comps[cur]["coll"].append(
+                        (op, H._moved_bytes(op, nbytes, n), name))
+                break
+        c = H._CALL_RE.search(line)
+        if c and " while(" not in line:
+            comps[cur]["edges"].append((c.group(1), 1))
+
+    mult = defaultdict(float)
+    stack = [(entry, 1.0)]
+    budget = 0
+    while stack and budget < 200000:
+        budget += 1
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m
+        for child, trips in comps[name]["edges"]:
+            stack.append((child, m * trips))
+
+    per_src = defaultdict(float)
+    for name, info in comps.items():
+        m = mult.get(name, 0.0)
+        for op, moved, src in info["coll"]:
+            per_src[(op, src)] += m * moved
+    rows = sorted(per_src.items(), key=lambda kv: -kv[1])[:top]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--attn-schedule", default=None)
+    ap.add_argument("--rules-patch", default=None)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    import json
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    fn, cargs, shardings, donate, cfg, ctx = build_cell(
+        args.arch, args.shape, mesh, attn_schedule=args.attn_schedule,
+        rules_patch=json.loads(args.rules_patch) if args.rules_patch else None)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=shardings,
+                           donate_argnums=donate).lower(*cargs).compile()
+    rows = attribute(compiled.as_text(), top=args.top)
+    total = sum(v for _, v in rows)
+    print(f"{'bytes/dev':>14}  {'op':<20} source")
+    for (op, src), v in rows:
+        print(f"{v:>14.3e}  {op:<20} {src[:120]}")
+    print(f"(top-{args.top} total {total:.3e} B/dev)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax-importing module: jax locks the
+# device count at first init. 512 CPU host devices back the production meshes
+# (16x16 single-pod, 2x16x16 multi-pod) for lower+compile only — no allocation.
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, cells, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.models import Model                       # noqa: E402
+from repro.optim import constant, make_optimizer     # noqa: E402
+from repro.sharding import ShardingCtx, long_context_rules, rules_for  # noqa: E402
+from repro import steps as ST                        # noqa: E402
+from repro.flops import count_fn_flops               # noqa: E402
+from repro.launch.hlo_analysis import analyze_collectives  # noqa: E402
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "serialized_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def build_cell(arch, shape_name, mesh, *, attn_schedule=None, rules_patch=None,
+               moe_group_size=None):
+    """Returns (fn, args, in_shardings, donate) ready for jit/lower."""
+    from dataclasses import replace
+    cfg = get_config(arch)
+    if attn_schedule:
+        cfg = replace(cfg, attn_schedule=attn_schedule)
+    if moe_group_size and cfg.moe is not None:
+        cfg = replace(cfg, moe=replace(cfg.moe, group_size=moe_group_size))
+    shape = SHAPES[shape_name]
+    mode = "train" if shape.kind == "train" else \
+        ("prefill" if shape.kind == "prefill" else "decode")
+    rules = rules_for(cfg, mode)
+    if shape.kind == "decode" and shape.global_batch == 1:
+        rules = long_context_rules(rules)
+    if rules_patch:
+        rules.update(rules_patch)
+    ctx = ShardingCtx(mesh, rules)
+    model = Model(cfg)
+    mspecs = model.specs()
+    pdt = jnp.dtype(cfg.param_dtype)
+    params_abs = ST.specs_to_abstract(mspecs, pdt)
+    params_sh = ST.specs_to_shardings(ctx, mspecs)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg, constant(3e-4))
+        ospecs = ST.opt_state_specs(cfg, mspecs, opt.name)
+        opt_abs = ST.specs_to_abstract(ospecs, jnp.dtype(cfg.opt_state_dtype))
+        opt_sh = ST.specs_to_shardings(ctx, ospecs)
+        batch = ST.batch_specs(cfg, shape, with_targets=True)
+        batch_sh = ST.batch_shardings(ctx, batch)
+        fn = ST.make_train_step(model, ctx, opt)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        return (fn, (params_abs, opt_abs, batch, step_abs),
+                (params_sh, opt_sh, batch_sh, None), (0, 1), cfg, ctx)
+
+    if shape.kind == "prefill":
+        batch = ST.batch_specs(cfg, shape, with_targets=False)
+        batch_sh = ST.batch_shardings(ctx, batch)
+        fn = ST.make_prefill_step(model, ctx)
+        return fn, (params_abs, batch), (params_sh, batch_sh), (), cfg, ctx
+
+    # decode
+    caches = cache_specs(cfg, ctx, shape.global_batch, shape.seq_len)
+    caches_sh = ST.cache_shardings(ctx, caches, shape.global_batch, shape.seq_len)
+    B = shape.global_batch
+    tok = jax.ShapeDtypeStruct(
+        (B, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B,), jnp.int32)
+    b = ctx.batch_axes()
+    tok_sh = None
+    if ctx.mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tok_sh = NamedSharding(ctx.mesh, P(*([b] + [None] * (tok.ndim - 1))))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = ST.make_decode_step(model, ctx)
+    return (fn, (params_abs, tok, pos, caches),
+            (params_sh, tok_sh, None, caches_sh), (3,), cfg, ctx)
+
+
+def cache_specs(cfg, ctx, batch_size, max_len):
+    """Decode-cache ShapeDtypeStructs at max_len without tracing a huge prefill:
+    eval_shape a short prefill, then rewrite its seq dims to max_len."""
+    probe = min(max_len, 6144)
+    model = Model(cfg)
+    tok = jax.ShapeDtypeStruct(
+        (batch_size, cfg.n_codebooks, probe) if cfg.n_codebooks > 1
+        else (batch_size, probe), jnp.int32)
+    batch = {"tokens": tok}
+    if cfg.img_tokens:
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.img_tokens, 1024), jnp.bfloat16)
+    from repro.sharding import ShardingCtx as SC
+    noctx = SC(None, ctx.rules)
+    _, caches = jax.eval_shape(lambda p, b: model.prefill(noctx, p, b),
+                               model.abstract(), batch)
+
+    def grow(x):
+        if probe == max_len:
+            return x
+        shape = tuple(max_len if d == probe else d for d in x.shape)
+        return jax.ShapeDtypeStruct(shape, x.dtype)
+
+    return jax.tree.map(grow, caches)
+
+
+def run_cell(arch, shape_name, multi_pod, *, attn_schedule=None,
+             rules_patch=None, tag="", moe_group_size=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, shardings, donate, cfg, ctx = build_cell(
+        arch, shape_name, mesh, attn_schedule=attn_schedule,
+        rules_patch=rules_patch, moe_group_size=moe_group_size)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    coll, coll_n, coll_dynamic = analyze_collectives(hlo)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        fl = count_fn_flops(fn, *args)
+    t_flops = time.time() - t0
+    shape = SHAPES[shape_name]
+    n_chips = mesh.devices.size
+    art = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "kind": shape.kind,
+        "tag": tag or "baseline",
+        "attn_schedule": attn_schedule or cfg.attn_schedule,
+        "flops_global_mxu": float(fl["mxu"]),
+        "flops_global_vpu": float(fl["vpu"]),
+        "xla_flops_per_device_once": float(cost.get("flops", -1.0)),
+        "xla_bytes_per_device_once": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes_per_device": coll,
+        "collective_counts": coll_n,
+        "collective_has_dynamic_trip": coll_dynamic,
+        "flops_trace_s": round(t_flops, 2),
+        "memory_analysis": _mem_dict(compiled),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1),
+        "global_batch": shape.global_batch,
+        "seq_len": shape.seq_len,
+    }
+    return art
+
+
+def art_path(arch, shape_name, multi_pod, tag=""):
+    mesh = "multipod" if multi_pod else "pod"
+    t = f".{tag}" if tag else ""
+    return ART_DIR / f"{arch}.{shape_name}.{mesh}{t}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile "
+                                 "every (arch x shape x mesh), record roofline inputs")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--attn-schedule", default=None)
+    ap.add_argument("--rules-patch", default=None,
+                    help="JSON dict of sharding-rule overrides")
+    ap.add_argument("--moe-group-size", type=int, default=None)
+    args = ap.parse_args()
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    todo = cells()
+    if args.arch:
+        todo = [c for c in todo if c[0] == args.arch]
+    if args.shape:
+        todo = [c for c in todo if c[1] == args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    rules_patch = json.loads(args.rules_patch) if args.rules_patch else None
+
+    failures = []
+    for arch, shape_name in todo:
+        for mp in meshes:
+            path = art_path(arch, shape_name, mp, args.tag)
+            if path.exists() and not args.force:
+                print(f"skip {path.name} (exists)")
+                continue
+            label = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+            print(f"=== {label} ...", flush=True)
+            try:
+                art = run_cell(arch, shape_name, mp, tag=args.tag,
+                               attn_schedule=args.attn_schedule,
+                               rules_patch=rules_patch,
+                               moe_group_size=args.moe_group_size)
+                path.write_text(json.dumps(art, indent=1))
+                print(f"    OK mxu={art['flops_global_mxu']:.3e} "
+                      f"coll={sum(art['collective_bytes_per_device'].values()):.3e}B "
+                      f"compile={art['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((label, repr(e)))
+                print(f"    FAIL {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for l, e in failures:
+            print(f"  {l}: {e[:200]}")
+        raise SystemExit(1)
+    print("\nall dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

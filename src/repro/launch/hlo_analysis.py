@@ -1,0 +1,145 @@
+"""Post-SPMD HLO analysis: per-device collective traffic with while-loop
+trip-count multipliers.
+
+``compiled.as_text()`` lists every computation; ``while`` instructions carry
+``backend_config={"known_trip_count":{"n":"N"}}`` and name their body/cond
+computations. We total collective bytes per computation, then propagate
+multipliers entry->body (x trip count) so collectives inside the layer scan are
+counted once per layer, not once per program.
+
+Traffic model (ring algorithms), bytes moved per participating device:
+  all-reduce       2 * size * (n-1)/n
+  all-gather       size * (n-1)/n        (size = full gathered result)
+  reduce-scatter   shard_size * (n-1)
+  all-to-all       size * (n-1)/n
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%([\w.\-]+), body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|true_computation|false_computation|"
+                      r"branch_computations)=\{?%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _line_bytes(line, op):
+    """Sum of result-shape bytes on the lhs of the instruction."""
+    lhs = line.split(f" {op}", 1)[0]
+    if "=" in lhs:
+        lhs = lhs.split("=", 1)[1]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line):
+    g = _GROUPS_RE.search(line)
+    if g:
+        return len(g.group(1).split(","))
+    gi = _GROUPS_IOTA_RE.search(line)
+    if gi:
+        return int(gi.group(2))
+    return 2
+
+
+def _moved_bytes(op, nbytes, n):
+    frac = (n - 1) / n
+    if op == "all-reduce":
+        return 2 * nbytes * frac
+    if op == "all-gather":
+        return nbytes * frac
+    if op == "reduce-scatter":
+        return nbytes * (n - 1)
+    if op == "all-to-all":
+        return nbytes * frac
+    return nbytes  # collective-permute
+
+
+def analyze_collectives(hlo_text):
+    """Returns (per_op_bytes, per_op_counts, dynamic_while_flag)."""
+    comps = {}          # name -> {"coll": [(op, moved)], "edges": [(child, mult)]}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m and not line.lstrip().startswith("%param"):
+            cur = m.group(1)
+            comps[cur] = {"coll": [], "edges": []}
+            if raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if " while(" in line:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.groups()
+                t = _TRIP_RE.search(line)
+                trips = int(t.group(1)) if t else 1
+                comps[cur]["edges"].append((body, trips, t is None))
+                comps[cur]["edges"].append((cond, trips + 1, False))
+            continue
+        for op in _COLL_OPS:
+            token = f" {op}("
+            token_start = f" {op}-start("
+            if token in line or token_start in line:
+                # skip matching '-done' twin ops (bytes counted at start)
+                if f" {op}-done(" in line:
+                    continue
+                nbytes = _line_bytes(line, op)
+                n = _group_size(line)
+                if n > 1 and nbytes > 0:
+                    comps[cur]["coll"].append((op, _moved_bytes(op, nbytes, n)))
+                break
+        c = _CALL_RE.search(line)
+        if c and " while(" not in line:
+            comps[cur]["edges"].append((c.group(1), 1, False))
+
+    # propagate multipliers from the entry computation
+    mult = defaultdict(float)
+    dynamic = False
+    if entry is None:
+        entry = next(iter(comps), None)
+    stack = [(entry, 1.0)]
+    seen_budget = 0
+    while stack and seen_budget < 200000:
+        seen_budget += 1
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m
+        for child, trips, dyn in comps[name]["edges"]:
+            if dyn:
+                dynamic = True
+            stack.append((child, m * trips))
+
+    per_op = defaultdict(float)
+    counts = defaultdict(float)
+    for name, info in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for op, moved in info["coll"]:
+            per_op[op] += m * moved
+            counts[op] += m
+    return dict(per_op), {k: int(v) for k, v in counts.items()}, dynamic

@@ -1,0 +1,196 @@
+"""End-to-end training driver with MANA transparent checkpoint-restart.
+
+Every run is a Cluster of logical ranks (threads in-container, processes on a
+real pod). The training step itself is a jit'd SPMD program over the mesh; the
+MANA layer wraps everything around it: virtual-id-tracked communicators,
+drained prefetch requests, per-rank checkpoint images, failure detection and
+elastic restart (different world size / backend / mesh on resume).
+
+CLI:
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
+      --steps 200 --ckpt-every 50 --kill-rank-at 120 --backend craympi
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import steps as ST
+from repro.configs import get_config, smoke_config
+from repro.core import Cluster
+from repro.core.restart import load_arrays, load_manifest, load_rank_state
+from repro.data import DataPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.optim import make_optimizer, wsd
+from repro.sharding import ShardingCtx, rules_for
+
+
+class Trainer:
+    def __init__(self, cfg, *, batch_size=8, seq_len=64, world_size=2,
+                 backend="mpich", ckpt_dir=None, translation="fast",
+                 lr=3e-3, total_steps=1000, seed=0, mesh=None):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.mesh = mesh if mesh is not None else (
+            make_host_mesh() if len(jax.devices()) > 1 else None)
+        self.ctx = ShardingCtx(self.mesh, rules_for(cfg, "train"))
+        self.model = Model(cfg)
+        self.optimizer = make_optimizer(cfg, wsd(lr, max(total_steps // 20, 1),
+                                                 total_steps))
+        self.cluster = Cluster(world_size, backend, translation=translation,
+                               ckpt_dir=ckpt_dir)
+        self.pipeline = DataPipeline(cfg, batch_size, seq_len,
+                                     seed=seed + 1, mana=self.cluster.mana(0))
+        self._build_step()
+        self.seed = seed
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self.history = []
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        mspecs = self.model.specs()
+        self.param_sh = ST.specs_to_shardings(self.ctx, mspecs)
+        ospecs = ST.opt_state_specs(self.cfg, mspecs, self.optimizer.name)
+        self.opt_sh = ST.specs_to_shardings(self.ctx, ospecs)
+        fn = ST.make_train_step(self.model, self.ctx, self.optimizer)
+        self.train_step = jax.jit(
+            fn, in_shardings=(self.param_sh, self.opt_sh, None, None),
+            donate_argnums=(0, 1)) if self.mesh is not None else jax.jit(
+            fn, donate_argnums=(0, 1))
+
+    def init_state(self):
+        self.params = self.model.init(jax.random.key(self.seed))
+        if self.mesh is not None:
+            self.params = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                self.params, self.param_sh)
+        self.opt_state = self.optimizer.init(self.params)
+        self.step = 0
+
+    def _device_batch(self, batch):
+        if self.mesh is None:
+            return jax.tree.map(jnp.asarray, batch)
+        sh = ST.batch_shardings(self.ctx, batch)
+        return jax.tree.map(lambda x, s: jax.device_put(x, s), batch, sh)
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps, *, ckpt_every=0, kill_rank_at=None,
+            new_world_size_on_restart=None, new_backend_on_restart=None,
+            log_every=25):
+        t0 = time.time()
+        target = self.step + n_steps
+        while self.step < target:
+            if kill_rank_at is not None and self.step == kill_rank_at:
+                kill_rank_at = None
+                self._fail_and_recover(new_world_size_on_restart,
+                                       new_backend_on_restart)
+                continue
+            batch = self._device_batch(self.pipeline.next())
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch, jnp.int32(self.step))
+            self.step += 1
+            for r in range(len(self.cluster.ranks)):
+                self.cluster.heartbeat(r)
+            if ckpt_every and self.step % ckpt_every == 0:
+                self.checkpoint()
+            if self.step % log_every == 0 or self.step == target:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["tokens_per_s"] = (self.batch_size * self.seq_len *
+                                     log_every / max(time.time() - t0, 1e-9))
+                t0 = time.time()
+                m["step"] = self.step
+                self.history.append(m)
+                print(f"step {self.step:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} tok/s {m['tokens_per_s']:.0f}",
+                      flush=True)
+        return self.history
+
+    # ------------------------------------------------------------------
+    def checkpoint(self):
+        arrays = {"params": self.params, "opt": self.opt_state}
+        pipe_state = self.pipeline.state()
+
+        def extra(rank):
+            return {"pipeline": pipe_state, "train_step": self.step,
+                    "seed": self.seed}
+
+        req = self.cluster.checkpoint(self.step, arrays, self.mesh,
+                                      extra_rank_state=extra)
+        return req
+
+    def _fail_and_recover(self, new_world_size=None, new_backend=None):
+        """Injected node failure -> detect -> elastic restart from latest ckpt."""
+        victim = len(self.cluster.ranks) - 1
+        print(f"!! injecting failure of rank {victim}", flush=True)
+        self.cluster.kill_rank(victim)
+        self.cluster.writer.wait_idle()
+        ck = self.cluster.writer.latest()
+        if ck is None:
+            raise RuntimeError("failure before first checkpoint — cold restart")
+        self.restore(ck, new_world_size=new_world_size, new_backend=new_backend)
+        print(f"!! recovered from {ck.name} at step {self.step} "
+              f"(world={len(self.cluster.ranks)}, backend="
+              f"{self.cluster.backend_name})", flush=True)
+
+    def restore(self, ckpt_dir, *, new_world_size=None, new_backend=None):
+        manifest = load_manifest(ckpt_dir)
+        self.pipeline.stop()
+        self.cluster = self.cluster.restart(ckpt_dir,
+                                            new_world_size=new_world_size,
+                                            new_backend=new_backend)
+        shardings = {"params": self.param_sh, "opt": self.opt_sh}
+        arrays = load_arrays(ckpt_dir, shardings)
+        self.params, self.opt_state = arrays["params"], arrays["opt"]
+        rs = load_rank_state(ckpt_dir, 0)
+        self.step = rs["train_step"]
+        self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],
+                                            mana=self.cluster.mana(0))
+        return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--world-size", type=int, default=2)
+    ap.add_argument("--backend", default="mpich",
+                    choices=["mpich", "craympi", "openmpi", "exampi"])
+    ap.add_argument("--translation", default="fast", choices=["fast", "slow"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--kill-rank-at", type=int, default=None)
+    ap.add_argument("--restart-backend", default=None)
+    ap.add_argument("--restart-world-size", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tr = Trainer(cfg, batch_size=args.batch_size, seq_len=args.seq_len,
+                 world_size=args.world_size, backend=args.backend,
+                 translation=args.translation, ckpt_dir=args.ckpt_dir,
+                 lr=args.lr, total_steps=args.steps)
+    tr.init_state()
+    tr.run(args.steps, ckpt_every=args.ckpt_every,
+           kill_rank_at=args.kill_rank_at,
+           new_world_size_on_restart=args.restart_world_size,
+           new_backend_on_restart=args.restart_backend)
+    tr.pipeline.stop()
+    first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
+    print(f"done: loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

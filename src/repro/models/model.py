@@ -1,0 +1,72 @@
+"""Model facade: build once from a ModelConfig, expose train/prefill/decode."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.params import abstract_params, init_params
+from repro.models.layers import rmsnorm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: object
+
+    def specs(self):
+        return T.model_specs(self.cfg)
+
+    def init(self, key):
+        return init_params(self.specs(), key, jnp.dtype(self.cfg.param_dtype))
+
+    def abstract(self):
+        return abstract_params(self.specs(), jnp.dtype(self.cfg.param_dtype))
+
+    # ------------------------------------------------------------------
+    def train_logits(self, ctx, params, batch):
+        """batch: tokens [B,S] (or [B,K,S]); optional patch_embeds. -> (logits, aux)."""
+        cfg = self.cfg
+        h = T.embed_tokens(ctx, cfg, params, batch["tokens"],
+                           batch.get("patch_embeds"))
+        h, _, aux = T.run_segments(ctx, cfg, params, h, mode="train")
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = T.lm_head(ctx, cfg, params, h)
+        return logits, aux
+
+    def prefill(self, ctx, params, batch):
+        """-> (last-position logits [B, K*Vp], caches)."""
+        cfg = self.cfg
+        h = T.embed_tokens(ctx, cfg, params, batch["tokens"],
+                           batch.get("patch_embeds"))
+        h, caches, _ = T.run_segments(ctx, cfg, params, h, mode="prefill")
+        h_last = rmsnorm(h[:, -1], params["final_norm"], cfg.norm_eps)
+        logits = T.lm_head(ctx, cfg, params, h_last)
+        return logits, caches
+
+    def decode_step(self, ctx, params, token, pos, caches):
+        """token: [B] (or [B,K]); pos: scalar int32. -> (logits, new caches)."""
+        cfg = self.cfg
+        h = T.embed_tokens(ctx, cfg, params, token)
+        h, caches, _ = T.run_segments(ctx, cfg, params, h, mode="decode",
+                                      caches=caches, pos=pos)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = T.lm_head(ctx, cfg, params, h)
+        return logits, caches
+
+    # ------------------------------------------------------------------
+    def cache_abstract(self, ctx, batch_size, max_len):
+        """ShapeDtypeStructs of the decode cache (= prefill output at max_len),
+        without allocating anything."""
+        cfg = self.cfg
+        tokens = jax.ShapeDtypeStruct(
+            (batch_size, cfg.n_codebooks, max_len) if cfg.n_codebooks > 1
+            else (batch_size, max_len), jnp.int32)
+        batch = {"tokens": tokens}
+        if cfg.img_tokens:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.img_tokens, T.VISION_DIM), jnp.bfloat16)
+        _, caches = jax.eval_shape(
+            lambda p, b: self.prefill(ctx, p, b), self.abstract(), batch)
+        return caches

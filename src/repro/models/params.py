@@ -1,0 +1,60 @@
+"""Parameter specs: shapes + logical sharding axes, declared once, used for
+init (smoke tests / real training), eval_shape (dry-run), and sharding rules."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis names, same length as shape (None entries ok)
+    init: str = "normal"   # normal | zeros | ones | embed
+    scale: float = 0.0     # 0 -> 1/sqrt(fan_in)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_spec(spec_tree, n: int):
+    """Add a leading scanned-layers axis to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), s.init, s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+def _init_one(key, spec: ParamSpec, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02).astype(dtype)
+    scale = spec.scale
+    if not scale:
+        # fan-in = product of all dims except the last, ignoring a leading layers axis
+        dims = [d for d, a in zip(spec.shape, spec.axes) if a != "layers"]
+        fan_in = int(np.prod(dims[:-1])) if len(dims) > 1 else dims[0]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(spec_tree, key, dtype):
+    """Deterministic init: every leaf keyed by fold_in of its flattened index."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    outs = [_init_one(jax.random.fold_in(key, i), s, dtype) for i, s in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, outs)
+
+
+def abstract_params(spec_tree, dtype):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        spec_tree, is_leaf=is_spec)
+
+
+def spec_axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)

@@ -1,0 +1,207 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunked-parallel,
+stabilized exp gating) and sLSTM (scalar memory, sequential recurrence with
+block-diagonal recurrent weights). xlstm-350m interleaves them 1:1."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (causal_conv1d, causal_conv1d_step, rms_groupnorm,
+                                 rmsnorm)
+from repro.models.params import ParamSpec
+from repro.models.ssm import chunked_mlstm, mlstm_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(d * x.m_proj_factor)
+    H = x.n_heads
+    return {
+        "w_up": ParamSpec((d, 2 * di), ("embed", "inner")),
+        "conv": ParamSpec((x.d_conv, di), ("conv", "inner"), scale=0.5),
+        "wq": ParamSpec((di, di), ("inner_in", "inner")),
+        "wk": ParamSpec((di, di), ("inner_in", "inner")),
+        "wv": ParamSpec((di, di), ("inner_in", "inner")),
+        "w_ig": ParamSpec((di, H), ("inner", None), scale=0.01),
+        "b_ig": ParamSpec((H,), (None,), init="zeros"),
+        "w_fg": ParamSpec((di, H), ("inner", None), scale=0.01),
+        "b_fg": ParamSpec((H,), (None,), init="ones"),  # bias>0: remember by default
+        "norm": ParamSpec((di,), ("inner",), init="ones"),
+        "w_down": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def mlstm_apply(ctx, cfg, p, x, *, mode, cache=None):
+    """cache: {'C': [B,H,N,P], 'n': [B,H,N], 'm': [B,H], 'conv': [B,W-1,di]}."""
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = int(d * xc.m_proj_factor)
+    H = xc.n_heads
+    N = di // H
+
+    if mode in ("train", "prefill"):
+        B, S, _ = x.shape
+        up = x @ p["w_up"]
+        x_in, z = up[..., :di], up[..., di:]
+        x_conv = jax.nn.silu(causal_conv1d(x_in, p["conv"]))
+        q = (x_conv @ p["wq"]).reshape(B, S, H, N)
+        k = (x_conv @ p["wk"]).reshape(B, S, H, N)
+        v = (x_in @ p["wv"]).reshape(B, S, H, N)
+        ig = x_conv @ p["w_ig"] + p["b_ig"]
+        fg = x_conv @ p["w_fg"] + p["b_fg"]
+        h, state = chunked_mlstm(q, k, v, ig, fg, chunk=xc.chunk)
+        h = rms_groupnorm(h.reshape(B, S, di), p["norm"], H)
+        out = (h * jax.nn.silu(z)) @ p["w_down"]
+        new_cache = None
+        if mode == "prefill":
+            C, n, m = state
+            new_cache = {"C": C, "n": n, "m": m,
+                         "conv": x_in[:, S - (xc.d_conv - 1):]}
+        return out, new_cache
+
+    B, _ = x.shape
+    up = x @ p["w_up"]
+    x_in, z = up[..., :di], up[..., di:]
+    x_conv, conv_state = causal_conv1d_step(x_in, cache["conv"], p["conv"])
+    x_conv = jax.nn.silu(x_conv)
+    q = (x_conv @ p["wq"]).reshape(B, H, N)
+    k = (x_conv @ p["wk"]).reshape(B, H, N)
+    v = (x_in @ p["wv"]).reshape(B, H, N)
+    ig = x_conv @ p["w_ig"] + p["b_ig"]
+    fg = x_conv @ p["w_fg"] + p["b_fg"]
+    h, (C, n, m) = mlstm_step(q, k, v, ig, fg, (cache["C"], cache["n"], cache["m"]))
+    h = rms_groupnorm(h.reshape(B, di), p["norm"], H)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def _slstm_ff(cfg):
+    """sLSTM FFN width, padded to 128 so TP shardings stay divisible."""
+    ff = int(cfg.d_model * cfg.xlstm.s_ff_factor)
+    return max(128, ((ff + 127) // 128) * 128)
+
+
+def slstm_specs(cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    H = x.n_heads
+    dh = d // H
+    ff = _slstm_ff(cfg)
+    return {
+        "conv": ParamSpec((x.d_conv, d), ("conv", "embed"), scale=0.5),
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "inner")),
+        "r_gates": ParamSpec((H, dh, 4 * dh), (None, "inner_in", "inner"), scale=0.02),
+        "b_gates": ParamSpec((4 * d,), ("inner",), init="zeros"),
+        "norm": ParamSpec((d,), ("embed",), init="ones"),
+        "ff_w1": ParamSpec((d, ff), ("embed", "mlp")),
+        "ff_wg": ParamSpec((d, ff), ("embed", "mlp")),
+        "ff_w2": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(gates, state, H, dh):
+    """gates: [B,4d], head-major blocks [H,4,dh]. Stabilized exp gating."""
+    B = gates.shape[0]
+    g = gates.reshape(B, H, 4, dh)
+    i_raw, f_raw, z_raw, o_raw = (g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3])
+    c, n, m, h = state
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    li = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    is_ = jnp.exp(li - m_new)
+    z = jnp.tanh(z_raw.astype(jnp.float32))
+    o = jax.nn.sigmoid(o_raw.astype(jnp.float32))
+    c_new = fs * c + is_ * z
+    n_new = fs * n + is_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(ctx, cfg, p, x, *, mode, cache=None):
+    """cache: {'c','n','m','h': [B,H,dh], 'conv': [B,W-1,d]}."""
+    xc = cfg.xlstm
+    d = cfg.d_model
+    H = xc.n_heads
+    dh = d // H
+
+    def rec_gates(h_prev, dtype):
+        # head-major [H,4,dh] gate layout throughout: matches w_gates' block
+        # layout with NO per-step transpose (a transpose here forces a
+        # resharding collective on every timestep under TP)
+        rh = jnp.einsum("bhj,hjg->bhg", h_prev.astype(dtype), p["r_gates"])
+        B = h_prev.shape[0]
+        return rh.reshape(B, 4 * d)
+
+    def run_scan(xs, r):
+        """The sequential recurrence over [S,B,4d] gate pre-activations. Runs
+        as LOCAL per-shard compute under shard_map: no collectives inside the
+        4096-step loop, and the recurrent-weight gradient is psum'd ONCE at
+        the shard_map boundary — per-timestep grad reductions / reshardings
+        are ruinous (EXPERIMENTS.md §Perf, xlstm iterations 2-3)."""
+        Bl = xs.shape[1]
+
+        def body(state, wx):
+            rh = jnp.einsum("bhj,hjg->bhg", state[3].astype(wx.dtype), r)
+            gates = wx + rh.reshape(Bl, 4 * d)
+            new = _slstm_cell(gates, state, H, dh)
+            return new, new[3]
+
+        z0 = jnp.zeros((Bl, H, dh), jnp.float32)
+        state0 = (z0, z0 + 1e-6, jnp.full((Bl, H, dh), -1e30, jnp.float32), z0)
+        return jax.lax.scan(body, state0, xs)
+
+    if mode in ("train", "prefill"):
+        B, S, _ = x.shape
+        # the recurrence keeps a data-only batch sharding even when the rest
+        # of the block runs ZeRO-3 batch-over-all
+        x = ctx.act(x, "act_rnn_batch", None, None)
+        x_conv = jax.nn.silu(causal_conv1d(x, p["conv"]))
+        wx_all = x_conv @ p["w_gates"] + p["b_gates"]        # hoisted input proj
+        xs = jnp.moveaxis(wx_all, 1, 0)                      # [S,B,4d]
+
+        baxes = None
+        if ctx.mesh is not None:
+            from repro.sharding import _filter
+            baxes = _filter(ctx.rules.get("act_rnn_batch"), ctx.mesh_axes)
+        if baxes:
+            from jax.sharding import PartitionSpec as P
+            st_spec = (P(baxes, None, None),) * 4
+            state, hs = jax.shard_map(
+                run_scan, mesh=ctx.mesh,
+                in_specs=(P(None, baxes, None), P(None, None, None)),
+                out_specs=(st_spec, P(None, baxes, None)),
+                check_vma=False)(xs, p["r_gates"])
+        else:
+            state, hs = run_scan(xs, p["r_gates"])
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+        h = rms_groupnorm(h, p["norm"], H)
+        h = h + x  # residual inside block (post-recurrence)
+        h = ctx.act(h, "act_batch", None, None)
+        y = (jax.nn.silu(h @ p["ff_wg"]) * (h @ p["ff_w1"])) @ p["ff_w2"]
+        new_cache = None
+        if mode == "prefill":
+            c, n, m, hh = state
+            new_cache = {"c": c, "n": n, "m": m, "h": hh,
+                         "conv": x[:, S - (xc.d_conv - 1):]}
+        return y, new_cache
+
+    B, _ = x.shape
+    x_conv, conv_state = causal_conv1d_step(x, cache["conv"], p["conv"])
+    x_conv = jax.nn.silu(x_conv)
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    gates = x_conv @ p["w_gates"] + p["b_gates"] + rec_gates(state[3], x.dtype)
+    c, n, m, hh = _slstm_cell(gates, state, H, dh)
+    h = rms_groupnorm(hh.reshape(B, d).astype(x.dtype), p["norm"], H)
+    h = h + x
+    y = (jax.nn.silu(h @ p["ff_wg"]) * (h @ p["ff_w1"])) @ p["ff_w2"]
+    return y, {"c": c, "n": n, "m": m, "h": hh, "conv": conv_state}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import adafactor, adamw, make_optimizer
+from repro.optim.schedules import constant, cosine, wsd
+
+__all__ = ["adamw", "adafactor", "make_optimizer", "wsd", "cosine", "constant"]

@@ -1,0 +1,117 @@
+"""Sharding-friendly optimizers (states inherit param shardings).
+
+AdamW for the standard archs; Adafactor (factored second moment, no first
+moment) for arctic-480b where full Adam state would not fit 16GB/chip HBM.
+Both accept an `opt_state_dtype` to trade state precision for memory.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable      # params -> state
+    update: Callable    # (grads, state, params, step) -> (new_params, new_state)
+    name: str
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def adamw(schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32, grad_clip=1.0):
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step_
+            return p_new.astype(p.dtype), m_new.astype(state_dtype), v_new.astype(state_dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new, "v": v_new}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(schedule, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              state_dtype=jnp.float32, min_dim_factored=128):
+    """Factored second-moment estimator (Shazeer & Stern). Matrices with both
+    trailing dims >= min_dim_factored store row/col stats only."""
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], state_dtype),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], state_dtype)}
+            return {"v": jnp.zeros(p.shape, state_dtype)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta * s["vr"].astype(jnp.float32) + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"].astype(jnp.float32) + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    vr.mean(-1)[..., None, None], eps)
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr.astype(state_dtype), "vc": vc.astype(state_dtype)}
+            else:
+                v = beta * s["v"].astype(jnp.float32) + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v.astype(state_dtype)}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p_new = p.astype(jnp.float32) - lr * u
+            return p_new.astype(p.dtype), ns
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_s = treedef.flatten_up_to(state["f"])
+        outs = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+        p_new = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        s_new = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return p_new, {"f": s_new}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def make_optimizer(cfg, schedule):
+    sd = jnp.dtype(cfg.opt_state_dtype)
+    if cfg.optimizer == "adafactor":
+        return adafactor(schedule, state_dtype=sd)
+    return adamw(schedule, state_dtype=sd)

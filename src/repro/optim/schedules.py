@@ -1,0 +1,34 @@
+"""LR schedules. WSD (warmup-stable-decay) is minicpm-2b's schedule
+[arXiv:2404.06395]: linear warmup, long stable plateau, sharp decay tail."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def cosine(lr, warmup, total, final_frac=0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def wsd(lr, warmup, total, decay_frac=0.1, final_frac=0.01):
+    """Warmup-Stable-Decay: stable at `lr` until the last decay_frac of training,
+    then decays exponentially to final_frac * lr."""
+    decay_start = total * (1.0 - decay_frac)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        prog = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        decay = lr * jnp.exp(jnp.log(final_frac) * prog)
+        out = jnp.where(s < warmup, warm, jnp.where(s < decay_start, lr, decay))
+        return out.astype(jnp.float32)
+    return fn

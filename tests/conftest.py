@@ -1,0 +1,17 @@
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single device; only launch/dryrun.py and
+# the subprocess scenarios set up placeholder device fleets.
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-4, msg=""):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol, err_msg=msg)

@@ -1,0 +1,98 @@
+"""Backend contract tests: the paper's §3 design-choice matrix must actually
+differ between flavors, while the §5 core subset behaves identically."""
+import pytest
+
+from repro.core.backends import BACKENDS, Fabric, make_backend
+from repro.core.backends.exampi import SharedPtr
+
+ALL = list(BACKENDS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_core_subset_contract(name):
+    f = Fabric(2)
+    b = make_backend(name, f, 0, 2)
+    c = b.comm_create([0, 1])
+    assert b.comm_ranks(c) == [0, 1]
+    g = b.comm_group(c)
+    assert b.group_translate_ranks(g) == [0, 1]
+    t = b.type_create({"combiner": "contiguous", "count": 3})
+    assert b.type_get_envelope(t)["count"] == 3
+    r = b.isend(1, 5, "hello")
+    assert b.test(r) is True
+    assert f.recv(1, 0, 5) == "hello"
+    b.comm_free(c)
+    with pytest.raises((KeyError, TypeError)):
+        b.comm_ranks(c)
+
+
+def test_mpich_constants_stable_across_sessions():
+    f = Fabric(2)
+    b1 = make_backend("mpich", f, 0, 2)
+    b2 = make_backend("mpich", Fabric(2), 0, 2)
+    assert b1.world_comm() == b2.world_comm()               # fixed ints
+    assert b1.predefined_dtype("MPI_FLOAT") == b2.predefined_dtype("MPI_FLOAT")
+    assert isinstance(b1.world_comm(), int)
+    assert (b1.world_comm() >> 24) == 0x44                  # MPICH kind prefix
+
+
+def test_openmpi_constants_differ_across_sessions():
+    """Open MPI constants are function results — pointers differ per session
+    (paper §4.3); MANA must not bake them in."""
+    b1 = make_backend("openmpi", Fabric(2), 0, 2)
+    b2 = make_backend("openmpi", Fabric(2), 0, 2)
+    assert b1.world_comm() != b2.world_comm()
+    assert b1.predefined_dtype("MPI_FLOAT") != b2.predefined_dtype("MPI_FLOAT")
+
+
+def test_exampi_lazy_constants_and_aliasing():
+    b = make_backend("exampi", Fabric(2), 0, 2)
+    assert b._world is None                    # nothing resolved at startup
+    w = b.world_comm()
+    assert isinstance(w, SharedPtr)
+    assert b.world_comm() is w                 # resolved once, cached
+    # INT8_T and CHAR share a pointer (reinterpret-cast aliasing)
+    assert b.predefined_dtype("MPI_INT8_T") is b.predefined_dtype("MPI_CHAR")
+
+
+def test_exampi_subset_has_no_comm_split():
+    b = make_backend("exampi", Fabric(2), 0, 2)
+    assert "comm_split" not in b.capabilities()
+    with pytest.raises(NotImplementedError):
+        b.comm_split(b.world_comm(), 0, 0, [0])
+
+
+def test_craympi_is_mpich_family_with_vendor_fields():
+    b = make_backend("craympi", Fabric(2), 0, 2)
+    c = b.comm_create([0, 1])
+    st = b._deref("comm", c)
+    assert "_cray_nic" in st and "_cray_ofi_ep" in st       # vendor-private
+    # handle encoding is the MPICH one
+    assert (c >> 24) == 0x44
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_handle_types_differ_but_decode_agrees(name):
+    """Whatever the physical representation, the decoded envelope (the §5
+    category-2 functions) is identical — this is what reconstruction uses."""
+    b = make_backend(name, Fabric(1), 0, 1)
+    env = {"combiner": "vector", "count": 2, "blocklength": 3, "stride": 4}
+    t = b.type_create(env)
+    got = b.type_get_envelope(t)
+    assert {k: got[k] for k in env} == env
+
+
+def test_fabric_fifo_per_channel():
+    f = Fabric(2)
+    for i in range(5):
+        f.send(0, 1, 9, i)
+    assert [f.recv(1, 0, 9) for _ in range(5)] == list(range(5))
+
+
+def test_fabric_iprobe_wildcards():
+    f = Fabric(3)
+    assert f.iprobe(2) is None
+    f.send(0, 2, 4, "x")
+    assert f.iprobe(2) == (0, 4)
+    assert f.iprobe(2, src=1) is None
+    assert f.iprobe(2, src=0, tag=4) == (0, 4)

@@ -1,0 +1,48 @@
+"""Gradient compression: quantization bounds + the 8-device pod-reduction
+scenario (subprocess)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1e-3, 1e3))
+def test_int8_roundtrip_error_bound(seed, scale):
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal(64) * scale,
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6      # half-ulp bound
+    assert q.dtype == jnp.int8
+
+
+def test_zero_tensor_quantizes_cleanly():
+    q, s = quantize_int8(jnp.zeros(16))
+    np.testing.assert_array_equal(dequantize_int8(q, s), np.zeros(16))
+
+
+def test_passthrough_without_pod_axis():
+    from repro.optim.compress import make_pod_grad_reducer
+    fn = make_pod_grad_reducer(None, None)
+    g = {"w": jnp.ones(3)}
+    red, ef = fn(g, g)
+    np.testing.assert_array_equal(red["w"], g["w"])
+
+
+@pytest.mark.slow
+def test_pod_compressed_reduction_8_devices():
+    script = Path(__file__).parent / "scenarios" / "compress_scenario.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parents[1] / "src")
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "COMPRESS_SCENARIO_OK" in out.stdout, out.stdout + out.stderr

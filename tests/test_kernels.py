@@ -1,0 +1,88 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret=True
+executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import gla_chunk
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,D,window", [
+    (2, 4, 2, 128, 64, None),
+    (1, 4, 4, 256, 32, None),
+    (2, 6, 2, 128, 128, 32),
+    (1, 2, 1, 64, 96, None),       # non-MXU-aligned head dim -> padded
+    (1, 8, 2, 64, 64, 16),
+])
+def test_flash_attention_sweep(B, H, K, S, D, window, dtype):
+    ks = jax.random.split(jax.random.key(S * D + H), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, S, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, S, D), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, window=window, q_block=64, kv_block=64,
+                          interpret=True)
+    want = ref.naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,D,length,window", [
+    (2, 4, 2, 64, 64, 50, None),
+    (1, 8, 1, 128, 32, 128, None),
+    (2, 4, 4, 64, 64, 33, 16),
+    (1, 2, 2, 96, 128, 7, None),   # S not divisible by n_splits -> adjusted
+])
+def test_decode_attention_sweep(B, H, K, S, D, length, window, dtype):
+    ks = jax.random.split(jax.random.key(S + D + length), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32).astype(dtype)
+    out = decode_attention(q, k, v, length, n_splits=8, window=window,
+                           interpret=True)
+    want = ref.naive_decode_attention(q, jnp.moveaxis(k, 1, 2),
+                                      jnp.moveaxis(v, 1, 2), length,
+                                      window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,N,P,chunk", [
+    (2, 3, 64, 32, 32, 16),
+    (1, 2, 128, 16, 64, 32),
+    (1, 1, 96, 8, 8, 32),          # S % chunk != 0 -> chunk halved
+])
+def test_gla_chunk_sweep(B, H, S, N, P, chunk, dtype):
+    ks = jax.random.split(jax.random.key(S * N), 4)
+    q = jax.random.normal(ks[0], (B, S, H, N), jnp.float32).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, N), jnp.float32) * 0.3).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, P), jnp.float32).astype(dtype)
+    lg = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H))) * 0.3
+    out = gla_chunk(q, k, v, lg, chunk=chunk, interpret=True)
+    want, _ = ref.naive_gla(q, k, v, lg)
+    tol = {jnp.float32: 5e-4, jnp.bfloat16: 5e-2}[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_uses_ref_on_cpu():
+    from repro.kernels import ops
+    B, H, K, S, D = 1, 2, 2, 32, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, K, S, D))
+    v = jax.random.normal(ks[2], (B, K, S, D))
+    out = ops.flash_attention(q, k, v)
+    want = ref.naive_attention(q, k, v)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)

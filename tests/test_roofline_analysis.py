@@ -1,0 +1,76 @@
+"""Roofline analysis + dry-run artifact plumbing (pure functions, no devices)."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parents[1]))
+
+from benchmarks.roofline import act_bytes_global, analyze
+from repro.configs import get_config
+
+
+def art(kind, flops, coll, arg_b, out_b, B, S, chips=256, n=1e9, tokens=None):
+    return {
+        "n_chips": chips, "kind": kind, "global_batch": B, "seq_len": S,
+        "flops_global_mxu": flops,
+        "collective_bytes_per_device": {"all-reduce": coll},
+        "memory_analysis": {"argument_size_in_bytes": arg_b,
+                            "output_size_in_bytes": out_b},
+        "active_params": n,
+        "tokens": tokens if tokens is not None else B * S,
+    }
+
+
+def test_analyze_terms_and_bottleneck():
+    cfg = get_config("granite-3-2b")
+    a = art("train", flops=2.5e16, coll=3.3e11, arg_b=1e8, out_b=1e8,
+            B=256, S=4096, n=cfg.active_param_count())
+    r = analyze(a, cfg)
+    assert r["bottleneck"] == "collective"
+    assert r["compute_s"] == pytest.approx(2.5e16 / (256 * 197e12))
+    assert r["collective_s"] == pytest.approx(3.3e11 / 50e9)
+    assert 0 < r["useful_ratio"] < 1.5
+    # decode: no analytic activation traffic added
+    d = art("decode", flops=1e13, coll=1e9, arg_b=4e9, out_b=4e9,
+            B=128, S=32768, n=cfg.active_param_count(), tokens=128)
+    rd = analyze(d, cfg)
+    assert rd["memory_s"] == pytest.approx(8e9 / 819e9)
+
+
+def test_act_bytes_scale_with_shape():
+    cfg = get_config("granite-3-2b")
+    t = act_bytes_global(cfg, "train", 256, 4096)
+    t2 = act_bytes_global(cfg, "train", 256, 8192)
+    assert t2 == pytest.approx(2 * t, rel=0.01)
+    assert act_bytes_global(cfg, "decode", 128, 32768) == 0
+
+
+def test_artifacts_cover_all_live_cells():
+    """If the dry-run has been executed, every live cell must have artifacts
+    for BOTH meshes (the multi-pod dry-run deliverable)."""
+    from repro.configs import cells
+    art_dir = Path(__file__).parents[1] / "artifacts" / "dryrun"
+    if not art_dir.exists() or not any(art_dir.glob("*.json")):
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    missing = []
+    for arch, shape in cells():
+        for mesh in ("pod", "multipod"):
+            if not (art_dir / f"{arch}.{shape}.{mesh}.json").exists():
+                missing.append(f"{arch}.{shape}.{mesh}")
+    assert not missing, f"missing dry-run cells: {missing}"
+
+
+def test_artifact_sanity():
+    import json
+    art_dir = Path(__file__).parents[1] / "artifacts" / "dryrun"
+    files = sorted(art_dir.glob("*.pod.json")) if art_dir.exists() else []
+    if not files:
+        pytest.skip("no artifacts")
+    for f in files:
+        a = json.loads(f.read_text())
+        assert a["flops_global_mxu"] > 0, f.name
+        assert a["compile_s"] > 0, f.name
+        if a["kind"] == "train":
+            # trip-aware FLOPs must exceed 2*N_active*tokens (fwd alone)
+            assert a["flops_global_mxu"] > 2 * a["active_params"] * a["tokens"], f.name

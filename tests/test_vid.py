@@ -1,0 +1,138 @@
+"""Unit + property tests for the new virtual-id subsystem (paper §4.2) and the
+legacy baseline (§4.1)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.descriptors import Descriptor, Kind, Strategy, comm_desc, op_desc
+from repro.core.legacy_vid import LegacyVidTables
+from repro.core.vid import VidTable, compute_ggid, pack_vid, vid_index, vid_kind
+
+
+def test_vid_packing_roundtrip():
+    for kind in Kind:
+        for idx in (0, 1, 12345, (1 << 29) - 1):
+            v = pack_vid(kind, idx)
+            assert v < (1 << 32)
+            assert vid_kind(v) == kind
+            assert vid_index(v) == idx
+
+
+def test_vid_packing_rejects_overflow():
+    with pytest.raises(ValueError):
+        pack_vid(Kind.COMM, 1 << 29)
+
+
+def test_ggid_is_order_independent_and_seq_sensitive():
+    assert compute_ggid([3, 1, 2], 0) == compute_ggid([1, 2, 3], 0)
+    assert compute_ggid([1, 2, 3], 0) != compute_ggid([1, 2, 3], 1)
+
+
+def test_same_comm_same_vid_across_ranks():
+    """Two ranks creating the same logical communicator agree on the vid
+    without any coordination (the ggid property MANA relies on)."""
+    tables = [VidTable(), VidTable()]
+    vids = [t.insert(comm_desc([0, 1, 2])) for t in tables]
+    assert vids[0] == vids[1]
+    # a second identical group bumps the sequence -> different vid
+    v2 = tables[0].insert(comm_desc([0, 1, 2]))
+    assert v2 != vids[0]
+
+
+def test_two_level_table_lookup_and_free():
+    t = VidTable()
+    v = t.insert(op_desc("mysum"))
+    assert t.lookup(v).meta["name"] == "mysum"
+    t.free(v)
+    with pytest.raises(KeyError):
+        t.lookup(v)
+    with pytest.raises(KeyError):
+        t.free(v)
+
+
+def test_kinds_do_not_collide():
+    t = VidTable()
+    a = t.insert(Descriptor(Kind.OP, meta={"name": "a"}))
+    b = t.insert(Descriptor(Kind.REQUEST, meta={"op": "x"}))
+    c = t.insert(Descriptor(Kind.DATATYPE, meta={"envelope": {}}))
+    assert len({a, b, c}) == 3
+    assert t.lookup(a).kind == Kind.OP
+    assert t.lookup(b).kind == Kind.REQUEST
+    assert t.lookup(c).kind == Kind.DATATYPE
+
+
+def test_snapshot_excludes_physical_handles():
+    t = VidTable()
+    d = op_desc("s")
+    d_vid = t.insert(d)
+    d.phys = object()   # lower-half pointer
+    snap = t.snapshot()
+    t2 = VidTable.restore(snap)
+    assert t2.lookup(d_vid).phys is None          # never serialized
+    assert t2.lookup(d_vid).meta["name"] == "s"
+
+
+def test_reverse_lookup():
+    t = VidTable()
+    d = op_desc("x")
+    v = t.insert(d)
+    d.phys = 1234
+    assert t.reverse(Kind.OP, 1234) == v
+    assert t.reverse(Kind.OP, 999) is None
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(list(Kind)), min_size=1, max_size=60))
+def test_insert_lookup_invariant(kinds):
+    t = VidTable()
+    vids = []
+    for i, k in enumerate(kinds):
+        d = Descriptor(k, meta={"ranks": [0, i], "i": i} if k in
+                       (Kind.COMM, Kind.GROUP) else {"i": i})
+        vids.append((t.insert(d), i))
+    assert len({v for v, _ in vids}) == len(vids)       # all unique
+    for v, i in vids:
+        assert t.lookup(v).meta["i"] == i               # content preserved
+    assert t.live_count() == len(vids)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=8,
+                         unique=True), min_size=1, max_size=20))
+def test_ggid_agreement_property(groups):
+    """N independent tables creating the same comm sequence assign identical
+    vids — the distributed-agreement property."""
+    t1, t2 = VidTable(), VidTable()
+    for ranks in groups:
+        assert t1.insert(comm_desc(ranks)) == t2.insert(comm_desc(ranks))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["MPI_Comm", "MPI_Op"]),
+                          st.integers(0, 1 << 30)), min_size=1, max_size=40))
+def test_legacy_tables_equivalent_semantics(items):
+    lt = LegacyVidTables()
+    vids = [(kind, lt.insert(kind, phys), phys) for kind, phys in items]
+    for kind, v, phys in vids:
+        assert lt.virtual_to_real(kind, v) == phys
+    # reverse lookup returns *a* vid bound to that phys value
+    kind, v, phys = vids[0]
+    rv = lt.real_to_virtual(kind, phys)
+    assert lt.virtual_to_real(kind, rv) == phys
+
+
+def test_snapshot_roundtrip_preserves_all_descriptors():
+    t = VidTable()
+    vs = [t.insert(comm_desc([0, 1], color=1, key=2)),
+          t.insert(op_desc("x")),
+          t.insert(Descriptor(Kind.DATATYPE,
+                              meta={"envelope": {"combiner": "vector"}},
+                              strategy=Strategy.SERIALIZE))]
+    t2 = VidTable.restore(t.snapshot())
+    for v in vs:
+        a, b = t.lookup(v), t2.lookup(v)
+        assert a.kind == b.kind and a.strategy == b.strategy
+        assert b.vid == v
