@@ -1,19 +1,24 @@
 """Paper Table 3 analogue: checkpoint image size per rank vs checkpoint time
 (and MB/s/rank), across applications (archs) — 'checkpoint times follow image
 sizes'. Also measures the async-writer's train-stall time vs total write time
-(the overlap win), and restart latency (bench for §6.5 + elastic restart).
+(the overlap win), restart latency (bench for §6.5 + elastic restart), and —
+new with the ckpt_io engine — the before/after of the parallel + compressed
++ incremental path vs a seed-like serial uncompressed writer, including the
+delta ratio (bytes written by an unchanged-state second checkpoint over the
+first full one).
 """
 from __future__ import annotations
 
+import json
 import tempfile
 import time
 from dataclasses import replace
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import smoke_config
+from repro.configs import CkptIOConfig, smoke_config
+from repro.core.ckpt import snapshot_shards
 from repro.launch.train import Trainer
 
 # different widths -> a spread of image sizes, like CoMD..HPCG in Table 3
@@ -25,8 +30,53 @@ APPS = {
     "arctic-480b": dict(d_model=256, n_layers=3),
 }
 
+# engine-vs-engine cells over the new writer (codec / delta / pool effects):
+# par_zlib is the wall-time cell (no digest tax), par_zlib_inc the delta cell
+# (pays a fused sha256 pass per full checkpoint, skips clean shards after)
+ENGINES = {
+    "serial_none": CkptIOConfig(codec="none", incremental=False, io_workers=1),
+    "par_zlib": CkptIOConfig(codec="zlib", incremental=False, io_workers=0),
+    "par_zlib_inc": CkptIOConfig(codec="zlib", incremental=True, io_workers=0),
+}
 
-def one(arch, overrides, world=4):
+
+def _seed_reference(tr, world) -> dict:
+    """The literal SEED implementation, preserved as the before/after
+    baseline: one serial monolithic ``np.savez`` per rank on the writer
+    thread, and a serial npz-reassembly restore.  Best-of-3."""
+    arrays = {"params": tr.params, "opt": tr.opt_state}
+    leaves_meta, per_rank = snapshot_shards(arrays, world, tr.mesh)
+    write_s = read_s = 1e9
+    with tempfile.TemporaryDirectory() as td:
+        for i in range(3):
+            t0 = time.perf_counter()
+            for rank in range(world):
+                rdir = Path(td) / f"try{i}" / f"rank{rank:05d}"
+                rdir.mkdir(parents=True, exist_ok=True)
+                np.savez(rdir / "arrays.npz", **per_rank.get(rank, {}))
+                (rdir / "state.json").write_text(json.dumps({}))
+            write_s = min(write_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            npz_cache = {}
+            for meta in leaves_meta:
+                out = np.zeros(meta["shape"], dtype=np.dtype(meta["dtype"]))
+                for sh in meta["shards"]:
+                    f = Path(td) / f"try{i}" / f"rank{sh['rank']:05d}" / "arrays.npz"
+                    if f not in npz_cache:
+                        npz_cache[f] = np.load(f)
+                    idx = tuple(slice(a, b) for a, b in sh["index"])
+                    out[idx] = npz_cache[f][sh["key"]]
+            read_s = min(read_s, time.perf_counter() - t0)
+            for npz in npz_cache.values():
+                npz.close()
+    return {"write_s": write_s, "read_s": read_s}
+
+
+def one(arch, overrides, world=4, engine="par_zlib_inc", steps=2,
+        seed_ref=False):
+    """Returns a metrics dict for one (app, engine) cell; with ``seed_ref``
+    also measures the literal seed serial-savez writer/reader on the same
+    model state for the before/after."""
     cfg = smoke_config(arch)
     kw = {k: v for k, v in overrides.items()}
     if cfg.block == "xlstm":
@@ -34,37 +84,100 @@ def one(arch, overrides, world=4):
     cfg = replace(cfg, **kw)
     with tempfile.TemporaryDirectory() as td:
         tr = Trainer(cfg, batch_size=2, seq_len=32, world_size=world,
-                     ckpt_dir=td, total_steps=10)
+                     ckpt_dir=td, total_steps=10, ckpt_io=ENGINES[engine])
         tr.init_state()
-        tr.run(2, log_every=10)
-        # measure: stall (synchronous part) vs full write
-        t0 = time.perf_counter()
-        req = tr.checkpoint()
-        stall = time.perf_counter() - t0
-        stats = req.wait()
-        total = time.perf_counter() - t0
-        tr.pipeline.stop()
+        tr.run(steps, log_every=10)
+        # full-checkpoint cost, best-of-3 (container timing is noisy):
+        # stall (synchronous part) vs full write
+        total = stall = write_s = 1e9
+        for _ in range(3):
+            tr.cluster.writer.force_full_next()
+            tr.step += 1
+            t0 = time.perf_counter()
+            req = tr.checkpoint()
+            stall = min(stall, time.perf_counter() - t0)
+            stats = req.wait()
+            total = min(total, time.perf_counter() - t0)
+            write_s = min(write_s, stats.get("write_s", total))
+        # one more checkpoint with UNCHANGED state -> delta ratio
+        tr.step += 1
+        stats2 = tr.checkpoint().wait()
         nbytes = stats["bytes_total"]
         per_rank_mb = nbytes / world / 1e6
-        rate = per_rank_mb / max(total, 1e-9)
-        # restart latency
+        rate = per_rank_mb / max(write_s, 1e-9)
+        delta_ratio = stats2["bytes_written"] / max(stats["bytes_written"], 1)
+        # array-restore latency from the latest (= the delta) checkpoint,
+        # through the parallel streaming loader
+        from repro.core.restart import load_arrays
+        shardings = {"params": tr.param_sh, "opt": tr.opt_sh}
+        array_load_s = 1e9
+        for _ in range(2):
+            t0 = time.perf_counter()
+            load_arrays(tr.cluster.writer.latest(), shardings)
+            array_load_s = min(array_load_s, time.perf_counter() - t0)
+        # full Trainer-level restart (cluster rebuild + rebind + arrays)
         t0 = time.perf_counter()
         tr2 = Trainer(cfg, batch_size=2, seq_len=32, world_size=world,
-                      ckpt_dir=td, total_steps=10)
+                      ckpt_dir=td, total_steps=10, ckpt_io=ENGINES[engine])
         tr2.restore(tr.cluster.writer.latest())
         t_restart = time.perf_counter() - t0
         tr2.pipeline.stop()
-        return per_rank_mb, total, stall, rate, t_restart
+        out = {
+            "arch": arch, "engine": engine, "world": world,
+            "mb_per_rank": per_rank_mb,
+            "ckpt_s": total, "stall_s": stall, "write_s": write_s,
+            "mb_s_per_rank": rate,
+            "bytes_total": nbytes,
+            "bytes_written_full": stats["bytes_written"],
+            "bytes_written_delta": stats2["bytes_written"],
+            "delta_ratio": delta_ratio,
+            "array_load_s": array_load_s,
+            "restore_s": t_restart,
+        }
+        if seed_ref:
+            out["seed_ref"] = _seed_reference(tr, world)
+        tr.pipeline.stop()
+        return out
 
 
 def rows():
     out = []
     for arch, overrides in APPS.items():
-        mb, total, stall, rate, t_restart = one(arch, overrides)
-        out.append((f"ckpt_{arch}", 1e6 * total,
-                    f"MB/rank={mb:.1f};ckpt_s={total:.3f};stall_s={stall:.3f};"
-                    f"MB/s/rank={rate:.1f};restart_s={t_restart:.3f}"))
+        for engine in ENGINES:
+            m = one(arch, overrides, engine=engine,
+                    seed_ref=(engine == "par_zlib_inc"))
+            extra = (f"MB/rank={m['mb_per_rank']:.1f};"
+                     f"ckpt_s={m['ckpt_s']:.3f};stall_s={m['stall_s']:.3f};"
+                     f"MB/s/rank={m['mb_s_per_rank']:.1f};"
+                     f"delta_ratio={m['delta_ratio']:.3f};"
+                     f"restart_s={m['restore_s']:.3f}")
+            if "seed_ref" in m:
+                extra += (f";seed_write_s={m['seed_ref']['write_s']:.3f};"
+                          f"seed_read_s={m['seed_ref']['read_s']:.3f}")
+            out.append((f"ckpt_{arch}_{engine}", 1e6 * m["ckpt_s"], extra))
     return out
+
+
+def smoke(apps=("granite-3-2b",), world=4):
+    """Tiny before/after for `benchmarks/run.py --smoke` against the literal
+    seed serial-savez writer/reader: wall-time from the parallel+compressed
+    cell, delta ratio + parallel restore from the incremental cell."""
+    results = []
+    for arch in apps:
+        comp = one(arch, APPS[arch], world=world, engine="par_zlib",
+                   seed_ref=True)
+        seed = comp.pop("seed_ref")
+        inc = one(arch, APPS[arch], world=world, engine="par_zlib_inc")
+        results.append({
+            "arch": arch,
+            "seed": seed,
+            "par_zlib": comp,
+            "par_zlib_inc": inc,
+            "write_speedup": seed["write_s"] / max(comp["write_s"], 1e-9),
+            "delta_ratio": inc["delta_ratio"],
+            "restore_speedup": seed["read_s"] / max(inc["array_load_s"], 1e-9),
+        })
+    return results
 
 
 if __name__ == "__main__":

@@ -6,11 +6,40 @@ report from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV.
   §6.1    -> bench_vid       (translation micro-benchmark)
   Table 3 -> bench_ckpt      (image size vs time vs MB/s/rank, restart)
   §Roofline -> roofline      (from artifacts/dryrun)
+
+``--smoke`` runs only the checkpoint-engine before/after on a tiny config and
+writes ``BENCH_ckpt.json`` so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
+
+
+def smoke(out_path: str) -> None:
+    """Tiny ckpt_io perf gate: seed-like serial writer vs parallel + zlib +
+    incremental engine; writes the comparison to ``out_path``."""
+    from benchmarks import bench_ckpt
+    results = bench_ckpt.smoke()
+    payload = {"bench": "ckpt_io_smoke", "results": results}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    ok = True
+    for r in results:
+        line = (f"ckpt_smoke_{r['arch']}: "
+                f"write_speedup={r['write_speedup']:.2f}x "
+                f"delta_ratio={r['delta_ratio']:.3f} "
+                f"restore_speedup={r['restore_speedup']:.2f}x")
+        print(line, flush=True)
+        # acceptance: parallel+compressed beats seed wall-time; an
+        # unchanged-state second checkpoint writes <20% of the first's bytes
+        if r["write_speedup"] < 1.0 or r["delta_ratio"] >= 0.2:
+            ok = False
+    print(f"wrote {out_path}")
+    if not ok:
+        sys.exit(1)
 
 
 def main() -> None:
@@ -52,4 +81,13 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the ckpt_io before/after on tiny configs")
+    ap.add_argument("--out", default="BENCH_ckpt.json",
+                    help="smoke-mode output path")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.out)
+    else:
+        main()

@@ -1,6 +1,7 @@
 from repro.configs.base import (
     ARCH_IDS,
     SHAPES,
+    CkptIOConfig,
     MLAConfig,
     MoEConfig,
     ModelConfig,
@@ -13,6 +14,7 @@ from repro.configs.base import (
 )
 
 __all__ = [
-    "ARCH_IDS", "SHAPES", "MLAConfig", "MoEConfig", "ModelConfig", "SSMConfig",
-    "ShapeConfig", "XLSTMConfig", "cells", "get_config", "smoke_config",
+    "ARCH_IDS", "SHAPES", "CkptIOConfig", "MLAConfig", "MoEConfig",
+    "ModelConfig", "SSMConfig", "ShapeConfig", "XLSTMConfig", "cells",
+    "get_config", "smoke_config",
 ]

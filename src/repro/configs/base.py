@@ -167,6 +167,20 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class CkptIOConfig:
+    """Checkpoint I/O engine knobs (see docs/checkpoint_format.md).
+
+    Conservative defaults (lossless, non-incremental) keep raw Cluster
+    behavior bit-stable; the training driver opts into zlib + incremental
+    via CLI flags.  ``io_workers=0`` -> min(world_size, cpu)."""
+    codec: str = "none"               # none | zlib | lz4 | int8 (lossy)
+    incremental: bool = False         # delta checkpoints (full every keep-th)
+    io_workers: int = 0               # writer/reader pool size (0 = auto)
+    keep: int = 3                     # completed checkpoints retained by GC
+    chunk_bytes: int = 4 << 20        # raw bytes per streamed chunk
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     name: str
     kind: str            # train | prefill | decode

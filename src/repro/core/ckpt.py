@@ -10,8 +10,14 @@ restart):
 
 Writes are asynchronous and double-buffered: device->host snapshots happen at
 checkpoint() call time (so training may continue), file I/O happens on a
-writer thread, and the manifest + COMMIT marker land atomically at the end.
-Per-rank write durations are recorded for straggler analysis."""
+writer thread which fans per-rank shard files out over a thread pool
+(``ckpt_io.IOPool``), and the manifest + COMMIT marker land atomically at the
+end.  Per-rank write durations are recorded for straggler analysis.
+
+The data plane (chunked shard container, codecs, digests) lives in
+``repro.core.ckpt_io``; this module owns the control plane: full-vs-delta
+policy, manifest assembly, atomic publish, and GC that never deletes a step a
+live delta chain depends on (see docs/checkpoint_format.md)."""
 from __future__ import annotations
 
 import json
@@ -22,6 +28,8 @@ from pathlib import Path
 
 import jax
 import numpy as np
+
+from repro.core import ckpt_io
 
 
 def _rank_of_device(dev, devices_flat, world_size):
@@ -34,13 +42,17 @@ def snapshot_shards(tree, world_size, mesh):
 
     Returns (leaves_meta, {rank: {key: np.ndarray}}).
     Every addressable shard is copied host-side NOW; the caller may keep
-    training while the writer thread persists the copies."""
+    training while the writer thread persists the copies.  Shard entries
+    carry (rank, key, index); the writer fills in (step, file) once it knows
+    which step dir the bytes physically land in (delta checkpoints point
+    clean shards at a PRIOR step's file)."""
     leaves, _ = jax.tree.flatten(tree)
     devices_flat = list(mesh.devices.flatten()) if mesh is not None else []
     per_rank: dict[int, dict[str, np.ndarray]] = {r: {} for r in range(world_size)}
     leaves_meta = []
     for li, leaf in enumerate(leaves):
-        meta = {"shape": list(leaf.shape), "dtype": _np_dtype_name(leaf.dtype),
+        meta = {"shape": list(leaf.shape),
+                "dtype": ckpt_io.dtype_name(leaf.dtype),
                 "shards": []}
         shards = getattr(leaf, "addressable_shards", None)
         if not shards:
@@ -48,7 +60,6 @@ def snapshot_shards(tree, world_size, mesh):
             rank = 0
             per_rank[rank][key] = _to_np(leaf)
             meta["shards"].append({"rank": rank, "key": key,
-                                   "file": f"rank{rank:05d}/arrays.npz",
                                    "index": [[0, s] for s in leaf.shape]})
         else:
             seen = set()
@@ -64,7 +75,6 @@ def snapshot_shards(tree, world_size, mesh):
                 key = f"{li}.{si}"
                 per_rank[rank][key] = _to_np(sh.data)
                 meta["shards"].append({"rank": rank, "key": key,
-                                       "file": f"rank{rank:05d}/arrays.npz",
                                        "index": [list(t) for t in norm]})
         leaves_meta.append(meta)
     return leaves_meta, per_rank
@@ -75,10 +85,6 @@ def _to_np(x):
     if arr.dtype == jax.numpy.bfloat16:
         return arr  # np supports ml_dtypes bfloat16 via jax's numpy
     return arr
-
-
-def _np_dtype_name(dt):
-    return str(np.dtype(dt)) if not str(dt).startswith("bfloat") else "bfloat16"
 
 
 class CheckpointRequest:
@@ -100,15 +106,42 @@ class CheckpointRequest:
 
 
 class CheckpointWriter:
-    """Double-buffered async writer. At most one checkpoint is in flight; a
-    new checkpoint() drains the previous one first."""
+    """Double-buffered async writer over the parallel/incremental/compressed
+    ckpt_io engine.  At most one checkpoint is in flight; a new checkpoint()
+    drains the previous one first.
 
-    def __init__(self, base_dir, world_size: int, keep: int = 3):
+    Args beyond the seed writer:
+      codec        — "none" | "zlib" | "lz4" | "int8" (lossy, opt-in)
+      incremental  — write only shards whose content digest changed, with a
+                     full checkpoint every ``keep``-th so chains stay short
+      io_workers   — writer/reader pool size; 0 -> min(world_size, cpu)
+      chunk_bytes  — raw bytes per streamed chunk"""
+
+    def __init__(self, base_dir, world_size: int, keep: int = 3, *,
+                 codec: str = "none", incremental: bool = False,
+                 io_workers: int = 0,
+                 chunk_bytes: int = ckpt_io.DEFAULT_CHUNK_BYTES):
         self.base = Path(base_dir)
         self.base.mkdir(parents=True, exist_ok=True)
         self.world_size = world_size
         self.keep = keep
+        self.codec_name = codec
+        self.codec = ckpt_io.get_codec(codec)
+        self.incremental = incremental
+        self.chunk_bytes = chunk_bytes
+        self.io_workers = io_workers or ckpt_io.default_workers(world_size)
+        self._pool: ckpt_io.IOPool | None = None
         self._inflight: CheckpointRequest | None = None
+        # (rank:key) -> {"digest", "step", "file"}: where each shard's bytes
+        # currently live on disk.  Only mutated after a successful COMMIT, so
+        # a failed write can never poison delta decisions.
+        self._digest_table: dict[str, dict] = {}
+        self._since_full = 0
+
+    def _get_pool(self) -> ckpt_io.IOPool:
+        if self._pool is None:
+            self._pool = ckpt_io.IOPool(self.io_workers)
+        return self._pool
 
     def checkpoint(self, step: int, arrays, mesh, rank_states: dict,
                    extra_meta: dict | None = None) -> CheckpointRequest:
@@ -123,31 +156,99 @@ class CheckpointWriter:
         t0 = time.time()
         leaves_meta, per_rank = snapshot_shards(arrays, self.world_size, mesh)
         snap_s = time.time() - t0
+        full = (not self.incremental or not self._digest_table
+                or self._since_full >= self.keep)
         req = CheckpointRequest(fdir)
         req.write_stats["device_to_host_s"] = round(snap_s, 4)
 
+        def _write_rank(rank: int):
+            t1 = time.time()
+            rdir = tdir / f"rank{rank:05d}"
+            arrays_r = per_rank.get(rank, {})
+            # digests exist to detect clean shards; a non-incremental writer
+            # rewrites everything anyway, so skip hashing entirely.  On a
+            # full lossless checkpoint the hash is FUSED into the write
+            # stream (one memory pass); only delta decisions and lossy
+            # codecs need a separate pre-pass.
+            lossy = self.codec.lossy
+            if self.incremental and (lossy or not full):
+                digests = {k: ckpt_io.shard_digest(a)
+                           for k, a in arrays_r.items()}
+            else:
+                digests = {}
+            if full:
+                fresh_keys = set(arrays_r)
+            else:
+                fresh_keys = {
+                    k for k in arrays_r
+                    if self._digest_table.get(f"{rank}:{k}", {}).get("digest")
+                    != digests[k]}
+            st = ckpt_io.write_rank_shards(
+                rdir, {k: arrays_r[k] for k in arrays_r if k in fresh_keys},
+                self.codec, self.chunk_bytes,
+                digests={k: digests[k] for k in fresh_keys & digests.keys()},
+                compute_digests=self.incremental and not lossy)
+            (rdir / "state.json").write_text(
+                json.dumps(rank_states.get(rank, {})))
+            raw_all = sum(a.nbytes for a in arrays_r.values())
+            return {"rank": rank, "keys": list(arrays_r),
+                    "digests": {**digests, **st["digests"]},
+                    "fresh": fresh_keys,
+                    "enc_bytes": st["enc_bytes"],
+                    "fresh_raw_bytes": st["raw_bytes"],
+                    "raw_bytes": raw_all,
+                    "seconds": round(time.time() - t1, 4)}
+
         def _write():
             try:
-                per_rank_s = {}
-                total = 0
-                for rank in range(self.world_size):
-                    t1 = time.time()
-                    rdir = tdir / f"rank{rank:05d}"
-                    rdir.mkdir(parents=True, exist_ok=True)
-                    np.savez(rdir / "arrays.npz", **per_rank.get(rank, {}))
-                    state = rank_states.get(rank, {})
-                    (rdir / "state.json").write_text(json.dumps(state))
-                    per_rank_s[rank] = round(time.time() - t1, 4)
-                    total += sum(a.nbytes for a in per_rank.get(rank, {}).values())
+                t_write = time.time()
+                results = self._get_pool().map(_write_rank,
+                                               range(self.world_size))
+                # resolve each shard to the step dir that holds its bytes
+                new_table: dict[str, dict] = {}
+                src: dict[tuple, dict] = {}
+                for r in results:
+                    rank = r["rank"]
+                    rfile = f"rank{rank:05d}/{ckpt_io.BIN_NAME}"
+                    for k in r["keys"]:
+                        tk = f"{rank}:{k}"
+                        if k in r["fresh"]:
+                            ent = {"digest": r["digests"].get(k),
+                                   "step": step, "file": rfile}
+                        else:
+                            ent = dict(self._digest_table[tk])
+                        new_table[tk] = ent
+                        src[(rank, k)] = ent
+                for meta in leaves_meta:
+                    for sh in meta["shards"]:
+                        ent = src[(sh["rank"], sh["key"])]
+                        sh["step"] = ent["step"]
+                        sh["file"] = ent["file"]
+                base_steps = sorted({sh["step"] for meta in leaves_meta
+                                     for sh in meta["shards"]} - {step})
+                total = sum(r["raw_bytes"] for r in results)
+                written = sum(r["enc_bytes"] for r in results)
+                fresh_shards = sum(len(r["fresh"]) for r in results)
+                total_shards = sum(len(r["digests"]) for r in results)
+                per_rank_s = {r["rank"]: r["seconds"] for r in results}
                 manifest = {
+                    "format": ckpt_io.FORMAT_VERSION,
                     "step": step,
                     "world_size": self.world_size,
                     "mesh": {"shape": list(mesh.devices.shape),
                              "axes": list(mesh.axis_names)} if mesh is not None else None,
                     "leaves": leaves_meta,
+                    "codec": self.codec_name,
+                    "incremental": self.incremental,
+                    "full": full,
+                    "base_steps": base_steps,
                     "bytes_total": total,
+                    "bytes_written": written,
+                    "delta": {"fresh_shards": fresh_shards,
+                              "total_shards": total_shards},
                     "per_rank_write_s": per_rank_s,
-                    "straggler_rank": max(per_rank_s, key=per_rank_s.get),
+                    "straggler_rank": max(per_rank_s, key=per_rank_s.get)
+                    if per_rank_s else 0,
                     **(extra_meta or {}),
                 }
                 (tdir / "manifest.json").write_text(json.dumps(manifest))
@@ -155,8 +256,13 @@ class CheckpointWriter:
                 if fdir.exists():
                     shutil.rmtree(fdir)
                 tdir.rename(fdir)       # atomic publish
-                req.write_stats.update(bytes_total=total,
-                                       per_rank_write_s=per_rank_s)
+                self._digest_table = new_table
+                self._since_full = 1 if full else self._since_full + 1
+                req.write_stats.update(
+                    bytes_total=total, bytes_written=written, full=full,
+                    fresh_shards=fresh_shards, total_shards=total_shards,
+                    write_s=round(time.time() - t_write, 4),
+                    per_rank_write_s=per_rank_s)
                 self._gc()
             except Exception as e:  # noqa: BLE001
                 req.error = e
@@ -167,20 +273,53 @@ class CheckpointWriter:
         self._inflight = req
         return req
 
-    def _gc(self):
-        done = sorted(d for d in self.base.iterdir()
-                      if d.name.startswith("step_") and not d.name.endswith(".tmp")
+    # -- directory scanning / GC -------------------------------------------
+    def _completed_steps(self) -> list[Path]:
+        """Sorted committed step dirs (``.tmp`` and uncommitted dirs are
+        invisible: half-written checkpoints can never be restored from)."""
+        return sorted(d for d in self.base.iterdir()
+                      if d.name.startswith("step_")
+                      and not d.name.endswith(".tmp")
                       and (d / "COMMIT").exists())
+
+    def _gc(self):
+        """Delete all but the newest ``keep`` completed checkpoints — except
+        any older step that a kept manifest's delta chain still references
+        (``base_steps``); deleting those would orphan clean shards."""
+        if self.keep <= 0:          # retain everything (seed semantics)
+            return
+        done = self._completed_steps()
+        kept = done[-self.keep:]
+        deps: set[int] = set()
+        for d in kept:
+            try:
+                man = json.loads((d / "manifest.json").read_text())
+            except (OSError, ValueError):
+                continue
+            deps.update(man.get("base_steps", []))
+        protect = {d.name for d in kept} | {f"step_{s:08d}" for s in deps}
         for d in done[: -self.keep]:
-            shutil.rmtree(d)
+            if d.name not in protect:
+                shutil.rmtree(d)
 
     def latest(self):
-        done = sorted(d for d in self.base.iterdir()
-                      if d.name.startswith("step_") and not d.name.endswith(".tmp")
-                      and (d / "COMMIT").exists())
+        done = self._completed_steps()
         return done[-1] if done else None
+
+    def force_full_next(self):
+        """Make the next checkpoint a full one (operators: guaranteed
+        self-contained snapshot before migrations; benchmarks: repeatable
+        full-write measurements)."""
+        self._digest_table = {}
+        self._since_full = 0
 
     def wait_idle(self):
         if self._inflight is not None:
             self._inflight.wait()
             self._inflight = None
+
+    def close(self):
+        self.wait_idle()
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None

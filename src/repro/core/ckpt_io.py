@@ -1,0 +1,389 @@
+"""Checkpoint I/O engine: parallel, incremental, compressed shard files.
+
+This subsystem is the data plane of the checkpoint writer/reader pair in
+``ckpt.py`` / ``restart.py``.  The paper's Table 3 observation — "checkpoint
+times follow image sizes" — means the only levers on checkpoint cost are
+bytes written and write concurrency; this module provides both:
+
+  * **shard container** — each rank persists one ``shards.bin`` (concatenated
+    encoded chunks, streamed to disk chunk-by-chunk rather than materialising
+    a monolithic ``npz`` in memory) plus one ``index.json`` describing every
+    entry (dtype/shape/offset/chunks/codec/digest);
+  * **codecs** — pluggable ``none`` / ``zlib`` / ``lz4`` byte codecs and an
+    opt-in lossy ``int8`` codec that reuses the symmetric-quantization
+    helpers from ``repro.optim.compress`` (meant for optimizer moments);
+  * **digests** — cheap content hashes per shard, so an incremental
+    checkpoint writes only dirty shards and points clean shards at the step
+    that already holds their bytes (a flat delta chain);
+  * **thread pools** — rank writes and shard reads fan out over a pool sized
+    ``min(world_size, cpu)`` unless overridden.
+
+Nothing here knows about JAX or meshes: inputs are ``{key: np.ndarray}``
+dicts per rank, outputs are numpy arrays — which is exactly what keeps the
+format topology-oblivious.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+
+FORMAT_VERSION = 2
+DEFAULT_CHUNK_BYTES = 4 << 20        # 4 MiB raw per streamed chunk
+BIN_NAME = "shards.bin"
+INDEX_NAME = "index.json"
+
+
+# ---------------------------------------------------------------------------
+# dtype handling (bfloat16 / float8 live in ml_dtypes, not vanilla numpy)
+# ---------------------------------------------------------------------------
+
+def resolve_dtype(name: str) -> np.dtype:
+    """``np.dtype(name)`` that also resolves ml_dtypes names (``bfloat16``,
+    ``float8_e4m3fn``, ...), which plain numpy rejects."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except AttributeError:
+            raise TypeError(f"cannot resolve dtype name {name!r} "
+                            f"(not a numpy or ml_dtypes dtype)") from None
+
+
+def dtype_name(dt) -> str:
+    """Stable round-trippable name for a (possibly ml_dtypes) dtype."""
+    return str(np.dtype(dt))
+
+
+def is_float_dtype(dt) -> bool:
+    """True for numpy floats AND ml_dtypes floats (bfloat16, float8_*),
+    which are not ``np.floating`` subtypes."""
+    return "float" in dtype_name(dt)
+
+
+def _digest_start(arr: np.ndarray):
+    """sha256 over blake2b: OpenSSL rides SHA-NI at ~1.4 GB/s vs ~0.7 for
+    blake2 — the digest pass is the incremental mode's per-checkpoint tax,
+    so hash speed is write speed.  Dtype/shape-qualified so a reshape or
+    cast never aliases."""
+    h = hashlib.sha256()
+    h.update(dtype_name(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    return h
+
+
+def shard_digest(arr: np.ndarray) -> str:
+    """Content digest of a host shard."""
+    h = _digest_start(arr)
+    h.update(np.ascontiguousarray(arr).view(np.uint8).reshape(-1))
+    return h.hexdigest()[:32]
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+class Codec:
+    """Two-layer codec: an optional array transform (lossy codecs quantize
+    here and record ``qmeta``) followed by a byte codec applied per chunk."""
+
+    name = "none"
+    lossy = False
+
+    # -- array layer --------------------------------------------------------
+    def transform(self, arr: np.ndarray):
+        """arr -> (encoded_arr, qmeta|None). Lossless default: identity."""
+        return arr, None
+
+    def untransform(self, arr: np.ndarray, qmeta, dtype: np.dtype):
+        return arr
+
+    # -- byte layer ---------------------------------------------------------
+    def encode_chunk(self, raw) -> bytes:
+        return bytes(raw)
+
+    def decode_chunk(self, enc: bytes, raw_len: int) -> bytes:
+        return enc
+
+
+class NoneCodec(Codec):
+    name = "none"
+
+
+class ZlibCodec(Codec):
+    """Deflate with the Z_RLE strategy: on the data that actually passes the
+    compressibility probe (zero-dominated optimizer moments, untouched
+    embedding rows) RLE matches the default strategy's ratio at 3-4x the
+    throughput (~150-200 MB/s vs ~50), which is what lets compression beat
+    raw writes instead of trading CPU for bandwidth."""
+
+    name = "zlib"
+
+    def __init__(self, level: int = 1, strategy: int = zlib.Z_RLE):
+        self.level = level
+        self.strategy = strategy
+
+    def encode_chunk(self, raw) -> bytes:
+        co = zlib.compressobj(self.level, zlib.DEFLATED, 15, 9, self.strategy)
+        # zlib takes buffer-protocol objects: no bytes() copy on the hot path
+        return co.compress(raw) + co.flush()
+
+    def decode_chunk(self, enc: bytes, raw_len: int) -> bytes:
+        return zlib.decompress(enc)
+
+
+class Lz4Codec(Codec):
+    """lz4-frame byte codec; available only when the ``lz4`` package is
+    importable (gated — never a hard dependency)."""
+
+    name = "lz4"
+
+    def __init__(self):
+        try:
+            import lz4.frame as _f
+        except ImportError as e:
+            raise ImportError(
+                "codec 'lz4' requires the optional lz4 package; "
+                "use 'zlib' or 'none' instead") from e
+        self._f = _f
+
+    def encode_chunk(self, raw) -> bytes:
+        return self._f.compress(bytes(raw))
+
+    def decode_chunk(self, enc: bytes, raw_len: int) -> bytes:
+        return self._f.decompress(enc)
+
+
+class Int8Codec(ZlibCodec):
+    """Opt-in LOSSY codec for optimizer moments: per-tensor symmetric int8
+    quantization (the DCN gradient-compression helpers from
+    ``repro.optim.compress``) + zlib over the int8 payload.  Non-float
+    entries pass through lossless zlib untouched."""
+
+    name = "int8"
+    lossy = True
+
+    def transform(self, arr: np.ndarray):
+        if arr.size == 0 or not is_float_dtype(arr.dtype):
+            return arr, None     # integer / bool / empty entries stay lossless
+        from repro.optim.compress import quantize_int8_np
+        q, scale = quantize_int8_np(arr)
+        return q, {"scale": scale}
+
+    def untransform(self, arr: np.ndarray, qmeta, dtype: np.dtype):
+        if qmeta is None:
+            return arr
+        from repro.optim.compress import dequantize_int8_np
+        return dequantize_int8_np(arr, qmeta["scale"]).astype(dtype)
+
+
+_CODECS = {
+    "none": NoneCodec,
+    "zlib": ZlibCodec,
+    "lz4": Lz4Codec,
+    "int8": Int8Codec,
+}
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _CODECS:
+        raise KeyError(f"unknown checkpoint codec {name!r}; "
+                       f"known: {sorted(_CODECS)}")
+    return _CODECS[name]()
+
+
+def register_codec(name: str, cls) -> None:
+    _CODECS[name] = cls
+
+
+# ---------------------------------------------------------------------------
+# shard container: write
+# ---------------------------------------------------------------------------
+
+def _byte_view(arr: np.ndarray):
+    arr = np.ascontiguousarray(arr)
+    return arr.view(np.uint8).reshape(-1)
+
+
+SAMPLE_BYTES = 16 << 10              # compressibility probe per entry
+ENTROPY_THRESHOLD_BITS = 6.0         # byte entropy below this -> compress
+
+
+def _worth_compressing(codec: Codec, view) -> bool:
+    """Adaptive compression gate: raw float weights are mantissa noise on
+    which zlib runs at ~20 MB/s for <10% savings, so compression must EARN
+    its keep per entry.  A byte-entropy probe (~100us via bincount) decides:
+    measured classes separate cleanly — zero pages / token ids sit at <=3.3
+    bits/byte (zlib ratio 0.01-0.45 at 50-280 MB/s), float noise at >=7.1
+    (ratio ~0.93 at 20 MB/s).  Entries that fail are stored raw (chunk flag
+    1) — that is what keeps the 'compressed' engine strictly faster than the
+    seed serial writer instead of trading write bandwidth for nothing."""
+    if codec.name == "none":
+        return False
+    sample = view[:SAMPLE_BYTES]
+    if sample.nbytes == 0:
+        return False
+    counts = np.bincount(sample, minlength=256)
+    p = counts[counts > 0] / sample.size
+    entropy_bits = float(-(p * np.log2(p)).sum())
+    return entropy_bits < ENTROPY_THRESHOLD_BITS
+
+
+def write_rank_shards(rank_dir, arrays: dict, codec: Codec,
+                      chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                      digests: dict | None = None,
+                      compute_digests: bool = False) -> dict:
+    """Stream ``arrays`` ({key: np.ndarray}) into ``rank_dir/shards.bin`` +
+    ``rank_dir/index.json``.  Each array is transformed (lossy codecs),
+    split into ``chunk_bytes`` raw chunks, byte-encoded (or stored raw when
+    the compressibility probe says the codec cannot win), and appended —
+    memory high-water is one chunk, not one rank image.
+
+    ``digests`` records known content digests; ``compute_digests`` hashes
+    entries NOT already in ``digests`` inline while streaming — for lossless
+    codecs the transform is the identity, so the chunk stream is the
+    original bytes and the fused hash equals :func:`shard_digest` without a
+    second memory pass.  (Callers must pre-compute digests for lossy
+    codecs.)
+
+    Chunk records are ``[enc_len, raw_len, stored_raw]``.
+
+    Returns {"raw_bytes", "enc_bytes", "entries"}."""
+    rank_dir = Path(rank_dir)
+    rank_dir.mkdir(parents=True, exist_ok=True)
+    digests = digests or {}
+    entries: dict[str, dict] = {}
+    raw_total = enc_total = 0
+    offset = 0
+    with open(rank_dir / BIN_NAME, "wb") as f:
+        for key, arr in arrays.items():
+            arr = np.asarray(arr)
+            enc_arr, qmeta = codec.transform(arr)
+            view = _byte_view(enc_arr)
+            compress = _worth_compressing(codec, view)
+            hasher = None
+            if compute_digests and key not in digests:
+                if codec.lossy and qmeta is not None:
+                    raise ValueError("inline digests require a lossless "
+                                     "stream; pre-compute for lossy codecs")
+                hasher = _digest_start(arr)
+            chunks = []
+            for start in range(0, max(view.nbytes, 1), chunk_bytes):
+                raw = view[start:start + chunk_bytes]
+                if raw.nbytes == 0 and view.nbytes > 0:
+                    break
+                if hasher is not None:
+                    hasher.update(raw)
+                enc = codec.encode_chunk(raw) if compress else raw
+                f.write(enc)
+                chunks.append([len(enc), raw.nbytes, 0 if compress else 1])
+                enc_total += len(enc)
+            if hasher is not None:
+                digests[key] = hasher.hexdigest()[:32]
+            entry = {
+                "dtype": dtype_name(arr.dtype),
+                "shape": list(arr.shape),
+                "enc_dtype": dtype_name(enc_arr.dtype),
+                "offset": offset,
+                "nbytes": int(view.nbytes),
+                "chunks": chunks,
+                "qmeta": qmeta,
+                "digest": digests.get(key),
+            }
+            offset += sum(c[0] for c in chunks)
+            raw_total += arr.nbytes
+            entries[key] = entry
+    (rank_dir / INDEX_NAME).write_text(json.dumps({
+        "format": FORMAT_VERSION, "codec": codec.name, "entries": entries}))
+    return {"raw_bytes": raw_total, "enc_bytes": enc_total,
+            "entries": entries, "digests": digests}
+
+
+# ---------------------------------------------------------------------------
+# shard container: read
+# ---------------------------------------------------------------------------
+
+def read_rank_index(rank_dir) -> dict:
+    return json.loads((Path(rank_dir) / INDEX_NAME).read_text())
+
+
+def read_entry(bin_file, entry: dict, codec: Codec) -> np.ndarray:
+    """Decode one entry from an open ``shards.bin`` file object into a fresh
+    array of the entry's ORIGINAL dtype/shape."""
+    nbytes = entry["nbytes"]
+    buf = np.empty(nbytes, np.uint8)
+    bin_file.seek(entry["offset"])
+    pos = 0
+    for chunk in entry["chunks"]:
+        enc_len, raw_len = chunk[0], chunk[1]
+        stored_raw = chunk[2] if len(chunk) > 2 else 0
+        enc = bin_file.read(enc_len)
+        if len(enc) != enc_len:
+            raise IOError(f"short read: wanted {enc_len} bytes, "
+                          f"got {len(enc)}")
+        raw = enc if stored_raw else codec.decode_chunk(enc, raw_len)
+        buf[pos:pos + raw_len] = np.frombuffer(raw, np.uint8)
+        pos += raw_len
+    enc_dtype = resolve_dtype(entry["enc_dtype"])
+    arr = buf.view(enc_dtype).reshape(entry["shape"])
+    dtype = resolve_dtype(entry["dtype"])
+    arr = codec.untransform(arr, entry["qmeta"], dtype)
+    if arr.dtype != dtype:
+        arr = arr.astype(dtype)
+    return arr.reshape(entry["shape"])
+
+
+def read_rank_entries(rank_dir, keys, codec: Codec | None = None) -> dict:
+    """Read a subset of entries from one rank dir; opens and closes the bin
+    file exactly once. ``codec=None`` -> the codec recorded in the index."""
+    rank_dir = Path(rank_dir)
+    index = read_rank_index(rank_dir)
+    codec = codec or get_codec(index["codec"])
+    out = {}
+    with open(rank_dir / BIN_NAME, "rb") as f:
+        for key in keys:
+            out[key] = read_entry(f, index["entries"][key], codec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pools
+# ---------------------------------------------------------------------------
+
+def default_workers(world_size: int) -> int:
+    return max(1, min(world_size, os.cpu_count() or 1))
+
+
+class IOPool:
+    """Tiny wrapper over ThreadPoolExecutor: maps a function over tasks and
+    re-raises the first failure (checkpoint I/O must be all-or-nothing)."""
+
+    def __init__(self, workers: int):
+        self.workers = max(1, workers)
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.workers, thread_name_prefix="ckpt_io")
+
+    def map(self, fn, items):
+        futures = [self._pool.submit(fn, it) for it in items]
+        results, first_error = [], None
+        # drain EVERY future before raising: a failed checkpoint must not
+        # leave straggler tasks still writing into a dir being torn down
+        for f in futures:
+            try:
+                results.append(f.result())
+            except BaseException as e:  # noqa: BLE001
+                if first_error is None:
+                    first_error = e
+        if first_error is not None:
+            raise first_error
+        return results
+
+    def close(self):
+        self._pool.shutdown(wait=False)

@@ -30,16 +30,26 @@ class Cluster:
     """World of logical ranks sharing one fabric + one JAX process."""
 
     def __init__(self, world_size: int, backend_name: str = "mpich",
-                 *, translation: str = "fast", ckpt_dir=None, keep: int = 3):
+                 *, translation: str = "fast", ckpt_dir=None,
+                 keep: int | None = None, ckpt_io=None):
+        from repro.configs import CkptIOConfig
         self.world_size = world_size
         self.backend_name = backend_name
         self.translation = translation
+        if ckpt_io is not None and keep is not None and keep != ckpt_io.keep:
+            raise ValueError(f"conflicting retention: keep={keep} but "
+                             f"ckpt_io.keep={ckpt_io.keep}; set one")
+        self.ckpt_io = ckpt_io or CkptIOConfig(
+            keep=keep if keep is not None else 3)
         self.fabric = Fabric(world_size)
         self.ranks = [RankState(Mana(backend_name, self.fabric, r, world_size,
                                      translation=translation))
                       for r in range(world_size)]
-        self.writer = CheckpointWriter(ckpt_dir, world_size, keep=keep) \
-            if ckpt_dir else None
+        self.writer = CheckpointWriter(
+            ckpt_dir, world_size, keep=self.ckpt_io.keep,
+            codec=self.ckpt_io.codec, incremental=self.ckpt_io.incremental,
+            io_workers=self.ckpt_io.io_workers,
+            chunk_bytes=self.ckpt_io.chunk_bytes) if ckpt_dir else None
         self.events: list = []
         self.restart_count = 0
 
@@ -100,7 +110,12 @@ class Cluster:
         ws = new_world_size or old_ws
         backend = new_backend or self.backend_name
         fresh = Cluster(ws, backend, translation=self.translation,
-                        ckpt_dir=self.writer.base if self.writer else None)
+                        ckpt_dir=self.writer.base if self.writer else None,
+                        ckpt_io=self.ckpt_io)
+        if self.writer is not None:
+            # release the abandoned writer's thread pool (close() drains the
+            # in-flight write; the writer stays queryable via latest())
+            self.writer.close()
         fresh.restart_count = self.restart_count + 1
         # re-bind each new rank from an old rank image (elastic: wrap around)
         for r in range(ws):

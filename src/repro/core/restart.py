@@ -95,9 +95,90 @@ def rebind_objects(mana, snap: dict) -> dict:
 # array state: topology-oblivious load + reshard
 # ---------------------------------------------------------------------------
 
-def load_arrays(ckpt_dir, shardings):
+class _NpzCache:
+    """Bounded LRU of open ``np.load`` handles (legacy v1 images).  The seed
+    loader kept every handle open forever; this evicts + closes past ``cap``
+    and closes everything on exit."""
+
+    def __init__(self, cap: int = 8):
+        from collections import OrderedDict
+        self.cap = cap
+        self._od = OrderedDict()
+
+    def get(self, path):
+        if path in self._od:
+            self._od.move_to_end(path)
+            return self._od[path]
+        npz = np.load(path)
+        self._od[path] = npz
+        while len(self._od) > self.cap:
+            _, old = self._od.popitem(last=False)
+            old.close()
+        return npz
+
+    def close(self):
+        for npz in self._od.values():
+            npz.close()
+        self._od.clear()
+
+
+def _load_leaves_v1(ckpt_dir: Path, leaves_meta: list) -> list:
+    """Legacy (format 1) loader: monolithic per-rank ``arrays.npz`` files."""
+    from repro.core.ckpt_io import resolve_dtype
+    cache = _NpzCache()
+    leaves = []
+    try:
+        for meta in leaves_meta:
+            arr = np.zeros(meta["shape"], dtype=resolve_dtype(meta["dtype"]))
+            for sh in meta["shards"]:
+                data = cache.get(ckpt_dir / sh["file"])[sh["key"]]
+                idx = tuple(slice(a, b) for a, b in sh["index"])
+                arr[idx] = data
+            leaves.append(arr)
+    finally:
+        cache.close()
+    return leaves
+
+
+def _load_leaves_v2(ckpt_dir: Path, manifest: dict, io_workers=None) -> list:
+    """Parallel streaming restore: pre-allocate every leaf once, group shard
+    reads by the (step, rank) file that physically holds the bytes — delta
+    checkpoints point clean shards at a prior step — and fan the groups out
+    over a thread pool.  Each task opens its shard file exactly once."""
+    from repro.core import ckpt_io
+    root = ckpt_dir.parent
+    leaves_meta = manifest["leaves"]
+    leaves = [np.zeros(meta["shape"], dtype=ckpt_io.resolve_dtype(meta["dtype"]))
+              for meta in leaves_meta]
+    groups: dict[tuple, list] = {}
+    for li, meta in enumerate(leaves_meta):
+        for sh in meta["shards"]:
+            # shards written by THIS step live here; clean shards live in the
+            # base step recorded at write time (flat chain: one hop)
+            step = sh.get("step", manifest["step"])
+            groups.setdefault((step, sh["rank"]), []).append((li, sh))
+    ws = manifest["world_size"]
+
+    def _read_group(item):
+        (step, rank), shards = item
+        rdir = root / f"step_{step:08d}" / f"rank{rank:05d}"
+        data = ckpt_io.read_rank_entries(rdir, [sh["key"] for _, sh in shards])
+        for li, sh in shards:
+            idx = tuple(slice(a, b) for a, b in sh["index"])
+            leaves[li][idx] = data[sh["key"]]
+
+    pool = ckpt_io.IOPool(io_workers or ckpt_io.default_workers(ws))
+    try:
+        pool.map(_read_group, groups.items())
+    finally:
+        pool.close()
+    return leaves
+
+
+def load_arrays(ckpt_dir, shardings, *, io_workers=None):
     """Reassemble every leaf from per-rank shard files and place it with the
-    NEW shardings (tree matching the manifest leaf order)."""
+    NEW shardings (tree matching the manifest leaf order).  Handles both the
+    v2 chunked/compressed/incremental format and legacy v1 npz images."""
     ckpt_dir = Path(ckpt_dir)
     manifest = json.loads((ckpt_dir / "manifest.json").read_text())
     # None shardings (single-device runs) must count as leaves
@@ -106,17 +187,12 @@ def load_arrays(ckpt_dir, shardings):
     if len(flat_sh) != len(leaves_meta):
         raise ValueError(f"checkpoint has {len(leaves_meta)} leaves, "
                          f"target tree has {len(flat_sh)}")
-    npz_cache = {}
+    if manifest.get("format", 1) >= 2:
+        leaves = _load_leaves_v2(ckpt_dir, manifest, io_workers=io_workers)
+    else:
+        leaves = _load_leaves_v1(ckpt_dir, leaves_meta)
     out = []
-    for li, meta in enumerate(leaves_meta):
-        arr = np.zeros(meta["shape"], dtype=np.dtype(meta["dtype"]))
-        for sh in meta["shards"]:
-            rank_file = ckpt_dir / sh["file"]
-            if rank_file not in npz_cache:
-                npz_cache[rank_file] = np.load(rank_file)
-            data = npz_cache[rank_file][sh["key"]]
-            idx = tuple(slice(a, b) for a, b in sh["index"])
-            arr[idx] = data
+    for li, arr in enumerate(leaves):
         sharding = flat_sh[li]
         if sharding is None:
             out.append(jax.numpy.asarray(arr))

@@ -7,13 +7,23 @@ jax device state. Single pod: 16x16 = 256 chips (TPU v5e pod slice); multi-pod:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                   # older jax: meshes are Auto-only
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=None):
@@ -26,4 +36,4 @@ def make_host_mesh(shape=None, axes=None):
             shape, axes = (1, n), ("data", "model")
         else:
             shape, axes = (1, 1), ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

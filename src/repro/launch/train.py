@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import steps as ST
-from repro.configs import get_config, smoke_config
+from repro.configs import CkptIOConfig, get_config, smoke_config
 from repro.core import Cluster
 from repro.core.restart import load_arrays, load_manifest, load_rank_state
 from repro.data import DataPipeline
@@ -34,7 +34,7 @@ from repro.sharding import ShardingCtx, rules_for
 class Trainer:
     def __init__(self, cfg, *, batch_size=8, seq_len=64, world_size=2,
                  backend="mpich", ckpt_dir=None, translation="fast",
-                 lr=3e-3, total_steps=1000, seed=0, mesh=None):
+                 lr=3e-3, total_steps=1000, seed=0, mesh=None, ckpt_io=None):
         self.cfg = cfg
         self.batch_size = batch_size
         self.seq_len = seq_len
@@ -45,7 +45,7 @@ class Trainer:
         self.optimizer = make_optimizer(cfg, wsd(lr, max(total_steps // 20, 1),
                                                  total_steps))
         self.cluster = Cluster(world_size, backend, translation=translation,
-                               ckpt_dir=ckpt_dir)
+                               ckpt_dir=ckpt_dir, ckpt_io=ckpt_io)
         self.pipeline = DataPipeline(cfg, batch_size, seq_len,
                                      seed=seed + 1, mana=self.cluster.mana(0))
         self._build_step()
@@ -175,19 +175,35 @@ def main():
     ap.add_argument("--restart-backend", default=None)
     ap.add_argument("--restart-world-size", type=int, default=None)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-codec", default="zlib",
+                    choices=["none", "zlib", "lz4", "int8"],
+                    help="shard codec (int8 is LOSSY — optimizer-moment use)")
+    ap.add_argument("--ckpt-incremental", action="store_true", default=True,
+                    help="write only dirty shards (full every --ckpt-keep'th)")
+    ap.add_argument("--no-ckpt-incremental", dest="ckpt_incremental",
+                    action="store_false")
+    ap.add_argument("--ckpt-io-workers", type=int, default=0,
+                    help="writer/reader pool size (0 = min(world, cpu))")
+    ap.add_argument("--ckpt-keep", type=int, default=3)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    ckpt_io = CkptIOConfig(codec=args.ckpt_codec,
+                           incremental=args.ckpt_incremental,
+                           io_workers=args.ckpt_io_workers,
+                           keep=args.ckpt_keep)
     tr = Trainer(cfg, batch_size=args.batch_size, seq_len=args.seq_len,
                  world_size=args.world_size, backend=args.backend,
                  translation=args.translation, ckpt_dir=args.ckpt_dir,
-                 lr=args.lr, total_steps=args.steps)
+                 lr=args.lr, total_steps=args.steps, ckpt_io=ckpt_io)
     tr.init_state()
     tr.run(args.steps, ckpt_every=args.ckpt_every,
            kill_rank_at=args.kill_rank_at,
            new_world_size_on_restart=args.restart_world_size,
            new_backend_on_restart=args.restart_backend)
     tr.pipeline.stop()
+    if tr.cluster.writer is not None:
+        tr.cluster.writer.wait_idle()   # commit the in-flight checkpoint
     first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
     print(f"done: loss {first:.4f} -> {last:.4f} over {args.steps} steps")
 

@@ -17,6 +17,22 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def quantize_int8_np(x):
+    """Host-side (numpy) twin of :func:`quantize_int8`, shared with the
+    checkpoint ``int8`` codec so wire and disk quantization agree.
+    Returns (q, scale) with ``scale`` a python float (json-able)."""
+    import numpy as np
+    xf = np.asarray(x, dtype=np.float32)
+    scale = max(float(np.max(np.abs(xf))) if xf.size else 0.0, 1e-12) / 127.0
+    q = np.clip(np.rint(xf / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_int8_np(q, scale):
+    import numpy as np
+    return np.asarray(q, dtype=np.float32) * scale
+
+
 def quantize_int8(x):
     """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
     xf = x.astype(jnp.float32)

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+import pytest as _pytest
+_pytest.importorskip("hypothesis")  # optional dep: skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import smoke_config

@@ -1,6 +1,8 @@
 """Unit + property tests for the new virtual-id subsystem (paper §4.2) and the
 legacy baseline (§4.1)."""
 import pytest
+import pytest as _pytest
+_pytest.importorskip("hypothesis")  # optional dep: skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.descriptors import Descriptor, Kind, Strategy, comm_desc, op_desc
