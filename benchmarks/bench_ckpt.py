@@ -32,11 +32,21 @@ APPS = {
 
 # engine-vs-engine cells over the new writer (codec / delta / pool effects):
 # par_zlib is the wall-time cell (no digest tax), par_zlib_inc the delta cell
-# (pays a fused sha256 pass per full checkpoint, skips clean shards after)
+# (pays a fused sha256 pass per full checkpoint, skips clean shards after);
+# the par_* cells run the PR 1 snapshot-all-then-write path (pipeline=False),
+# the pipe_* cells the pipelined double-buffered engine — the blocking_ms
+# before/after pair for the stop-the-world gate
 ENGINES = {
-    "serial_none": CkptIOConfig(codec="none", incremental=False, io_workers=1),
-    "par_zlib": CkptIOConfig(codec="zlib", incremental=False, io_workers=0),
-    "par_zlib_inc": CkptIOConfig(codec="zlib", incremental=True, io_workers=0),
+    "serial_none": CkptIOConfig(codec="none", incremental=False, io_workers=1,
+                                pipeline=False),
+    "par_zlib": CkptIOConfig(codec="zlib", incremental=False, io_workers=0,
+                             pipeline=False),
+    "par_zlib_inc": CkptIOConfig(codec="zlib", incremental=True, io_workers=0,
+                                 pipeline=False),
+    "pipe_zlib": CkptIOConfig(codec="zlib", incremental=False, io_workers=0,
+                              pipeline=True),
+    "pipe_zlib_inc": CkptIOConfig(codec="zlib", incremental=True,
+                                  io_workers=0, pipeline=True),
 }
 
 
@@ -87,15 +97,18 @@ def one(arch, overrides, world=4, engine="par_zlib_inc", steps=2,
                      ckpt_dir=td, total_steps=10, ckpt_io=ENGINES[engine])
         tr.init_state()
         tr.run(steps, log_every=10)
-        # full-checkpoint cost, best-of-3 (container timing is noisy):
-        # stall (synchronous part) vs full write
+        # full-checkpoint cost, best-of-5 (container timing is noisy):
+        # stall (synchronous stop-the-world) vs full write
         total = stall = write_s = 1e9
-        for _ in range(3):
+        timings: dict = {}
+        for _ in range(5):
             tr.cluster.writer.force_full_next()
             tr.step += 1
             t0 = time.perf_counter()
             req = tr.checkpoint()
-            stall = min(stall, time.perf_counter() - t0)
+            this_stall = time.perf_counter() - t0
+            if this_stall < stall:
+                stall, timings = this_stall, dict(req.timings)
             stats = req.wait()
             total = min(total, time.perf_counter() - t0)
             write_s = min(write_s, stats.get("write_s", total))
@@ -126,6 +139,8 @@ def one(arch, overrides, world=4, engine="par_zlib_inc", steps=2,
             "arch": arch, "engine": engine, "world": world,
             "mb_per_rank": per_rank_mb,
             "ckpt_s": total, "stall_s": stall, "write_s": write_s,
+            "blocking_ms": stall * 1e3,
+            "timings": timings,
             "mb_s_per_rank": rate,
             "bytes_total": nbytes,
             "bytes_written_full": stats["bytes_written"],
@@ -148,6 +163,7 @@ def rows():
                     seed_ref=(engine == "par_zlib_inc"))
             extra = (f"MB/rank={m['mb_per_rank']:.1f};"
                      f"ckpt_s={m['ckpt_s']:.3f};stall_s={m['stall_s']:.3f};"
+                     f"blocking_ms={m['blocking_ms']:.2f};"
                      f"MB/s/rank={m['mb_s_per_rank']:.1f};"
                      f"delta_ratio={m['delta_ratio']:.3f};"
                      f"restart_s={m['restore_s']:.3f}")
@@ -158,24 +174,126 @@ def rows():
     return out
 
 
+def blocking_ab(arch="granite-3-2b", overrides=None, world=4, trials=9):
+    """Stop-the-world A/B on ONE model state: the PR 1 path (spawn-per-
+    checkpoint drain + snapshot-all-then-write) vs the pipelined engine.
+    Paper methodology (bench_overhead): median over ALTERNATING trials so
+    scheduler noise on the shared host hits both variants equally."""
+    from repro.core.ckpt import CheckpointWriter
+
+    cfg = smoke_config(arch)
+    kw = dict(overrides or {})
+    if cfg.block == "xlstm":
+        kw.pop("n_layers", None)
+    cfg = replace(cfg, **kw)
+    with tempfile.TemporaryDirectory() as td:
+        tr = Trainer(cfg, batch_size=2, seq_len=32, world_size=world,
+                     ckpt_dir=Path(td) / "pipe", total_steps=10,
+                     ckpt_io=ENGINES["pipe_zlib"])
+        tr.init_state()
+        tr.run(2, log_every=10)
+        buf_writer = CheckpointWriter(Path(td) / "buf", world, codec="zlib",
+                                      pipeline=False)
+        cells = {"buffered": (ENGINES["par_zlib"], buf_writer),
+                 "pipelined": (ENGINES["pipe_zlib"], tr.cluster.writer)}
+        samples = {name: [] for name in cells}
+        timings = {name: {} for name in cells}
+        for i in range(trials + 1):
+            for name, (io_cfg, writer) in cells.items():
+                tr.cluster.ckpt_io = io_cfg
+                tr.cluster.writer = writer
+                writer.force_full_next()
+                tr.step += 1
+                req = tr.checkpoint()
+                req.wait()
+                if i == 0:
+                    continue          # warm-up round: pools, arenas, caches
+                samples[name].append(req.timings["blocking_ms"])
+                timings[name] = dict(req.timings)
+        for writer in (buf_writer, tr.cluster.writer):
+            writer.close()
+        tr.pipeline.stop()
+    med = {name: sorted(v)[len(v) // 2] for name, v in samples.items()}
+    return {"arch": arch, "world": world, "trials": trials,
+            "blocking_ms_buffered": med["buffered"],
+            "blocking_ms_pipelined": med["pipelined"],
+            "blocking_reduction": med["buffered"]
+            / max(med["pipelined"], 1e-9),
+            "timings_buffered": timings["buffered"],
+            "timings_pipelined": timings["pipelined"]}
+
+
+def pipeline_digest_match(world=4) -> bool:
+    """Bit-identity gate: the pipelined engine must produce byte-identical
+    shard content to the buffered path — same per-entry sha256 digests in
+    every rank index, and identical arrays after a restore round trip."""
+    import jax.numpy as jnp
+
+    from repro.core import ckpt_io
+    from repro.core.ckpt import CheckpointWriter
+    from repro.core.restart import load_arrays
+
+    rng = np.random.default_rng(0)
+    arrays = {"w": jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32)),
+              "m": jnp.zeros((256, 128), jnp.float32),
+              "t": jnp.asarray(rng.integers(0, 1000, 4096).astype(np.int32))}
+    digests, loaded = {}, {}
+    with tempfile.TemporaryDirectory() as td:
+        for name, pipe in (("buffered", False), ("pipelined", True)):
+            w = CheckpointWriter(Path(td) / name, world, codec="zlib",
+                                 incremental=True, pipeline=pipe)
+            w.checkpoint(1, arrays, None, {}).wait()
+            ck = w.latest()
+            digests[name] = {
+                f"{r}:{k}": e["digest"]
+                for r in range(world)
+                for k, e in ckpt_io.read_rank_index(
+                    ck / f"rank{r:05d}")["entries"].items()}
+            loaded[name] = load_arrays(ck, {k: None for k in arrays})
+            w.close()
+    if digests["buffered"] != digests["pipelined"]:
+        return False
+    return all(np.array_equal(np.asarray(loaded["buffered"][k]),
+                              np.asarray(loaded["pipelined"][k]))
+               for k in arrays)
+
+
 def smoke(apps=("granite-3-2b",), world=4):
-    """Tiny before/after for `benchmarks/run.py --smoke` against the literal
-    seed serial-savez writer/reader: wall-time from the parallel+compressed
-    cell, delta ratio + parallel restore from the incremental cell."""
+    """Tiny before/after for `benchmarks/run.py --smoke`.
+
+    Two gates ride on this: the PR 1 write-path gate (parallel+compressed
+    engine vs the literal seed serial-savez writer/reader) and the PR 2
+    stop-the-world gate (pipelined snapshot blocking_ms vs the buffered
+    path, plus bit-identical shard digests)."""
     results = []
     for arch in apps:
         comp = one(arch, APPS[arch], world=world, engine="par_zlib",
                    seed_ref=True)
         seed = comp.pop("seed_ref")
         inc = one(arch, APPS[arch], world=world, engine="par_zlib_inc")
+        pipe = one(arch, APPS[arch], world=world, engine="pipe_zlib")
+        pipe_inc = one(arch, APPS[arch], world=world, engine="pipe_zlib_inc")
+        # the blocking A/B runs at a larger world: the legacy drain's cost
+        # scales with rank count (thread spawn per rank per checkpoint)
+        # while the adaptive drain stays flat — exactly the effect the
+        # stop-the-world gate exists to keep
+        ab = blocking_ab(arch, APPS[arch], world=2 * world)
         results.append({
             "arch": arch,
             "seed": seed,
             "par_zlib": comp,
             "par_zlib_inc": inc,
+            "pipe_zlib": pipe,
+            "pipe_zlib_inc": pipe_inc,
             "write_speedup": seed["write_s"] / max(comp["write_s"], 1e-9),
             "delta_ratio": inc["delta_ratio"],
+            "pipe_delta_ratio": pipe_inc["delta_ratio"],
             "restore_speedup": seed["read_s"] / max(inc["array_load_s"], 1e-9),
+            "blocking_ms_buffered": ab["blocking_ms_buffered"],
+            "blocking_ms_pipelined": ab["blocking_ms_pipelined"],
+            "blocking_reduction": ab["blocking_reduction"],
+            "blocking_ab": ab,
+            "digests_match": pipeline_digest_match(world),
         })
     return results
 

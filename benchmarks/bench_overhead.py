@@ -65,6 +65,41 @@ def _median(xs):
     return xs[len(xs) // 2]
 
 
+def blocking_rows(arch="granite-3-2b", world=4, trials=5):
+    """The OTHER runtime overhead the user feels: the checkpoint
+    stop-the-world window (drain + snapshot + enqueue = ``blocking_ms``)
+    punched into the training loop, buffered PR 1 path vs the pipelined
+    double-buffered engine on the same model state."""
+    import tempfile
+
+    from repro.configs import CkptIOConfig
+    from repro.launch.train import Trainer
+
+    out = []
+    for name, pipe in (("buffered", False), ("pipelined", True)):
+        with tempfile.TemporaryDirectory() as td:
+            tr = Trainer(smoke_config(arch), batch_size=2, seq_len=32,
+                         world_size=world, ckpt_dir=td, total_steps=10,
+                         ckpt_io=CkptIOConfig(codec="zlib", pipeline=pipe))
+            tr.init_state()
+            tr.run(1, log_every=10)
+            best, tims = 1e9, {}
+            for _ in range(trials):
+                tr.step += 1
+                req = tr.checkpoint()
+                if req.timings["blocking_ms"] < best:
+                    best, tims = req.timings["blocking_ms"], dict(req.timings)
+                req.wait()
+            tr.pipeline.stop()
+            tr.cluster.writer.close()
+            out.append((f"ckpt_blocking_{arch}_{name}", best * 1e3,
+                        f"blocking_ms={best:.3f};"
+                        f"drain_ms={tims.get('drain_ms', 0):.3f};"
+                        f"snapshot_ms={tims.get('snapshot_ms', 0):.3f};"
+                        f"enqueue_ms={tims.get('enqueue_ms', 0):.3f}"))
+    return out
+
+
 def rows(backends=("mpich", "openmpi", "exampi"), trials=5):
     out = []
     for arch, calls in APPS:
@@ -88,6 +123,7 @@ def rows(backends=("mpich", "openmpi", "exampi"), trials=5):
                         f"native_us={1e6*t_native/STEPS:.0f};"
                         f"virtId_ov={ov_f:.1f}%;legacy_ov={ov_s:.1f}%;"
                         f"calls/step={calls}"))
+    out.extend(blocking_rows(trials=trials))
     return out
 
 

@@ -19,8 +19,12 @@ import traceback
 
 
 def smoke(out_path: str) -> None:
-    """Tiny ckpt_io perf gate: seed-like serial writer vs parallel + zlib +
-    incremental engine; writes the comparison to ``out_path``."""
+    """Tiny ckpt perf gates: seed-like serial writer vs parallel + zlib +
+    incremental engine (write path), and buffered vs pipelined snapshot
+    (stop-the-world path); writes the comparison to ``out_path``.
+
+    Exits non-zero on ANY gate failure so CI actually enforces the perf
+    trajectory instead of just recording it."""
     from benchmarks import bench_ckpt
     results = bench_ckpt.smoke()
     payload = {"bench": "ckpt_io_smoke", "results": results}
@@ -31,11 +35,27 @@ def smoke(out_path: str) -> None:
         line = (f"ckpt_smoke_{r['arch']}: "
                 f"write_speedup={r['write_speedup']:.2f}x "
                 f"delta_ratio={r['delta_ratio']:.3f} "
-                f"restore_speedup={r['restore_speedup']:.2f}x")
+                f"restore_speedup={r['restore_speedup']:.2f}x "
+                f"blocking_ms={r['blocking_ms_buffered']:.2f}->"
+                f"{r['blocking_ms_pipelined']:.2f} "
+                f"({r['blocking_reduction']:.2f}x) "
+                f"digests_match={r['digests_match']}")
         print(line, flush=True)
         # acceptance: parallel+compressed beats seed wall-time; an
-        # unchanged-state second checkpoint writes <20% of the first's bytes
+        # unchanged-state second checkpoint writes <20% of the first's
+        # bytes; the pipelined snapshot at least halves the blocking
+        # window AND stays bit-identical to the buffered path
         if r["write_speedup"] < 1.0 or r["delta_ratio"] >= 0.2:
+            print(f"GATE FAILED: write path ({r['arch']})", flush=True)
+            ok = False
+        if r["blocking_reduction"] < 2.0:
+            print(f"GATE FAILED: blocking_reduction "
+                  f"{r['blocking_reduction']:.2f}x < 2.0x ({r['arch']})",
+                  flush=True)
+            ok = False
+        if not r["digests_match"]:
+            print(f"GATE FAILED: pipelined shard digests diverge "
+                  f"({r['arch']})", flush=True)
             ok = False
     print(f"wrote {out_path}")
     if not ok:

@@ -172,12 +172,19 @@ class CkptIOConfig:
 
     Conservative defaults (lossless, non-incremental) keep raw Cluster
     behavior bit-stable; the training driver opts into zlib + incremental
-    via CLI flags.  ``io_workers=0`` -> min(world_size, cpu)."""
+    via CLI flags.  ``io_workers=0`` -> min(world_size, cpu).
+
+    ``pipeline`` selects the pipelined double-buffered snapshot engine
+    (lossless — identical bytes on disk); ``pipeline=False`` is the
+    snapshot-all-then-write PR 1 path, kept for A/B measurement."""
     codec: str = "none"               # none | zlib | lz4 | int8 (lossy)
     incremental: bool = False         # delta checkpoints (full every keep-th)
     io_workers: int = 0               # writer/reader pool size (0 = auto)
     keep: int = 3                     # completed checkpoints retained by GC
     chunk_bytes: int = 4 << 20        # raw bytes per streamed chunk
+    pipeline: bool = True             # pipelined double-buffered snapshot
+    snapshot_batch_mb: float = 8.0    # raw MB per batched device_get group
+    drain_backoff: float = 5e-5       # first quiesce poll sleep (s); doubles
 
 
 @dataclass(frozen=True)

@@ -1,6 +1,7 @@
 """MANA core: implementation-oblivious transparent checkpoint-restart."""
 from repro.core.backends import BACKENDS, Fabric, make_backend
 from repro.core.ckpt import CheckpointWriter
+from repro.core.ckpt_pipeline import HostArena, SnapshotPipeline, plan_snapshot
 from repro.core.coordinator import Cluster
 from repro.core.descriptors import Descriptor, Kind, Strategy
 from repro.core.drain import drain_rank, drain_world
@@ -9,7 +10,8 @@ from repro.core.vid import VidTable, compute_ggid, pack_vid, vid_index, vid_kind
 
 __all__ = [
     "BACKENDS", "Fabric", "make_backend", "CheckpointWriter", "Cluster",
-    "Descriptor", "Kind", "Strategy", "drain_rank", "drain_world", "Mana",
+    "Descriptor", "Kind", "Strategy", "drain_rank", "drain_world",
+    "HostArena", "SnapshotPipeline", "plan_snapshot", "Mana",
     "handle_vid", "make_handle", "VidTable", "compute_ggid", "pack_vid",
     "vid_index", "vid_kind",
 ]

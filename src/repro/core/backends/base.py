@@ -128,6 +128,13 @@ class Backend(abc.ABC):
     def test(self, request) -> bool:
         ...
 
+    def test_all(self, requests) -> list:
+        """MPI_Testall-style batched completion test: one lower-half call for
+        the whole request vector instead of one round trip per request.  The
+        drain protocol polls through this, so flavors override it with their
+        native batched form; the default is the portable per-request loop."""
+        return [self.test(r) for r in requests]
+
     def alltoall(self, comm, payloads: list) -> None:
         ranks = self.comm_ranks(comm)
         for dst, payload in zip(ranks, payloads):
@@ -137,8 +144,9 @@ class Backend(abc.ABC):
         ranks = self.comm_ranks(comm)
         return [self.fabric.recv(self.rank, src, 70000) for src in ranks]
 
-    def barrier(self, expected: int | None = None) -> None:
-        self.fabric.barrier(self.rank, expected)
+    def barrier(self, expected: int | None = None,
+                timeout: float | None = None) -> None:
+        self.fabric.barrier(self.rank, expected, timeout)
 
     # -- teardown -----------------------------------------------------------
     def shutdown(self) -> None:

@@ -12,6 +12,7 @@ rank processes; the interface is the same.
 from __future__ import annotations
 
 import threading
+import time as _time
 from collections import deque
 
 
@@ -65,8 +66,15 @@ class Fabric:
             return sum(len(q) for (dst, _, _), q in self._queues.items()
                        if dst == rank)
 
-    def barrier(self, rank: int, expected: int | None = None):
+    def barrier(self, rank: int, expected: int | None = None,
+                timeout: float | None = None):
+        """Meet ``expected`` ranks.  ``timeout`` (seconds) bounds the wait —
+        on expiry the arrival is withdrawn (so the barrier state stays
+        consistent for the next round) and TimeoutError raised; the drain
+        protocol uses this so one failed rank can never park the others'
+        pool threads forever."""
         expected = expected or self.world_size
+        deadline = None if timeout is None else _time.time() + timeout
         with self._barrier_cv:
             gen = self._barrier_gen
             self._barrier_count += 1
@@ -76,4 +84,10 @@ class Fabric:
                 self._barrier_cv.notify_all()
             else:
                 while self._barrier_gen == gen:
-                    self._barrier_cv.wait(timeout=30)
+                    wait = 30.0 if deadline is None else deadline - _time.time()
+                    if wait <= 0:
+                        self._barrier_count = max(0, self._barrier_count - 1)
+                        raise TimeoutError(
+                            f"barrier timed out: rank {rank} waited "
+                            f"{timeout}s for {expected} arrivals")
+                    self._barrier_cv.wait(timeout=min(wait, 30.0))

@@ -110,3 +110,11 @@ class MpichBackend(Backend):
         st = self._deref("request", request)
         st["done"] = True  # in-process fabric delivers eagerly
         return st["done"]
+
+    def test_all(self, requests):
+        # native MPI_Testall: one pass over the 2-level table, derefing the
+        # whole vector before flipping completion flags (single host call)
+        structs = [self._deref("request", r) for r in requests]
+        for st in structs:
+            st["done"] = True
+        return [st["done"] for st in structs]

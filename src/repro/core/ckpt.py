@@ -8,16 +8,20 @@ restart):
   * drained in-flight messages,
   * data-iterator state, RNG key, step counter.
 
-Writes are asynchronous and double-buffered: device->host snapshots happen at
-checkpoint() call time (so training may continue), file I/O happens on a
-writer thread which fans per-rank shard files out over a thread pool
-(``ckpt_io.IOPool``), and the manifest + COMMIT marker land atomically at the
-end.  Per-rank write durations are recorded for straggler analysis.
+Writes are asynchronous and PIPELINED: the blocking window covers only the
+batched device->host transfer (``ckpt_pipeline``: rank-aligned batches into a
+double-buffered arena pair, each handed to the ``ckpt_io`` writer pool the
+moment it lands), and the caller resumes as soon as the last batch is
+enqueued.  Digesting, compression, file I/O, manifest assembly and the COMMIT
+marker all happen behind the trainer's back; per-rank write durations are
+recorded for straggler analysis.  The pre-pipeline path (snapshot everything,
+then write) is kept behind ``pipeline=False`` for A/B measurement.
 
 The data plane (chunked shard container, codecs, digests) lives in
-``repro.core.ckpt_io``; this module owns the control plane: full-vs-delta
-policy, manifest assembly, atomic publish, and GC that never deletes a step a
-live delta chain depends on (see docs/checkpoint_format.md)."""
+``repro.core.ckpt_io``; the blocking-path plane (snapshot planning, batching,
+arenas) in ``repro.core.ckpt_pipeline``; this module owns the control plane:
+full-vs-delta policy, manifest assembly, atomic publish, and GC that never
+deletes a step a live delta chain depends on (see docs/checkpoint_format.md)."""
 from __future__ import annotations
 
 import json
@@ -29,16 +33,15 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.core import ckpt_io
-
-
-def _rank_of_device(dev, devices_flat, world_size):
-    per = max(1, len(devices_flat) // world_size)
-    return min(dev.id // per, world_size - 1) if hasattr(dev, "id") else 0
+from repro.core import ckpt_io, ckpt_pipeline
 
 
 def snapshot_shards(tree, world_size, mesh):
-    """Device->host snapshot, grouped by owning rank.
+    """Device->host snapshot, grouped by owning rank — the PR 1 blocking
+    path, preserved VERBATIM as the measured before/after baseline (one
+    blocking ``_to_np`` per shard, every copy done before the writer pool
+    sees a byte).  The pipelined engine plans with
+    ``ckpt_pipeline.plan_snapshot`` and transfers in batches instead.
 
     Returns (leaves_meta, {rank: {key: np.ndarray}}).
     Every addressable shard is copied host-side NOW; the caller may keep
@@ -48,7 +51,8 @@ def snapshot_shards(tree, world_size, mesh):
     clean shards at a PRIOR step's file)."""
     leaves, _ = jax.tree.flatten(tree)
     devices_flat = list(mesh.devices.flatten()) if mesh is not None else []
-    per_rank: dict[int, dict[str, np.ndarray]] = {r: {} for r in range(world_size)}
+    per_rank: dict[int, dict[str, np.ndarray]] = {r: {}
+                                                  for r in range(world_size)}
     leaves_meta = []
     for li, leaf in enumerate(leaves):
         meta = {"shape": list(leaf.shape),
@@ -71,7 +75,8 @@ def snapshot_shards(tree, world_size, mesh):
                 if norm in seen:      # replicated shard: store once
                     continue
                 seen.add(norm)
-                rank = _rank_of_device(sh.device, devices_flat, world_size)
+                rank = ckpt_pipeline._rank_of_device(sh.device, devices_flat,
+                                                     world_size)
                 key = f"{li}.{si}"
                 per_rank[rank][key] = _to_np(sh.data)
                 meta["shards"].append({"rank": rank, "key": key,
@@ -89,13 +94,18 @@ def _to_np(x):
 
 class CheckpointRequest:
     """Async handle for an in-flight checkpoint (a REQUEST-kind object: the
-    drain protocol completes it before the next snapshot)."""
+    drain protocol completes it before the next snapshot).  ``timings``
+    carries the stop-the-world breakdown in milliseconds — drain_ms /
+    snapshot_ms / enqueue_ms / blocking_ms filled at call time, persist_ms
+    once the background write commits."""
 
     def __init__(self, directory: Path):
         self.directory = directory
         self.done = threading.Event()
         self.error = None
         self.write_stats: dict = {}
+        self.timings: dict = {}
+        self.release = lambda: None   # pipelined: opens the sink floodgates
 
     def wait(self, timeout=120.0):
         if not self.done.wait(timeout):
@@ -106,21 +116,26 @@ class CheckpointRequest:
 
 
 class CheckpointWriter:
-    """Double-buffered async writer over the parallel/incremental/compressed
+    """Pipelined async writer over the parallel/incremental/compressed
     ckpt_io engine.  At most one checkpoint is in flight; a new checkpoint()
     drains the previous one first.
 
     Args beyond the seed writer:
-      codec        — "none" | "zlib" | "lz4" | "int8" (lossy, opt-in)
-      incremental  — write only shards whose content digest changed, with a
-                     full checkpoint every ``keep``-th so chains stay short
-      io_workers   — writer/reader pool size; 0 -> min(world_size, cpu)
-      chunk_bytes  — raw bytes per streamed chunk"""
+      codec             — "none" | "zlib" | "lz4" | "int8" (lossy, opt-in)
+      incremental       — write only shards whose content digest changed,
+                          with a full checkpoint every ``keep``-th
+      io_workers        — writer/reader pool size; 0 -> min(world_size, cpu)
+      chunk_bytes       — raw bytes per streamed chunk
+      pipeline          — pipelined snapshot (False -> snapshot-all-then-
+                          write, the PR 1 path, kept for A/B)
+      snapshot_batch_mb — raw MB per batched device_get group"""
 
     def __init__(self, base_dir, world_size: int, keep: int = 3, *,
                  codec: str = "none", incremental: bool = False,
                  io_workers: int = 0,
-                 chunk_bytes: int = ckpt_io.DEFAULT_CHUNK_BYTES):
+                 chunk_bytes: int = ckpt_io.DEFAULT_CHUNK_BYTES,
+                 pipeline: bool = True,
+                 snapshot_batch_mb: float = ckpt_pipeline.DEFAULT_BATCH_MB):
         self.base = Path(base_dir)
         self.base.mkdir(parents=True, exist_ok=True)
         self.world_size = world_size
@@ -130,6 +145,11 @@ class CheckpointWriter:
         self.incremental = incremental
         self.chunk_bytes = chunk_bytes
         self.io_workers = io_workers or ckpt_io.default_workers(world_size)
+        self.pipeline = pipeline
+        self.snapshot_batch_bytes = int(snapshot_batch_mb * (1 << 20))
+        # the double-buffered arena pair is shared across checkpoints so the
+        # steady state never reallocates host memory
+        self._arenas = (ckpt_pipeline.HostArena(), ckpt_pipeline.HostArena())
         self._pool: ckpt_io.IOPool | None = None
         self._inflight: CheckpointRequest | None = None
         # (rank:key) -> {"digest", "step", "file"}: where each shard's bytes
@@ -144,22 +164,152 @@ class CheckpointWriter:
         return self._pool
 
     def checkpoint(self, step: int, arrays, mesh, rank_states: dict,
-                   extra_meta: dict | None = None) -> CheckpointRequest:
+                   extra_meta: dict | None = None, *,
+                   defer_release: bool = False) -> CheckpointRequest:
         """arrays: pytree of jax.Arrays; rank_states: {rank: json-able dict}
-        (each rank's Mana.snapshot() + iterator/rng state)."""
+        (each rank's Mana.snapshot() + iterator/rng state).
+
+        ``defer_release=True`` (pipelined mode) hands the sink floodgate to
+        the caller as ``req.release`` so the last scrap of blocking-path
+        bookkeeping above this layer can finish before background encode
+        starts contending for the GIL; the caller MUST invoke it."""
         if self._inflight is not None:
             self._inflight.wait()
         tdir = self.base / f"step_{step:08d}.tmp"
         fdir = self.base / f"step_{step:08d}"
         if tdir.exists():
             shutil.rmtree(tdir)
-        t0 = time.time()
-        leaves_meta, per_rank = snapshot_shards(arrays, self.world_size, mesh)
-        snap_s = time.time() - t0
         full = (not self.incremental or not self._digest_table
                 or self._since_full >= self.keep)
         req = CheckpointRequest(fdir)
+        if self.pipeline:
+            self._checkpoint_pipelined(step, arrays, mesh, rank_states,
+                                       extra_meta, tdir, fdir, full, req)
+            if not defer_release:
+                req.release()
+        else:
+            self._checkpoint_buffered(step, arrays, mesh, rank_states,
+                                      extra_meta, tdir, fdir, full, req)
+        self._inflight = req
+        return req
+
+    # -- pipelined path ------------------------------------------------------
+    def _checkpoint_pipelined(self, step, arrays, mesh, rank_states,
+                              extra_meta, tdir, fdir, full, req):
+        """Blocking work = plan + batched D2H + enqueue.  Everything else —
+        digest/delta decisions, compression, file writes, manifest, COMMIT —
+        runs on the pool + a finalize thread while training continues."""
+        leaves_meta, items = ckpt_pipeline.plan_snapshot(
+            arrays, self.world_size, mesh)
+        pool = self._get_pool()
+        lossy = self.codec.lossy
+        writers: dict[int, ckpt_io.RankShardWriter] = {}
+        wlock = threading.Lock()
+        per_rank = {r: {"keys": [], "digests": {}, "fresh": set(),
+                        "raw_bytes": 0, "seconds": 0.0,
+                        "lock": threading.Lock()}
+                    for r in range(self.world_size)}
+
+        def _writer_for(rank):
+            with wlock:
+                w = writers.get(rank)
+                if w is None:
+                    w = writers[rank] = ckpt_io.RankShardWriter(
+                        tdir / f"rank{rank:05d}", self.codec,
+                        self.chunk_bytes)
+                return w
+
+        def sink(rank, its, views):
+            """Consume one landed batch: per-shard delta decision + append
+            into the rank's shard container.  Runs on pool threads."""
+            t1 = time.perf_counter()
+            w = _writer_for(rank)
+            out = []
+            for it, view in zip(its, views):
+                digest, fresh = None, True
+                if self.incremental:
+                    if lossy or not full:
+                        digest = ckpt_io.shard_digest(view)
+                    if not full:
+                        prev = self._digest_table.get(
+                            f"{rank}:{it.key}", {}).get("digest")
+                        fresh = prev != digest
+                if fresh:
+                    digest = w.add(it.key, view, digest=digest,
+                                   compute_digest=self.incremental
+                                   and not lossy)
+                out.append((it, digest, fresh))
+            pr = per_rank[rank]
+            with pr["lock"]:
+                for it, digest, fresh in out:
+                    pr["keys"].append(it.key)
+                    pr["raw_bytes"] += it.nbytes
+                    if digest is not None:
+                        pr["digests"][it.key] = digest
+                    if fresh:
+                        pr["fresh"].add(it.key)
+                pr["seconds"] += time.perf_counter() - t1
+
+        pipe = ckpt_pipeline.SnapshotPipeline(
+            pool, batch_bytes=self.snapshot_batch_bytes, arenas=self._arenas)
+        res = pipe.run(items, sink)
+        req.timings["snapshot_ms"] = res["snapshot_ms"]
+        req.timings["enqueue_ms"] = res["enqueue_ms"]
+        req.write_stats["device_to_host_s"] = round(
+            res["snapshot_ms"] / 1e3, 4)
+        req.write_stats["snapshot_batches"] = res["batches"]
+
+        def _finalize():
+            try:
+                t_write = time.time()
+                first_err = None
+                for f in res["futures"]:
+                    try:
+                        f.result()
+                    except BaseException as e:  # noqa: BLE001
+                        if first_err is None:
+                            first_err = e
+                if first_err is not None:
+                    raise first_err
+                # stable once every sink future has resolved
+                req.write_stats["arena_spills"] = res["counters"]["spills"]
+                results = []
+                for r in range(self.world_size):
+                    st = _writer_for(r).finish()   # ranks w/o shards: empty
+                    (tdir / f"rank{r:05d}" / "state.json").write_text(
+                        json.dumps(rank_states.get(r, {})))
+                    pr = per_rank[r]
+                    results.append({"rank": r, "keys": pr["keys"],
+                                    "digests": pr["digests"],
+                                    "fresh": pr["fresh"],
+                                    "enc_bytes": st["enc_bytes"],
+                                    "fresh_raw_bytes": st["raw_bytes"],
+                                    "raw_bytes": pr["raw_bytes"],
+                                    "seconds": round(pr["seconds"], 4)})
+                self._publish(step, mesh, leaves_meta, results, full,
+                              extra_meta, tdir, fdir, req, t_write)
+            except Exception as e:  # noqa: BLE001
+                req.error = e
+                for w in writers.values():
+                    w.abort()
+            finally:
+                req.done.set()
+
+        # finalize rides the pool rather than a fresh thread (spawn is
+        # blocking-window cost): sinks were submitted first, so FIFO order
+        # guarantees they schedule before the finalize task that awaits them
+        pool.submit(_finalize)
+        req.release = res["release"]
+
+    # -- buffered (PR 1) path ------------------------------------------------
+    def _checkpoint_buffered(self, step, arrays, mesh, rank_states,
+                             extra_meta, tdir, fdir, full, req):
+        t0 = time.time()
+        leaves_meta, per_rank = snapshot_shards(arrays, self.world_size, mesh)
+        snap_s = time.time() - t0
         req.write_stats["device_to_host_s"] = round(snap_s, 4)
+        req.timings["snapshot_ms"] = round(snap_s * 1e3, 3)
+        req.timings["enqueue_ms"] = 0.0
 
         def _write_rank(rank: int):
             t1 = time.time()
@@ -204,74 +354,82 @@ class CheckpointWriter:
                 t_write = time.time()
                 results = self._get_pool().map(_write_rank,
                                                range(self.world_size))
-                # resolve each shard to the step dir that holds its bytes
-                new_table: dict[str, dict] = {}
-                src: dict[tuple, dict] = {}
-                for r in results:
-                    rank = r["rank"]
-                    rfile = f"rank{rank:05d}/{ckpt_io.BIN_NAME}"
-                    for k in r["keys"]:
-                        tk = f"{rank}:{k}"
-                        if k in r["fresh"]:
-                            ent = {"digest": r["digests"].get(k),
-                                   "step": step, "file": rfile}
-                        else:
-                            ent = dict(self._digest_table[tk])
-                        new_table[tk] = ent
-                        src[(rank, k)] = ent
-                for meta in leaves_meta:
-                    for sh in meta["shards"]:
-                        ent = src[(sh["rank"], sh["key"])]
-                        sh["step"] = ent["step"]
-                        sh["file"] = ent["file"]
-                base_steps = sorted({sh["step"] for meta in leaves_meta
-                                     for sh in meta["shards"]} - {step})
-                total = sum(r["raw_bytes"] for r in results)
-                written = sum(r["enc_bytes"] for r in results)
-                fresh_shards = sum(len(r["fresh"]) for r in results)
-                total_shards = sum(len(r["digests"]) for r in results)
-                per_rank_s = {r["rank"]: r["seconds"] for r in results}
-                manifest = {
-                    "format": ckpt_io.FORMAT_VERSION,
-                    "step": step,
-                    "world_size": self.world_size,
-                    "mesh": {"shape": list(mesh.devices.shape),
-                             "axes": list(mesh.axis_names)} if mesh is not None else None,
-                    "leaves": leaves_meta,
-                    "codec": self.codec_name,
-                    "incremental": self.incremental,
-                    "full": full,
-                    "base_steps": base_steps,
-                    "bytes_total": total,
-                    "bytes_written": written,
-                    "delta": {"fresh_shards": fresh_shards,
-                              "total_shards": total_shards},
-                    "per_rank_write_s": per_rank_s,
-                    "straggler_rank": max(per_rank_s, key=per_rank_s.get)
-                    if per_rank_s else 0,
-                    **(extra_meta or {}),
-                }
-                (tdir / "manifest.json").write_text(json.dumps(manifest))
-                (tdir / "COMMIT").write_text("ok")
-                if fdir.exists():
-                    shutil.rmtree(fdir)
-                tdir.rename(fdir)       # atomic publish
-                self._digest_table = new_table
-                self._since_full = 1 if full else self._since_full + 1
-                req.write_stats.update(
-                    bytes_total=total, bytes_written=written, full=full,
-                    fresh_shards=fresh_shards, total_shards=total_shards,
-                    write_s=round(time.time() - t_write, 4),
-                    per_rank_write_s=per_rank_s)
-                self._gc()
+                self._publish(step, mesh, leaves_meta, results, full,
+                              extra_meta, tdir, fdir, req, t_write)
             except Exception as e:  # noqa: BLE001
                 req.error = e
             finally:
                 req.done.set()
 
         threading.Thread(target=_write, daemon=True).start()
-        self._inflight = req
-        return req
+
+    # -- shared publish tail -------------------------------------------------
+    def _publish(self, step, mesh, leaves_meta, results, full, extra_meta,
+                 tdir, fdir, req, t_write):
+        """Resolve shard locations, assemble the manifest, COMMIT, atomically
+        publish, roll the digest table forward, GC.  Runs on the background
+        writer/finalize thread for both snapshot paths."""
+        new_table: dict[str, dict] = {}
+        src: dict[tuple, dict] = {}
+        for r in results:
+            rank = r["rank"]
+            rfile = f"rank{rank:05d}/{ckpt_io.BIN_NAME}"
+            for k in r["keys"]:
+                tk = f"{rank}:{k}"
+                if k in r["fresh"]:
+                    ent = {"digest": r["digests"].get(k),
+                           "step": step, "file": rfile}
+                else:
+                    ent = dict(self._digest_table[tk])
+                new_table[tk] = ent
+                src[(rank, k)] = ent
+        for meta in leaves_meta:
+            for sh in meta["shards"]:
+                ent = src[(sh["rank"], sh["key"])]
+                sh["step"] = ent["step"]
+                sh["file"] = ent["file"]
+        base_steps = sorted({sh["step"] for meta in leaves_meta
+                             for sh in meta["shards"]} - {step})
+        total = sum(r["raw_bytes"] for r in results)
+        written = sum(r["enc_bytes"] for r in results)
+        fresh_shards = sum(len(r["fresh"]) for r in results)
+        total_shards = sum(len(r["digests"]) for r in results)
+        per_rank_s = {r["rank"]: r["seconds"] for r in results}
+        manifest = {
+            "format": ckpt_io.FORMAT_VERSION,
+            "step": step,
+            "world_size": self.world_size,
+            "mesh": {"shape": list(mesh.devices.shape),
+                     "axes": list(mesh.axis_names)} if mesh is not None else None,
+            "leaves": leaves_meta,
+            "codec": self.codec_name,
+            "incremental": self.incremental,
+            "full": full,
+            "base_steps": base_steps,
+            "bytes_total": total,
+            "bytes_written": written,
+            "delta": {"fresh_shards": fresh_shards,
+                      "total_shards": total_shards},
+            "per_rank_write_s": per_rank_s,
+            "straggler_rank": max(per_rank_s, key=per_rank_s.get)
+            if per_rank_s else 0,
+            **(extra_meta or {}),
+        }
+        (tdir / "manifest.json").write_text(json.dumps(manifest))
+        (tdir / "COMMIT").write_text("ok")
+        if fdir.exists():
+            shutil.rmtree(fdir)
+        tdir.rename(fdir)       # atomic publish
+        self._digest_table = new_table
+        self._since_full = 1 if full else self._since_full + 1
+        persist_s = time.time() - t_write
+        req.timings["persist_ms"] = round(persist_s * 1e3, 3)
+        req.write_stats.update(
+            bytes_total=total, bytes_written=written, full=full,
+            fresh_shards=fresh_shards, total_shards=total_shards,
+            write_s=round(persist_s, 4),
+            per_rank_write_s=per_rank_s)
+        self._gc()
 
     # -- directory scanning / GC -------------------------------------------
     def _completed_steps(self) -> list[Path]:
@@ -315,11 +473,19 @@ class CheckpointWriter:
 
     def wait_idle(self):
         if self._inflight is not None:
-            self._inflight.wait()
-            self._inflight = None
+            try:
+                self._inflight.wait()
+            finally:
+                # the request IS finished (possibly failed): clearing it even
+                # on error keeps later wait_idle/close calls from re-raising
+                # the same failure forever
+                self._inflight = None
 
     def close(self):
-        self.wait_idle()
-        if self._pool is not None:
-            self._pool.close()
-            self._pool = None
+        try:
+            self.wait_idle()
+        finally:
+            # the pool must die even if the last checkpoint failed
+            if self._pool is not None:
+                self._pool.close()
+                self._pool = None

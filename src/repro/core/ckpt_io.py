@@ -27,6 +27,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 import zlib
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
@@ -57,9 +58,22 @@ def resolve_dtype(name: str) -> np.dtype:
                             f"(not a numpy or ml_dtypes dtype)") from None
 
 
+_DTYPE_NAMES: dict = {}
+
+
 def dtype_name(dt) -> str:
-    """Stable round-trippable name for a (possibly ml_dtypes) dtype."""
-    return str(np.dtype(dt))
+    """Stable round-trippable name for a (possibly ml_dtypes) dtype.  Cached:
+    snapshot planning calls this once per leaf inside the checkpoint's
+    blocking window, and a model has ~5 distinct dtypes."""
+    try:
+        return _DTYPE_NAMES[dt]
+    except (KeyError, TypeError):        # TypeError: unhashable dt
+        name = str(np.dtype(dt))
+        try:
+            _DTYPE_NAMES[dt] = name
+        except TypeError:
+            pass
+        return name
 
 
 def is_float_dtype(dt) -> bool:
@@ -236,74 +250,126 @@ def _worth_compressing(codec: Codec, view) -> bool:
     return entropy_bits < ENTROPY_THRESHOLD_BITS
 
 
+class RankShardWriter:
+    """Incremental writer for ONE rank's shard container.
+
+    The pipelined snapshot path appends entries as D2H batches complete —
+    from any pool thread, in any order (appends serialize on an internal
+    lock and every entry records its own offset, so entry order in
+    ``shards.bin`` is immaterial).  ``finish()`` publishes ``index.json``
+    and returns the same stats dict as :func:`write_rank_shards`, which is
+    now a one-shot convenience wrapper over this class.
+
+    Each ``add`` encodes the entry chunk-by-chunk (transform -> probe ->
+    encode-or-raw) outside the lock and appends under it, so memory
+    high-water is one ENTRY's encoded chunks — a shard, never a rank
+    image.  Chunk records are ``[enc_len, raw_len, stored_raw]``."""
+
+    def __init__(self, rank_dir, codec: Codec,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+        self.rank_dir = Path(rank_dir)
+        self.rank_dir.mkdir(parents=True, exist_ok=True)
+        self.codec = codec
+        self.chunk_bytes = chunk_bytes
+        self._f = open(self.rank_dir / BIN_NAME, "wb")
+        self._lock = threading.Lock()
+        self._offset = 0
+        self.entries: dict[str, dict] = {}
+        self.digests: dict[str, str] = {}
+        self.raw_bytes = 0
+        self.enc_bytes = 0
+
+    def add(self, key: str, arr, digest: str | None = None,
+            compute_digest: bool = False) -> str | None:
+        """Append one entry.  ``digest`` records a known content digest;
+        ``compute_digest`` hashes the entry inline while streaming — for
+        lossless codecs the transform is the identity, so the chunk stream
+        is the original bytes and the fused hash equals
+        :func:`shard_digest` without a second memory pass.  (Callers must
+        pre-compute digests for lossy codecs.)  Returns the entry digest."""
+        arr = np.asarray(arr)
+        enc_arr, qmeta = self.codec.transform(arr)
+        view = _byte_view(enc_arr)
+        compress = _worth_compressing(self.codec, view)
+        hasher = None
+        if compute_digest and digest is None:
+            if self.codec.lossy and qmeta is not None:
+                raise ValueError("inline digests require a lossless "
+                                 "stream; pre-compute for lossy codecs")
+            hasher = _digest_start(arr)
+        # hash + encode OUTSIDE the lock: pool threads appending different
+        # batches to the same rank must not serialize on compression, only
+        # on the file append itself.  Memory high-water becomes one ENTRY's
+        # encoded chunks (a shard, not a rank image); uncompressed chunks
+        # stay zero-copy views.
+        chunks, enc_chunks = [], []
+        for start in range(0, max(view.nbytes, 1), self.chunk_bytes):
+            raw = view[start:start + self.chunk_bytes]
+            if raw.nbytes == 0 and view.nbytes > 0:
+                break
+            if hasher is not None:
+                hasher.update(raw)
+            enc = self.codec.encode_chunk(raw) if compress else raw
+            enc_chunks.append(enc)
+            chunks.append([len(enc), raw.nbytes, 0 if compress else 1])
+        if hasher is not None:
+            digest = hasher.hexdigest()[:32]
+        with self._lock:
+            for enc in enc_chunks:
+                self._f.write(enc)
+                self.enc_bytes += len(enc)
+            self.entries[key] = {
+                "dtype": dtype_name(arr.dtype),
+                "shape": list(arr.shape),
+                "enc_dtype": dtype_name(enc_arr.dtype),
+                "offset": self._offset,
+                "nbytes": int(view.nbytes),
+                "chunks": chunks,
+                "qmeta": qmeta,
+                "digest": digest,
+            }
+            self._offset += sum(c[0] for c in chunks)
+            self.raw_bytes += arr.nbytes
+            if digest is not None:
+                self.digests[key] = digest
+        return digest
+
+    def finish(self) -> dict:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+        (self.rank_dir / INDEX_NAME).write_text(json.dumps({
+            "format": FORMAT_VERSION, "codec": self.codec.name,
+            "entries": self.entries}))
+        return {"raw_bytes": self.raw_bytes, "enc_bytes": self.enc_bytes,
+                "entries": self.entries, "digests": self.digests}
+
+    def abort(self):
+        """Release the file handle after a failed checkpoint (the half-
+        written ``.tmp`` dir stays invisible to readers)."""
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+
 def write_rank_shards(rank_dir, arrays: dict, codec: Codec,
                       chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                       digests: dict | None = None,
                       compute_digests: bool = False) -> dict:
     """Stream ``arrays`` ({key: np.ndarray}) into ``rank_dir/shards.bin`` +
-    ``rank_dir/index.json``.  Each array is transformed (lossy codecs),
-    split into ``chunk_bytes`` raw chunks, byte-encoded (or stored raw when
-    the compressibility probe says the codec cannot win), and appended —
-    memory high-water is one chunk, not one rank image.
-
-    ``digests`` records known content digests; ``compute_digests`` hashes
-    entries NOT already in ``digests`` inline while streaming — for lossless
-    codecs the transform is the identity, so the chunk stream is the
-    original bytes and the fused hash equals :func:`shard_digest` without a
-    second memory pass.  (Callers must pre-compute digests for lossy
-    codecs.)
-
-    Chunk records are ``[enc_len, raw_len, stored_raw]``.
-
-    Returns {"raw_bytes", "enc_bytes", "entries"}."""
-    rank_dir = Path(rank_dir)
-    rank_dir.mkdir(parents=True, exist_ok=True)
+    ``rank_dir/index.json`` in one shot (see :class:`RankShardWriter` for
+    the streaming/digest semantics).  Returns {"raw_bytes", "enc_bytes",
+    "entries", "digests"}."""
     digests = digests or {}
-    entries: dict[str, dict] = {}
-    raw_total = enc_total = 0
-    offset = 0
-    with open(rank_dir / BIN_NAME, "wb") as f:
-        for key, arr in arrays.items():
-            arr = np.asarray(arr)
-            enc_arr, qmeta = codec.transform(arr)
-            view = _byte_view(enc_arr)
-            compress = _worth_compressing(codec, view)
-            hasher = None
-            if compute_digests and key not in digests:
-                if codec.lossy and qmeta is not None:
-                    raise ValueError("inline digests require a lossless "
-                                     "stream; pre-compute for lossy codecs")
-                hasher = _digest_start(arr)
-            chunks = []
-            for start in range(0, max(view.nbytes, 1), chunk_bytes):
-                raw = view[start:start + chunk_bytes]
-                if raw.nbytes == 0 and view.nbytes > 0:
-                    break
-                if hasher is not None:
-                    hasher.update(raw)
-                enc = codec.encode_chunk(raw) if compress else raw
-                f.write(enc)
-                chunks.append([len(enc), raw.nbytes, 0 if compress else 1])
-                enc_total += len(enc)
-            if hasher is not None:
-                digests[key] = hasher.hexdigest()[:32]
-            entry = {
-                "dtype": dtype_name(arr.dtype),
-                "shape": list(arr.shape),
-                "enc_dtype": dtype_name(enc_arr.dtype),
-                "offset": offset,
-                "nbytes": int(view.nbytes),
-                "chunks": chunks,
-                "qmeta": qmeta,
-                "digest": digests.get(key),
-            }
-            offset += sum(c[0] for c in chunks)
-            raw_total += arr.nbytes
-            entries[key] = entry
-    (rank_dir / INDEX_NAME).write_text(json.dumps({
-        "format": FORMAT_VERSION, "codec": codec.name, "entries": entries}))
-    return {"raw_bytes": raw_total, "enc_bytes": enc_total,
-            "entries": entries, "digests": digests}
+    w = RankShardWriter(rank_dir, codec, chunk_bytes)
+    for key, arr in arrays.items():
+        d = w.add(key, arr, digest=digests.get(key),
+                  compute_digest=compute_digests)
+        if d is not None:
+            digests[key] = d
+    st = w.finish()
+    st["digests"] = digests
+    return st
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +435,11 @@ class IOPool:
         self.workers = max(1, workers)
         self._pool = ThreadPoolExecutor(
             max_workers=self.workers, thread_name_prefix="ckpt_io")
+
+    def submit(self, fn, *args):
+        """Single-task submit (the pipelined snapshot path enqueues batches
+        one at a time as D2H completes); returns the future."""
+        return self._pool.submit(fn, *args)
 
     def map(self, fn, items):
         futures = [self._pool.submit(fn, it) for it in items]

@@ -15,7 +15,7 @@ from typing import Callable, Optional
 
 from repro.core.backends.fabric import Fabric
 from repro.core.ckpt import CheckpointWriter
-from repro.core.drain import drain_world
+from repro.core.drain import drain_world, drain_world_legacy
 from repro.core.interpose import Mana
 
 
@@ -49,7 +49,9 @@ class Cluster:
             ckpt_dir, world_size, keep=self.ckpt_io.keep,
             codec=self.ckpt_io.codec, incremental=self.ckpt_io.incremental,
             io_workers=self.ckpt_io.io_workers,
-            chunk_bytes=self.ckpt_io.chunk_bytes) if ckpt_dir else None
+            chunk_bytes=self.ckpt_io.chunk_bytes,
+            pipeline=self.ckpt_io.pipeline,
+            snapshot_batch_mb=self.ckpt_io.snapshot_batch_mb) if ckpt_dir else None
         self.events: list = []
         self.restart_count = 0
 
@@ -81,22 +83,44 @@ class Cluster:
 
     # -- transparent checkpoint --------------------------------------------
     def checkpoint(self, step: int, arrays, mesh, extra_rank_state=None):
-        """Drain -> barrier -> snapshot -> async write. Returns the request."""
+        """Drain -> barrier -> pipelined snapshot -> async write.  Returns
+        the request; ``req.timings`` carries the stop-the-world breakdown
+        {drain_ms, snapshot_ms, enqueue_ms, blocking_ms} in milliseconds
+        (persist_ms lands once the background write commits)."""
         if self.writer is None:
             raise RuntimeError("no ckpt_dir configured")
-        drain_stats = drain_world(self.manas)
+        t0 = time.perf_counter()
+        if self.ckpt_io.pipeline:
+            drain_stats = drain_world(self.manas,
+                                      backoff=self.ckpt_io.drain_backoff)
+        else:
+            # pipeline=False selects the WHOLE PR 1 stop-the-world path for
+            # A/B measurement: spawn-per-checkpoint drain + buffered snapshot
+            drain_stats = drain_world_legacy(self.manas)
+        drain_ms = (time.perf_counter() - t0) * 1e3
         rank_states = {}
         for i, r in enumerate(self.ranks):
             if not r.alive:
                 continue
+            # drain stats are keyed by RANK ID — with dead ranks a positional
+            # lookup would attach a survivor's stats to the wrong rank
             st = {"mana": r.mana.snapshot(),
-                  "drain": drain_stats[i] if i < len(drain_stats) else {}}
+                  "drain": drain_stats.get(r.mana.rank, {})}
             if extra_rank_state:
                 st.update(extra_rank_state(i))
             rank_states[i] = st
         req = self.writer.checkpoint(step, arrays, mesh, rank_states,
-                                     extra_meta={"backend": self.backend_name})
-        self.events.append(("checkpoint", step, time.time()))
+                                     extra_meta={"backend": self.backend_name},
+                                     defer_release=True)
+        try:
+            req.timings["drain_ms"] = round(drain_ms, 3)
+            req.timings["blocking_ms"] = round(
+                (time.perf_counter() - t0) * 1e3, 3)
+            self.events.append(("checkpoint", step, time.time()))
+        finally:
+            # the blocking window ends HERE: only now may the held encode/
+            # digest/IO tasks start competing for the interpreter
+            req.release()
         return req
 
     # -- restart ------------------------------------------------------------

@@ -251,13 +251,42 @@ class Mana:
         d.state["done"] = bool(done)
         return done
 
-    def wait_all(self, requests) -> None:
-        for r in requests:
-            while not self.test(r):
-                time.sleep(0.001)
+    def request_free(self, request: int) -> None:
+        """MPI_Request_free semantics: retire a completed request's vid.
+        Without this, descriptors of consumed prefetch batches accumulate
+        one-per-step forever — and the vid table is serialized inside the
+        checkpoint's blocking window, so table growth is stop-the-world
+        growth."""
+        vid = handle_vid(request)
+        if self.legacy is not None:
+            lvid = self._legacy_of.pop(vid, None)
+            if lvid is not None:
+                self.legacy.free(_KIND_NAME[vid_kind(vid)], lvid)
+        self.vids.free(vid)
 
-    def barrier(self, comm: Optional[int] = None, expected: Optional[int] = None):
-        self.backend.barrier(expected)
+    def test_all(self, requests) -> list:
+        """MPI_Testall wrapper: translate the whole handle vector, complete it
+        with ONE lower-half call, and mirror completion into the descriptors."""
+        descs = [self._desc(r) for r in requests]
+        flags = self.backend.test_all([self._phys(r) for r in requests])
+        for d, done in zip(descs, flags):
+            d.state["done"] = bool(done)
+        return [bool(f) for f in flags]
+
+    def wait_all(self, requests) -> None:
+        pending = list(requests)
+        delay = 5e-5
+        while pending:
+            flags = self.test_all(pending)
+            pending = [r for r, done in zip(pending, flags) if not done]
+            if pending:
+                time.sleep(delay)
+                delay = min(delay * 2, 0.005)
+
+    def barrier(self, comm: Optional[int] = None,
+                expected: Optional[int] = None,
+                timeout: Optional[float] = None):
+        self.backend.barrier(expected, timeout)
 
     def alltoall(self, comm: int, payloads: list) -> list:
         phys = self._phys(comm)

@@ -70,6 +70,11 @@ class VidTable:
         # L1 directory (sparse) -> L2 pages; indexed by the FULL 32-bit vid,
         # so the kind tag participates in addressing (one table, five kinds)
         self._l1: dict[int, list] = {}
+        # live-vid index: iteration (snapshot, drain's per-kind scan) walks
+        # only live descriptors instead of every slot of every 4096-entry
+        # page — snapshot capture is part of the checkpoint's stop-the-world
+        # window, so iteration cost is blocking cost
+        self._live: dict[int, Descriptor] = {}
         self._count = {k: 0 for k in Kind}
         self._ggid_seq: dict[tuple, int] = {}
         self._free_seq = 0   # bumps on free under the eager policy
@@ -106,6 +111,7 @@ class VidTable:
             raise RuntimeError(f"vid slot collision for {vid:#x}")
         page[lo] = desc
         desc.vid = vid
+        self._live[vid] = desc
         self._count[kind] += 1
         return vid
 
@@ -135,6 +141,7 @@ class VidTable:
         if page[lo] is None:
             raise KeyError(f"double free of vid {vid:#x}")
         page[lo] = None
+        self._live.pop(vid, None)
         if self.ggid_policy == "eager":
             self._free_seq += 1
 
@@ -144,10 +151,10 @@ class VidTable:
                 yield d
 
     def all_descriptors(self):
-        for hi in sorted(self._l1):
-            for d in self._l1[hi]:
-                if d is not None:
-                    yield d
+        # vid-ascending, same order the page walk produced (hi directory
+        # slots carry the vid's top bits, so sorting vids sorts pages)
+        for vid in sorted(self._live):
+            yield self._live[vid]
 
     def live_count(self, kind: Optional[Kind] = None) -> int:
         n = 0
@@ -178,4 +185,5 @@ class VidTable:
             d = Descriptor.restore(ds)
             page, lo = t._page_for(d.vid, create=True)
             page[lo] = d
+            t._live[d.vid] = d
         return t

@@ -77,6 +77,12 @@ class DataPipeline:
         idx, b = self._q.get(timeout=30)
         assert idx == self._next_consume, (idx, self._next_consume)
         self._next_consume = idx + 1
+        if self.mana is not None:
+            # consumed == waited-on: retire the request vid (MPI_Request_free)
+            # so the table the checkpoint snapshots doesn't grow per step
+            h = self._requests.pop(idx, None)
+            if h is not None:
+                self.mana.request_free(h)
         return b
 
     # -- checkpoint integration ------------------------------------------

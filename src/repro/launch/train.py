@@ -13,6 +13,7 @@ CLI:
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from pathlib import Path
 
@@ -185,25 +186,46 @@ def main():
     ap.add_argument("--ckpt-io-workers", type=int, default=0,
                     help="writer/reader pool size (0 = min(world, cpu))")
     ap.add_argument("--ckpt-keep", type=int, default=3)
+    ap.add_argument("--ckpt-pipeline", action="store_true", default=True,
+                    help="pipelined double-buffered snapshot (default)")
+    ap.add_argument("--no-ckpt-pipeline", dest="ckpt_pipeline",
+                    action="store_false",
+                    help="snapshot-all-then-write path (A/B baseline)")
+    ap.add_argument("--snapshot-batch-mb", type=float, default=8.0,
+                    help="raw MB per batched device->host transfer group")
+    ap.add_argument("--drain-backoff", type=float, default=5e-5,
+                    help="first quiesce poll sleep in seconds (doubles)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     ckpt_io = CkptIOConfig(codec=args.ckpt_codec,
                            incremental=args.ckpt_incremental,
                            io_workers=args.ckpt_io_workers,
-                           keep=args.ckpt_keep)
+                           keep=args.ckpt_keep,
+                           pipeline=args.ckpt_pipeline,
+                           snapshot_batch_mb=args.snapshot_batch_mb,
+                           drain_backoff=args.drain_backoff)
     tr = Trainer(cfg, batch_size=args.batch_size, seq_len=args.seq_len,
                  world_size=args.world_size, backend=args.backend,
                  translation=args.translation, ckpt_dir=args.ckpt_dir,
                  lr=args.lr, total_steps=args.steps, ckpt_io=ckpt_io)
     tr.init_state()
-    tr.run(args.steps, ckpt_every=args.ckpt_every,
-           kill_rank_at=args.kill_rank_at,
-           new_world_size_on_restart=args.restart_world_size,
-           new_backend_on_restart=args.restart_backend)
-    tr.pipeline.stop()
-    if tr.cluster.writer is not None:
-        tr.cluster.writer.wait_idle()   # commit the in-flight checkpoint
+    try:
+        tr.run(args.steps, ckpt_every=args.ckpt_every,
+               kill_rank_at=args.kill_rank_at,
+               new_world_size_on_restart=args.restart_world_size,
+               new_backend_on_restart=args.restart_backend)
+    finally:
+        # EVERY exit path — exception, Ctrl-C, or clean finish — must leave
+        # the in-flight pipelined checkpoint committed (wait_idle inside
+        # close) or cleanly abandoned, never half-owned by a dying process
+        tr.pipeline.stop()
+        if tr.cluster.writer is not None:
+            try:
+                tr.cluster.writer.close()
+            except Exception as e:  # noqa: BLE001 — report, don't mask exit
+                print(f"checkpoint writer shutdown failed: {e}",
+                      file=sys.stderr)
     first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
     print(f"done: loss {first:.4f} -> {last:.4f} over {args.steps} steps")
 

@@ -1,0 +1,352 @@
+"""Checkpoint pipeline subsystem: concurrent drain (batched testing, phase
+deadlines, rank-id-keyed stats), the double-buffered snapshot engine, bit
+identity between the pipelined and buffered paths, elastic restart with the
+pipeline on, and the replicated-shard dedup subprocess scenario."""
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CkptIOConfig
+from repro.core import Cluster, ckpt_io
+from repro.core.ckpt import CheckpointWriter
+from repro.core.ckpt_pipeline import (HostArena, SnapshotPipeline, batch_plan,
+                                      plan_snapshot)
+from repro.core.drain import drain_rank, drain_world
+from repro.core.restart import load_arrays, load_rank_state
+
+
+# ---------------------------------------------------------------------------
+# concurrent drain
+# ---------------------------------------------------------------------------
+
+def test_drain_world_stats_keyed_by_rank_id():
+    c = Cluster(4, "mpich")
+    c.mana(0).isend(3, tag=9, payload="x")
+    stats = drain_world(c.manas)
+    assert set(stats) == {0, 1, 2, 3}
+    assert stats[3]["messages_buffered"] == 1
+    assert all(stats[r]["messages_buffered"] == 0 for r in (0, 1, 2))
+
+
+def test_drain_world_with_dead_rank_attaches_stats_to_survivors(tmp_path):
+    """The PR 1 bug: stats[i] indexed a list built from ALIVE manas only, so
+    with rank 1 dead, rank 2's stats landed on rank 3 (and vice versa)."""
+    c = Cluster(4, "mpich", ckpt_dir=tmp_path / "ck")
+    c.mana(0).isend(3, tag=5, payload="for-rank-3")
+    c.kill_rank(1)
+    c.checkpoint(1, {"x": jnp.zeros(2)}, None).wait()
+    ck = c.writer.latest()
+    rs3 = load_rank_state(ck, 3)
+    rs2 = load_rank_state(ck, 2)
+    assert rs3["drain"]["rank"] == 3
+    assert rs3["drain"]["messages_buffered"] == 1
+    assert rs2["drain"]["rank"] == 2
+    assert rs2["drain"]["messages_buffered"] == 0
+    c.writer.close()
+
+
+def test_drain_world_parallel_path_completes_requests():
+    """Force the concurrent path (a request that needs a second test round)
+    and check batched completion + per-rank stats."""
+    c = Cluster(3, "openmpi")
+    m = c.mana(0)
+    h = m.isend(1, tag=1, payload="p")
+    d = m._desc(h)
+    d.state["done"] = False
+    flaky = {"calls": 0}
+    orig = m.backend.test_all
+
+    def test_all_flaky(reqs):
+        flaky["calls"] += 1
+        if flaky["calls"] == 1:          # first sweep: not done -> pool path
+            return [False] * len(reqs)
+        return orig(reqs)
+
+    m.backend.test_all = test_all_flaky
+    stats = drain_world(c.manas, timeout=5.0)
+    assert stats[0]["requests_completed"] == 1
+    assert stats[0]["test_rounds"] >= 1
+    assert d.state["done"]
+
+
+def test_drain_rank_request_phase_owns_half_the_budget():
+    c = Cluster(2, "mpich")
+    m = c.mana(0)
+    m.isend(1, tag=1, payload="p")
+    m._desc(m.isend(1, tag=2, payload="q"))
+    for d in list(m.vids.iter_kind(__import__(
+            "repro.core.descriptors", fromlist=["Kind"]).Kind.REQUEST)):
+        d.state["done"] = False
+    m.backend.test_all = lambda reqs: [False] * len(reqs)
+    t0 = time.time()
+    with pytest.raises(TimeoutError) as e:
+        drain_rank(m, timeout=0.6)
+    elapsed = time.time() - t0
+    # phase 1 may use at most HALF the budget, leaving phase 2 its slice
+    assert elapsed < 0.55, elapsed
+    # the error carries the partial drain stats
+    assert "partial drain" in str(e.value)
+    assert "requests_completed" in str(e.value)
+
+
+def test_drain_rank_fabric_phase_timeout_reports_buffered_stats():
+    c = Cluster(2, "mpich")
+    m = c.mana(1)
+    m.backend.iprobe = lambda *a, **k: (0, 50001)
+    m.backend.recv = lambda src, tag: "junk"
+    with pytest.raises(TimeoutError) as e:
+        drain_rank(m, timeout=0.2)
+    assert "messages_buffered" in str(e.value)
+
+
+@pytest.mark.parametrize("backend", ["mpich", "craympi", "openmpi", "exampi"])
+def test_backend_test_all_batched(backend):
+    c = Cluster(2, backend)
+    m = c.mana(0)
+    hs = [m.isend(1, tag=t, payload=t) for t in range(3)]
+    phys = [m._desc(h).phys for h in hs]
+    assert m.backend.test_all(phys) == [True, True, True]
+    # Mana-level wrapper mirrors completion into descriptors
+    for h in hs:
+        m._desc(h).state["done"] = False
+    assert m.test_all(hs) == [True, True, True]
+    assert all(m._desc(h).state["done"] for h in hs)
+
+
+def test_request_free_retires_vid():
+    from repro.core.descriptors import Kind
+    c = Cluster(2, "mpich")
+    m = c.mana(0)
+    h = m.isend(1, tag=1, payload="p")
+    n_before = m.vids.live_count(Kind.REQUEST)
+    m.request_free(h)
+    assert m.vids.live_count(Kind.REQUEST) == n_before - 1
+    with pytest.raises(KeyError):
+        m._desc(h)
+
+
+def test_pipeline_prefetch_requests_do_not_accumulate():
+    """One request descriptor per *in-flight* batch, not one per consumed
+    batch — consumed prefetches are freed (their growth was serialized into
+    every checkpoint's blocking window)."""
+    from repro.configs import smoke_config
+    from repro.core.descriptors import Kind
+    from repro.data import DataPipeline
+    c = Cluster(1, "mpich")
+    p = DataPipeline(smoke_config("granite-3-2b"), 2, 8, mana=c.mana(0))
+    for _ in range(10):
+        p.next()
+    time.sleep(0.1)
+    live = c.mana(0).vids.live_count(Kind.REQUEST)
+    assert live <= 4, live      # bounded by prefetch depth, not steps
+    p.stop()
+
+
+# ---------------------------------------------------------------------------
+# snapshot planning / batching / arenas
+# ---------------------------------------------------------------------------
+
+def test_plan_matches_legacy_snapshot_layout():
+    from repro.core.ckpt import snapshot_shards
+    arrays = {"a": jnp.arange(24.0).reshape(4, 6),
+              "b": {"c": jnp.ones((3,), jnp.int32)}}
+    leaves_meta, items = plan_snapshot(arrays, 2, None)
+    legacy_meta, per_rank = snapshot_shards(arrays, 2, None)
+    assert [m["shards"] for m in leaves_meta] == \
+        [m["shards"] for m in legacy_meta]
+    assert {it.key for it in items} == set(per_rank[0])
+
+
+def test_batch_plan_rank_aligned_and_size_bounded():
+    class It:
+        def __init__(self, rank, nbytes):
+            self.rank, self.nbytes = rank, nbytes
+    items = [It(0, 60 << 10), It(1, 60 << 10), It(0, 60 << 10),
+             It(0, 60 << 10), It(1, 10 << 10)]
+    batches = batch_plan(items, 100 << 10)
+    for rank, its in batches:
+        assert all(it.rank == rank for it in its)
+    # rank 0: 3x60K -> [60+60][60]; rank 1: 60+10 -> one batch
+    sizes = sorted(sum(it.nbytes for it in its) >> 10 for _, its in batches)
+    assert sizes == [60, 70, 120]
+
+
+def test_host_arena_place_reuse_and_release():
+    a = HostArena()
+    assert a.try_acquire()
+    assert not a.try_acquire()           # busy until released
+    xs = [np.arange(10, dtype=np.float32), np.ones((3, 3), np.int8)]
+    views = a.place(xs)
+    for v, x in zip(views, xs):
+        np.testing.assert_array_equal(v, x)
+        assert v.dtype == x.dtype and v.shape == x.shape
+    cap = a._buf.nbytes
+    a.release()
+    assert a.try_acquire()
+    a.place(xs)                          # reuse: no regrowth
+    assert a._buf.nbytes == cap
+    a.release()
+
+
+def test_snapshot_pipeline_arena_pair_cycles_across_batches():
+    """More batches than arenas: the pair must CYCLE (encode tasks re-
+    acquire freed arenas) — every batch lands intact and none spill."""
+    pool = ckpt_io.IOPool(2)
+    n = 20_000                           # 80 KB > the 64 KB min batch size
+    arrays = {f"k{i}": jnp.ones((n,), jnp.float32) * i for i in range(6)}
+    _, items = plan_snapshot(arrays, 1, None)
+    got = {}
+    lock = threading.Lock()
+
+    def sink(rank, its, views):
+        time.sleep(0.005)                # stretch arena occupancy
+        with lock:
+            for it, v in zip(its, views):
+                got[it.key] = np.array(v)
+
+    pipe = SnapshotPipeline(pool, batch_bytes=1)   # min-clamped: 1 item/batch
+    res = pipe.run(items, sink)
+    assert res["batches"] == 6
+    res["release"]()
+    for f in res["futures"]:
+        f.result(timeout=30)
+    assert res["counters"]["spills"] == 0
+    for i in range(6):
+        np.testing.assert_array_equal(got[f"{i}.0"], np.ones(n) * i)
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# pipelined writer: bit identity, delta, elastic restart, timings
+# ---------------------------------------------------------------------------
+
+def _tree():
+    rng = np.random.default_rng(3)
+    return {"w": jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32)),
+            "z": jnp.zeros((256, 32), jnp.float32),
+            "i": jnp.asarray(rng.integers(0, 99, 500).astype(np.int32)),
+            "s": jnp.float32(1.5)}
+
+
+@pytest.mark.parametrize("codec,incremental", [("none", False),
+                                               ("zlib", True)])
+def test_pipelined_bitwise_identical_to_buffered(tmp_path, codec,
+                                                 incremental):
+    arrays = _tree()
+    digests = {}
+    for name, pipe in (("buf", False), ("pipe", True)):
+        w = CheckpointWriter(tmp_path / name, 2, codec=codec,
+                             incremental=incremental, pipeline=pipe)
+        w.checkpoint(1, arrays, None, {0: {"r": 0}, 1: {"r": 1}}).wait()
+        ck = w.latest()
+        out = load_arrays(ck, {k: None for k in arrays})
+        for k in arrays:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(arrays[k]))
+        digests[name] = {
+            f"{r}:{k}": e["digest"]
+            for r in range(2)
+            for k, e in ckpt_io.read_rank_index(
+                ck / f"rank{r:05d}")["entries"].items()}
+        assert load_rank_state(ck, 1) == {"r": 1}
+        w.close()
+    assert digests["buf"] == digests["pipe"]
+
+
+def test_pipelined_incremental_delta_chain(tmp_path):
+    arrays = _tree()
+    w = CheckpointWriter(tmp_path, 2, codec="zlib", incremental=True,
+                         pipeline=True)
+    st1 = w.checkpoint(1, arrays, None, {}).wait()
+    assert st1["full"] and st1["bytes_written"] > 0
+    # unchanged state -> zero fresh bytes
+    st2 = w.checkpoint(2, arrays, None, {}).wait()
+    assert not st2["full"]
+    assert st2["bytes_written"] == 0 and st2["fresh_shards"] == 0
+    # mutate ONE leaf -> exactly one fresh shard
+    arrays["i"] = jnp.asarray(np.arange(500, dtype=np.int32))
+    st3 = w.checkpoint(3, arrays, None, {}).wait()
+    assert st3["fresh_shards"] == 1
+    # delta restores resolve clean shards through the base step
+    out = load_arrays(w.latest(), {k: None for k in arrays})
+    for k in arrays:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(arrays[k]))
+    w.close()
+
+
+def test_pipelined_elastic_restart_world_size_change(tmp_path):
+    io_cfg = CkptIOConfig(codec="zlib", incremental=True, pipeline=True)
+    c = Cluster(4, "craympi", ckpt_dir=tmp_path / "ck", ckpt_io=io_cfg)
+    c.checkpoint(3, {"w": jnp.arange(8.0)}, None).wait()
+    fresh = c.restart(c.writer.latest(), new_world_size=2)
+    assert fresh.world_size == 2
+    out = load_arrays(fresh.writer.latest(), {"w": None})
+    np.testing.assert_array_equal(out["w"], np.arange(8.0))
+    fresh.writer.close()
+
+
+def test_checkpoint_timing_breakdown(tmp_path):
+    c = Cluster(2, "mpich", ckpt_dir=tmp_path / "ck")
+    req = c.checkpoint(1, {"x": jnp.zeros((64, 64))}, None)
+    for k in ("drain_ms", "snapshot_ms", "enqueue_ms", "blocking_ms"):
+        assert k in req.timings, req.timings
+    assert req.timings["blocking_ms"] >= req.timings["drain_ms"]
+    req.wait()
+    assert "persist_ms" in req.timings
+    assert req.write_stats["arena_spills"] >= 0
+    c.writer.close()
+
+
+def test_pipelined_writer_error_propagates(tmp_path):
+    w = CheckpointWriter(tmp_path, 1, codec="zlib", pipeline=True)
+    bad = type("Bad", (), {"shape": (2,), "dtype": np.float32,
+                           "nbytes": 8, "size": 2})()
+    with pytest.raises(Exception):
+        w.checkpoint(1, {"x": bad}, None, {}).wait()
+    assert w.latest() is None           # nothing half-committed
+    with pytest.raises(Exception):
+        w.close()                       # reports the failure once...
+    assert w._pool is None and w._inflight is None   # ...but releases all
+    w.close()                           # and stays idempotent after
+
+
+def test_rank_shard_writer_matches_one_shot(tmp_path):
+    rng = np.random.default_rng(0)
+    arrays = {"a": rng.normal(size=(100,)).astype(np.float32),
+              "b": np.zeros(4096, np.int32)}
+    st1 = ckpt_io.write_rank_shards(tmp_path / "one", arrays,
+                                    ckpt_io.get_codec("zlib"),
+                                    compute_digests=True)
+    w = ckpt_io.RankShardWriter(tmp_path / "inc", ckpt_io.get_codec("zlib"))
+    for k, v in arrays.items():
+        w.add(k, v, compute_digest=True)
+    st2 = w.finish()
+    assert st1["digests"] == st2["digests"]
+    assert st1["enc_bytes"] == st2["enc_bytes"]
+    out = ckpt_io.read_rank_entries(tmp_path / "inc", list(arrays))
+    for k in arrays:
+        np.testing.assert_array_equal(out[k], arrays[k])
+
+
+# ---------------------------------------------------------------------------
+# replicated-shard dedup (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+def test_replicated_shard_dedup_scenario():
+    """A fully replicated leaf is stored exactly once and restores
+    bit-identically on a different mesh shape (separate process so the
+    placeholder device count never leaks into this session)."""
+    script = Path(__file__).parent / "scenarios" / "replicated_scenario.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parents[1] / "src")
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "REPLICATED_SCENARIO_OK" in out.stdout, out.stdout + out.stderr
