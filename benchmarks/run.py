@@ -71,6 +71,8 @@ def main() -> None:
     sections.append(("overhead", bench_overhead.rows))
     from benchmarks import bench_ckpt
     sections.append(("ckpt", bench_ckpt.rows))
+    from benchmarks import bench_restart
+    sections.append(("restart", bench_restart.rows))
 
     failures = 0
     for name, fn in sections:

@@ -2,6 +2,7 @@ from repro.core.backends.base import Backend
 from repro.core.backends.craympi import CrayMpiBackend
 from repro.core.backends.exampi import ExaMpiBackend
 from repro.core.backends.fabric import Fabric
+from repro.core.backends.fabricdirect import FabricDirectBackend
 from repro.core.backends.mpich import MpichBackend
 from repro.core.backends.openmpi import OpenMpiBackend
 
@@ -10,6 +11,7 @@ BACKENDS = {
     "craympi": CrayMpiBackend,
     "openmpi": OpenMpiBackend,
     "exampi": ExaMpiBackend,
+    "fabric": FabricDirectBackend,
 }
 
 
@@ -17,5 +19,11 @@ def make_backend(name: str, fabric: Fabric, rank: int, world_size: int) -> Backe
     return BACKENDS[name](fabric, rank, world_size)
 
 
-__all__ = ["Backend", "Fabric", "BACKENDS", "make_backend", "MpichBackend",
-           "CrayMpiBackend", "OpenMpiBackend", "ExaMpiBackend"]
+def backend_family(name: str) -> str:
+    """Implementation family of a flavor (restart capability translation)."""
+    return BACKENDS[name].family
+
+
+__all__ = ["Backend", "Fabric", "BACKENDS", "make_backend", "backend_family",
+           "MpichBackend", "CrayMpiBackend", "OpenMpiBackend", "ExaMpiBackend",
+           "FabricDirectBackend"]

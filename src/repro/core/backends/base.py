@@ -38,11 +38,25 @@ class Backend(abc.ABC):
     """One logical-rank view of the lower half."""
 
     name: str = "abstract"
+    #: Implementation family for restart-time capability translation
+    #: (``repro.core.restore``): record-replay of HYBRID-strategy objects is
+    #: only attempted when checkpoint and restart flavors share a family
+    #: (e.g. Cray MPI is MPICH-derived); across families every non-constant
+    #: object is rebuilt from its serialized description.
+    family: str = "abstract"
 
     def __init__(self, fabric, rank: int, world_size: int):
         self.fabric = fabric
         self.rank = rank
         self.world_size = world_size
+
+    def alias_dtype(self, name: str) -> str:
+        """Canonical predefined-dtype name under THIS implementation's
+        aliasing discipline (ExaMPI reinterpret-casts MPI_INT8_T to
+        MPI_CHAR; most flavors alias nothing).  The restore path re-encodes
+        datatype envelopes through this hook so a handle checkpointed under
+        one aliasing discipline rebinds to the target's canonical constant."""
+        return name
 
     # -- lifecycle ---------------------------------------------------------
     @abc.abstractmethod

@@ -9,6 +9,7 @@ from repro.core.backends.mpich import MpichBackend
 
 class CrayMpiBackend(MpichBackend):
     name = "craympi"
+    family = "mpich"
 
     def _alloc(self, kind, struct):
         # vendor fields: NIC affinity + ugni/ofi bookkeeping. Present in every

@@ -51,6 +51,7 @@ class SharedPtr:
 
 class ExaMpiBackend(Backend):
     name = "exampi"
+    family = "exampi"
 
     def __init__(self, fabric, rank, world_size):
         super().__init__(fabric, rank, world_size)
@@ -62,6 +63,12 @@ class ExaMpiBackend(Backend):
     def capabilities(self):
         # core subset only: no native comm_split
         return {"comm_create", "type_create", "op_create"}
+
+    def alias_dtype(self, name):
+        # INT8/CHAR share a pointer via reinterpret cast: the restore path
+        # re-encodes envelopes through this so cross-backend rebinds land on
+        # the canonical constant
+        return _ALIASES.get(name, name)
 
     # -- constants: LAZY ------------------------------------------------------
     def init_constants(self):

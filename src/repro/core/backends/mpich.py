@@ -14,6 +14,7 @@ _L1_BITS, _L2_BITS = 8, 16
 
 class MpichBackend(Backend):
     name = "mpich"
+    family = "mpich"
 
     def __init__(self, fabric, rank, world_size):
         super().__init__(fabric, rank, world_size)

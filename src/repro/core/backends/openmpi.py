@@ -24,6 +24,7 @@ class _OmpiStruct:
 
 class OpenMpiBackend(Backend):
     name = "openmpi"
+    family = "ompi"
 
     def __init__(self, fabric, rank, world_size):
         super().__init__(fabric, rank, world_size)

@@ -434,11 +434,11 @@ class CheckpointWriter:
     # -- directory scanning / GC -------------------------------------------
     def _completed_steps(self) -> list[Path]:
         """Sorted committed step dirs (``.tmp`` and uncommitted dirs are
-        invisible: half-written checkpoints can never be restored from)."""
-        return sorted(d for d in self.base.iterdir()
-                      if d.name.startswith("step_")
-                      and not d.name.endswith(".tmp")
-                      and (d / "COMMIT").exists())
+        invisible: half-written checkpoints can never be restored from).
+        Shared with the restore side (``restore.completed_steps``) so writer
+        and reader can never disagree on what counts as committed."""
+        from repro.core.restore import completed_steps
+        return completed_steps(self.base)
 
     def _gc(self):
         """Delete all but the newest ``keep`` completed checkpoints — except
@@ -463,6 +463,14 @@ class CheckpointWriter:
     def latest(self):
         done = self._completed_steps()
         return done[-1] if done else None
+
+    def resumable(self):
+        """Newest committed checkpoint whose delta chain fully resolves
+        (``restore.find_resumable``) — what resume-from-latest should load.
+        Differs from ``latest()`` only when an operator has orphaned a delta
+        chain (e.g. hand-deleted a base step)."""
+        from repro.core.restore import find_resumable
+        return find_resumable(self.base)
 
     def force_full_next(self):
         """Make the next checkpoint a full one (operators: guaranteed

@@ -380,23 +380,38 @@ def read_rank_index(rank_dir) -> dict:
     return json.loads((Path(rank_dir) / INDEX_NAME).read_text())
 
 
-def read_entry(bin_file, entry: dict, codec: Codec) -> np.ndarray:
-    """Decode one entry from an open ``shards.bin`` file object into a fresh
-    array of the entry's ORIGINAL dtype/shape."""
+def _decode_entry(read_at, entry: dict, codec: Codec) -> np.ndarray:
+    """Decode one entry given a positioned reader ``read_at(offset, n)``."""
     nbytes = entry["nbytes"]
-    buf = np.empty(nbytes, np.uint8)
-    bin_file.seek(entry["offset"])
-    pos = 0
-    for chunk in entry["chunks"]:
-        enc_len, raw_len = chunk[0], chunk[1]
-        stored_raw = chunk[2] if len(chunk) > 2 else 0
-        enc = bin_file.read(enc_len)
+    chunks = entry["chunks"]
+    if len(chunks) == 1 and nbytes > 0:
+        # single-chunk fast path: view the (pread/decompressed) bytes
+        # directly — no staging buffer, no second memcpy.  The view is
+        # read-only; every consumer either copies into a leaf slice or
+        # hands it to device placement, which copies anyway.
+        enc_len, raw_len = chunks[0][0], chunks[0][1]
+        stored_raw = chunks[0][2] if len(chunks[0]) > 2 else 0
+        enc = read_at(entry["offset"], enc_len)
         if len(enc) != enc_len:
             raise IOError(f"short read: wanted {enc_len} bytes, "
                           f"got {len(enc)}")
         raw = enc if stored_raw else codec.decode_chunk(enc, raw_len)
-        buf[pos:pos + raw_len] = np.frombuffer(raw, np.uint8)
-        pos += raw_len
+        buf = np.frombuffer(raw, np.uint8)
+    else:
+        buf = np.empty(nbytes, np.uint8)
+        off = entry["offset"]
+        pos = 0
+        for chunk in chunks:
+            enc_len, raw_len = chunk[0], chunk[1]
+            stored_raw = chunk[2] if len(chunk) > 2 else 0
+            enc = read_at(off, enc_len)
+            if len(enc) != enc_len:
+                raise IOError(f"short read: wanted {enc_len} bytes, "
+                              f"got {len(enc)}")
+            off += enc_len
+            raw = enc if stored_raw else codec.decode_chunk(enc, raw_len)
+            buf[pos:pos + raw_len] = np.frombuffer(raw, np.uint8)
+            pos += raw_len
     enc_dtype = resolve_dtype(entry["enc_dtype"])
     arr = buf.view(enc_dtype).reshape(entry["shape"])
     dtype = resolve_dtype(entry["dtype"])
@@ -406,17 +421,61 @@ def read_entry(bin_file, entry: dict, codec: Codec) -> np.ndarray:
     return arr.reshape(entry["shape"])
 
 
+def read_entry(bin_file, entry: dict, codec: Codec) -> np.ndarray:
+    """Decode one entry from an open ``shards.bin`` file object into an
+    array of the entry's ORIGINAL dtype/shape.  The result may be a
+    READ-ONLY view over the decoded bytes (single-chunk fast path) — copy
+    before mutating in place."""
+    def read_at(offset, n):
+        bin_file.seek(offset)
+        return bin_file.read(n)
+    return _decode_entry(read_at, entry, codec)
+
+
+class RankShardReader:
+    """Thread-safe reader for ONE rank's shard container — the restore-side
+    twin of :class:`RankShardWriter`.
+
+    One file descriptor is shared by every pool worker: reads go through
+    ``os.pread`` (positioned, no seek state), so the parallel restore engine
+    can decode many entries of the same rank concurrently without per-task
+    ``open()`` calls or fd-offset races.  Decompression (zlib) releases the
+    GIL, which is where the parallel restore speedup comes from."""
+
+    def __init__(self, rank_dir, codec: Codec | None = None):
+        self.rank_dir = Path(rank_dir)
+        self.index = read_rank_index(rank_dir)
+        self.codec = codec or get_codec(self.index["codec"])
+        self._fd = os.open(str(self.rank_dir / BIN_NAME), os.O_RDONLY)
+        self._closed = False
+
+    def entry(self, key: str) -> dict:
+        return self.index["entries"][key]
+
+    def read(self, key: str) -> np.ndarray:
+        """Decode one entry (may return a read-only view — see
+        :func:`read_entry`)."""
+        return _decode_entry(lambda off, n: os.pread(self._fd, n, off),
+                             self.entry(key), self.codec)
+
+    def close(self):
+        if not self._closed:
+            self._closed = True
+            os.close(self._fd)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
 def read_rank_entries(rank_dir, keys, codec: Codec | None = None) -> dict:
     """Read a subset of entries from one rank dir; opens and closes the bin
-    file exactly once. ``codec=None`` -> the codec recorded in the index."""
-    rank_dir = Path(rank_dir)
-    index = read_rank_index(rank_dir)
-    codec = codec or get_codec(index["codec"])
-    out = {}
-    with open(rank_dir / BIN_NAME, "rb") as f:
-        for key in keys:
-            out[key] = read_entry(f, index["entries"][key], codec)
-    return out
+    file exactly once. ``codec=None`` -> the codec recorded in the index.
+    Arrays may be read-only views (see :func:`read_entry`)."""
+    with RankShardReader(rank_dir, codec) as r:
+        return {key: r.read(key) for key in keys}
 
 
 # ---------------------------------------------------------------------------

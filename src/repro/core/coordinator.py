@@ -9,8 +9,10 @@ real cluster each rank is a jax.distributed process and this class runs in the
 job controller. Nothing in the checkpoint format depends on which."""
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Callable, Optional
 
 from repro.core.backends.fabric import Fabric
@@ -54,6 +56,11 @@ class Cluster:
             snapshot_batch_mb=self.ckpt_io.snapshot_batch_mb) if ckpt_dir else None
         self.events: list = []
         self.restart_count = 0
+        # filled by restart(): phase timings mirroring checkpoint's
+        # req.timings, per-rank rebind stats, optionally restored arrays
+        self.restart_timings: dict = {}
+        self.rebind_stats: list = []
+        self.restored_arrays = None
 
     @property
     def manas(self):
@@ -125,27 +132,99 @@ class Cluster:
 
     # -- restart ------------------------------------------------------------
     def restart(self, ckpt_dir, *, new_world_size: Optional[int] = None,
-                new_backend: Optional[str] = None) -> "Cluster":
+                new_backend: Optional[str] = None, shardings=None,
+                parallel: bool = True) -> "Cluster":
         """Build a NEW cluster (new lower halves) from a checkpoint. Elastic:
-        the new world size and backend flavor may differ (paper §9)."""
-        from repro.core.restart import load_manifest, load_rank_state
-        manifest = load_manifest(ckpt_dir)
+        the new world size and backend flavor may differ (paper §9), with
+        per-pair capability translation resolving how each MPI object is
+        rebuilt (``repro.core.restore``).
+
+        ``shardings`` (a pytree matching the checkpointed arrays, leaves
+        being the NEW shardings or ``None``) additionally restores the array
+        state — leaf shard reads overlap descriptor re-binding on one worker
+        pool, and the result lands in ``fresh.restored_arrays``.
+
+        The returned cluster carries phase timings mirroring
+        ``checkpoint``'s ``req.timings``: ``fresh.restart_timings`` =
+        {manifest_ms, lower_half_ms, rebind_ms, arrays_ms, total_ms} plus
+        per-rank rebind stats in ``fresh.rebind_stats``.  ``parallel=False``
+        selects the sequential seed-equivalent path (A/B baseline for
+        benchmarks/bench_restart.py)."""
+        from repro.core import ckpt_io as ckpt_io_mod
+        from repro.core import restore
+        t0 = time.perf_counter()
+        manifest = restore.load_manifest(ckpt_dir)
         old_ws = manifest["world_size"]
         ws = new_world_size or old_ws
         backend = new_backend or self.backend_name
+        timings = {"manifest_ms": round((time.perf_counter() - t0) * 1e3, 3)}
+        t1 = time.perf_counter()
         fresh = Cluster(ws, backend, translation=self.translation,
                         ckpt_dir=self.writer.base if self.writer else None,
                         ckpt_io=self.ckpt_io)
+        timings["lower_half_ms"] = round((time.perf_counter() - t1) * 1e3, 3)
         if self.writer is not None:
             # release the abandoned writer's thread pool (close() drains the
             # in-flight write; the writer stays queryable via latest())
             self.writer.close()
         fresh.restart_count = self.restart_count + 1
-        # re-bind each new rank from an old rank image (elastic: wrap around)
-        for r in range(ws):
-            src = r % old_ws
-            snap = load_rank_state(ckpt_dir, src)["mana"]
-            fresh.ranks[r].mana = Mana.restore(
-                snap, fresh.fabric, r, ws, backend_name=backend)
+        # two pools: leaf reads can queue arbitrarily deep on the I/O pool,
+        # so rebind DAGs get dedicated workers — otherwise FIFO order would
+        # park every rebind node behind the whole read backlog and a large
+        # checkpoint would look like a stalled rebind
+        want_arrays = (shardings is not None and parallel
+                       and manifest.get("format", 1) >= 2)
+        io_pool = ckpt_io_mod.IOPool(self.ckpt_io.io_workers
+                                     or ckpt_io_mod.default_workers(ws)) \
+            if want_arrays else None
+        rebind_pool = ckpt_io_mod.IOPool(min(ws, 4)) if parallel else None
+        try:
+            # leaf-restore I/O first: reads/decompression start immediately
+            # and overlap the rebind DAGs scheduled next
+            arrays_job = None
+            if want_arrays:
+                arrays_job = restore.ArrayRestoreJob(
+                    ckpt_dir, manifest, shardings, io_pool)
+            # re-bind each new rank from an old rank image (elastic: wrap
+            # around) — one dependency-ordered DAG per rank.  Image text is
+            # read once per distinct SOURCE rank; each new rank gets a
+            # fresh parse (descriptor meta must never be shared between
+            # ranks — rebind mutates it in place)
+            t2 = time.perf_counter()
+            texts: dict[int, str] = {}
+            pairs = []
+            for r in range(ws):
+                src = r % old_ws
+                if src not in texts:
+                    texts[src] = (Path(ckpt_dir) / f"rank{src:05d}"
+                                  / "state.json").read_text()
+                snap = json.loads(texts[src])["mana"]
+                m = Mana(backend, fresh.fabric, r, ws,
+                         translation=snap["translation"])
+                pairs.append((m, snap))
+            fresh.rebind_stats = restore.rebind_world(pairs,
+                                                      pool=rebind_pool)
+            for r, (m, _) in enumerate(pairs):
+                fresh.ranks[r].mana = m
+            timings["rebind_ms"] = round(
+                (time.perf_counter() - t2) * 1e3, 3)
+            t3 = time.perf_counter()
+            if arrays_job is not None:
+                fresh.restored_arrays = arrays_job.result()
+            elif shardings is not None:
+                fresh.restored_arrays = restore.load_arrays(
+                    ckpt_dir, shardings, parallel=False)
+            timings["arrays_ms"] = round(
+                (time.perf_counter() - t3) * 1e3, 3)
+        finally:
+            if arrays_job is not None:
+                # idempotent after result(); REQUIRED if rebind raised
+                # before result() ran, else the pread fds leak
+                arrays_job.close()
+            for p in (io_pool, rebind_pool):
+                if p is not None:
+                    p.close()
+        timings["total_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+        fresh.restart_timings = timings
         fresh.events.append(("restarted", manifest["step"], time.time()))
         return fresh

@@ -306,12 +306,14 @@ class Mana:
 
     @classmethod
     def restore(cls, snap: dict, fabric, rank: int, world_size: int,
-                backend_name: Optional[str] = None) -> "Mana":
+                backend_name: Optional[str] = None, *, pool=None) -> "Mana":
         """Rebuild on a NEW lower half — possibly a different backend flavor
         (ckpt under Cray, restart under Open MPI: the paper's §9 future work,
-        implemented via descriptor serialization)."""
+        implemented via the capability-translation layer in
+        ``repro.core.restore``).  ``pool`` routes the re-bind through the
+        dependency-ordered parallel engine; ``None`` binds sequentially."""
         m = cls(backend_name or snap["backend_name"], fabric, rank, world_size,
                 translation=snap["translation"])
-        from repro.core.restart import rebind_objects
-        rebind_objects(m, snap)
+        from repro.core.restore import rebind_objects
+        rebind_objects(m, snap, pool=pool)
         return m

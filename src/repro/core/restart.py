@@ -1,210 +1,34 @@
-"""Restart: rebuild the lower half and re-bind every virtual id (paper §4.2).
+"""Deprecated alias for :mod:`repro.core.restore`.
 
-Two reconstruction strategies per descriptor (paper §1.2 point 4):
-  RECORD_REPLAY — replay the logged creation call against the new backend;
-  SERIALIZE     — rebuild from the decoded description stored in the
-                  descriptor (works across backend flavors);
-  HYBRID        — replay when the backend flavor matches AND supports the
-                  original call; otherwise deserialize.
+The restart half of the stack lives in ``restore.py`` since the
+cross-backend elastic restart engine landed: capability-translated
+descriptor re-binding over the backend-pair restart matrix, the
+dependency-ordered parallel rebind/leaf-restore pool, elastic reshape onto
+a new mesh/world, and resume-chain resolution (see
+docs/restart_matrix.md).  This module re-exports the public surface so
+pre-existing ``repro.core.restart`` imports keep working; new code should
+import ``repro.core.restore`` directly.
+"""
+from repro.core.restore import (  # noqa: F401
+    ArrayRestoreJob,
+    PairPlan,
+    _NpzCache,
+    completed_steps,
+    find_resumable,
+    load_arrays,
+    load_manifest,
+    load_rank_state,
+    place_leaf,
+    plan_leaf_reads,
+    rebind_objects,
+    rebind_world,
+    restart_matrix,
+    translation_plan,
+)
 
-Array state (params/optimizer/caches) is topology-oblivious: shards are
-reassembled from the per-rank images and resharded onto the NEW mesh, which
-may have a different device count (elastic restart)."""
-from __future__ import annotations
-
-import json
-from pathlib import Path
-
-import jax
-import numpy as np
-
-from repro.core.descriptors import Kind, Strategy
-from repro.core.vid import VidTable
-
-
-def rebind_objects(mana, snap: dict) -> dict:
-    """Replace `mana`'s fresh vid table with the snapshot's and bind physical
-    handles for every descriptor. Returns {'replayed': n, 'serialized': n}."""
-    old_backend = snap["backend_name"]
-    same_flavor = (mana.backend_name == old_backend) or (
-        {mana.backend_name, old_backend} <= {"mpich", "craympi"})
-    table = VidTable.restore(snap["vids"])
-    mana.vids = table
-    mana.log = list(snap["log"])
-    mana.pending_messages = [tuple(p) for p in snap["pending"]]
-    stats = {"replayed": 0, "serialized": 0, "lazy": 0}
-
-    # rebuild the legacy shadow tables when running in slow-translation mode
-    if mana.legacy is not None:
-        from repro.core.legacy_vid import LegacyVidTables
-        mana.legacy = LegacyVidTables()
-        mana._legacy_of = {}
-
-    caps = mana.backend.capabilities()
-    by_vid = {d.vid: d for d in table.all_descriptors()}
-    # creation order: constants first (vid insert order is stable), then log
-    for d in sorted(by_vid.values(), key=lambda d: d.meta.get("order", 0)):
-        if d.phys is not None:
-            continue
-        kind = d.kind
-        if kind == Kind.COMM and d.meta.get("axis_name") == "world":
-            stats["lazy"] += 1           # constants re-bind lazily (§4.3)
-        elif kind == Kind.DATATYPE and d.meta.get("envelope", {}).get(
-                "combiner") == "named":
-            stats["lazy"] += 1
-        elif kind == Kind.OP and d.meta.get("predefined"):
-            stats["lazy"] += 1
-        elif kind == Kind.COMM:
-            use_replay = (d.strategy == Strategy.RECORD_REPLAY or
-                          (d.strategy == Strategy.HYBRID and same_flavor))
-            if use_replay and d.meta.get("color") is not None \
-                    and "comm_split" in caps:
-                parent = by_vid.get(d.meta.get("parent"))
-                pphys = parent.phys if parent and parent.phys is not None else \
-                    mana.backend.world_comm()
-                d.phys = mana.backend.comm_split(
-                    pphys, d.meta["color"], d.meta["key"], d.meta["ranks"])
-                stats["replayed"] += 1
-            else:
-                d.phys = mana.backend.comm_create(d.meta["ranks"])
-                stats["serialized"] += 1
-        elif kind == Kind.GROUP:
-            d.phys = mana.backend.comm_group(
-                mana.backend.comm_create(d.meta["ranks"]))
-            stats["serialized"] += 1
-        elif kind == Kind.DATATYPE:
-            d.phys = mana.backend.type_create(d.meta["envelope"])
-            stats["serialized"] += 1
-        elif kind == Kind.OP:
-            d.phys = mana.backend.op_create(d.meta["name"],
-                                            d.meta.get("commutative", True))
-            stats["replayed"] += 1
-        elif kind == Kind.REQUEST:
-            # completed during drain; re-materialize as a done request
-            d.phys = mana.backend.request_create(dict(d.meta))
-            d.state["done"] = True
-    if mana.legacy is not None:
-        from repro.core.interpose import _KIND_NAME
-        for d in table.all_descriptors():
-            lvid = mana.legacy.insert(_KIND_NAME[d.kind], d.phys)
-            mana._legacy_of[d.vid] = lvid
-    return stats
-
-
-# ---------------------------------------------------------------------------
-# array state: topology-oblivious load + reshard
-# ---------------------------------------------------------------------------
-
-class _NpzCache:
-    """Bounded LRU of open ``np.load`` handles (legacy v1 images).  The seed
-    loader kept every handle open forever; this evicts + closes past ``cap``
-    and closes everything on exit."""
-
-    def __init__(self, cap: int = 8):
-        from collections import OrderedDict
-        self.cap = cap
-        self._od = OrderedDict()
-
-    def get(self, path):
-        if path in self._od:
-            self._od.move_to_end(path)
-            return self._od[path]
-        npz = np.load(path)
-        self._od[path] = npz
-        while len(self._od) > self.cap:
-            _, old = self._od.popitem(last=False)
-            old.close()
-        return npz
-
-    def close(self):
-        for npz in self._od.values():
-            npz.close()
-        self._od.clear()
-
-
-def _load_leaves_v1(ckpt_dir: Path, leaves_meta: list) -> list:
-    """Legacy (format 1) loader: monolithic per-rank ``arrays.npz`` files."""
-    from repro.core.ckpt_io import resolve_dtype
-    cache = _NpzCache()
-    leaves = []
-    try:
-        for meta in leaves_meta:
-            arr = np.zeros(meta["shape"], dtype=resolve_dtype(meta["dtype"]))
-            for sh in meta["shards"]:
-                data = cache.get(ckpt_dir / sh["file"])[sh["key"]]
-                idx = tuple(slice(a, b) for a, b in sh["index"])
-                arr[idx] = data
-            leaves.append(arr)
-    finally:
-        cache.close()
-    return leaves
-
-
-def _load_leaves_v2(ckpt_dir: Path, manifest: dict, io_workers=None) -> list:
-    """Parallel streaming restore: pre-allocate every leaf once, group shard
-    reads by the (step, rank) file that physically holds the bytes — delta
-    checkpoints point clean shards at a prior step — and fan the groups out
-    over a thread pool.  Each task opens its shard file exactly once."""
-    from repro.core import ckpt_io
-    root = ckpt_dir.parent
-    leaves_meta = manifest["leaves"]
-    leaves = [np.zeros(meta["shape"], dtype=ckpt_io.resolve_dtype(meta["dtype"]))
-              for meta in leaves_meta]
-    groups: dict[tuple, list] = {}
-    for li, meta in enumerate(leaves_meta):
-        for sh in meta["shards"]:
-            # shards written by THIS step live here; clean shards live in the
-            # base step recorded at write time (flat chain: one hop)
-            step = sh.get("step", manifest["step"])
-            groups.setdefault((step, sh["rank"]), []).append((li, sh))
-    ws = manifest["world_size"]
-
-    def _read_group(item):
-        (step, rank), shards = item
-        rdir = root / f"step_{step:08d}" / f"rank{rank:05d}"
-        data = ckpt_io.read_rank_entries(rdir, [sh["key"] for _, sh in shards])
-        for li, sh in shards:
-            idx = tuple(slice(a, b) for a, b in sh["index"])
-            leaves[li][idx] = data[sh["key"]]
-
-    pool = ckpt_io.IOPool(io_workers or ckpt_io.default_workers(ws))
-    try:
-        pool.map(_read_group, groups.items())
-    finally:
-        pool.close()
-    return leaves
-
-
-def load_arrays(ckpt_dir, shardings, *, io_workers=None):
-    """Reassemble every leaf from per-rank shard files and place it with the
-    NEW shardings (tree matching the manifest leaf order).  Handles both the
-    v2 chunked/compressed/incremental format and legacy v1 npz images."""
-    ckpt_dir = Path(ckpt_dir)
-    manifest = json.loads((ckpt_dir / "manifest.json").read_text())
-    # None shardings (single-device runs) must count as leaves
-    flat_sh, treedef = jax.tree.flatten(shardings, is_leaf=lambda x: x is None)
-    leaves_meta = manifest["leaves"]
-    if len(flat_sh) != len(leaves_meta):
-        raise ValueError(f"checkpoint has {len(leaves_meta)} leaves, "
-                         f"target tree has {len(flat_sh)}")
-    if manifest.get("format", 1) >= 2:
-        leaves = _load_leaves_v2(ckpt_dir, manifest, io_workers=io_workers)
-    else:
-        leaves = _load_leaves_v1(ckpt_dir, leaves_meta)
-    out = []
-    for li, arr in enumerate(leaves):
-        sharding = flat_sh[li]
-        if sharding is None:
-            out.append(jax.numpy.asarray(arr))
-        else:
-            out.append(jax.device_put(arr, sharding))
-    return jax.tree.unflatten(treedef, out)
-
-
-def load_manifest(ckpt_dir) -> dict:
-    return json.loads((Path(ckpt_dir) / "manifest.json").read_text())
-
-
-def load_rank_state(ckpt_dir, rank: int) -> dict:
-    p = Path(ckpt_dir) / f"rank{rank:05d}" / "state.json"
-    return json.loads(p.read_text())
+__all__ = [
+    "ArrayRestoreJob", "PairPlan", "completed_steps", "find_resumable",
+    "load_arrays", "load_manifest", "load_rank_state", "place_leaf",
+    "plan_leaf_reads", "rebind_objects", "rebind_world", "restart_matrix",
+    "translation_plan",
+]

@@ -1,0 +1,651 @@
+"""Restore subsystem: rebuild the lower half under ANY backend flavor and
+re-bind every virtual id (paper §4.2, §9) — fast.
+
+This is the restart half of the checkpoint/restart pair (`ckpt.py` +
+`ckpt_io` own the write path).  Three planes:
+
+**Capability translation (the backend-pair restart matrix).**  A checkpoint
+taken under flavor S must restart under every flavor D.  For each ordered
+pair the :class:`PairPlan` resolves, per descriptor kind, how the object is
+rebuilt:
+
+  RECORD_REPLAY — replay the logged creation call against the new backend;
+  SERIALIZE     — rebuild from the decoded description in the descriptor
+                  (works across families: it is pure upper-half state);
+  HYBRID        — replay when S and D share an implementation FAMILY
+                  (Cray MPI is MPICH-derived) and D natively supports the
+                  original call; otherwise deserialize.
+
+Constants (COMM_WORLD, predefined datatypes/ops) always re-bind LAZILY on
+first use (§4.3 — ExaMPI's addresses are not even known at startup), and
+datatype envelopes are RE-ENCODED through the destination's aliasing
+discipline (``Backend.alias_dtype``) so e.g. an MPI_INT8_T checkpointed
+under MPICH lands on ExaMPI's shared INT8/CHAR pointer.
+
+**Parallel streaming rebind.**  Descriptor re-binding overlaps `ckpt_io`'s
+leaf restore: shard reads (I/O + GIL-releasing decompress) are submitted
+to the I/O pool first, then every rank's rebind DAG runs on dedicated
+workers — dependency-ordered (a replayed ``comm_split`` needs its parent's
+physical handle first), ready-queue scheduled, backend calls serialized
+per rank by a lock since lower halves are not thread-safe.  This replaces
+the seed's single sorted loop; restart wall time approaches
+max(slowest rank DAG, array I/O) instead of their sum.
+
+**Elastic reshape.**  Array state is topology-oblivious: leaves are
+reassembled from the per-rank shard entries recorded by the write-side
+planner (``ckpt_pipeline.plan_snapshot``) and re-placed onto the NEW mesh
+by running that plan in reverse — ``jax.make_array_from_callback`` pulls,
+per target device, exactly the slice the new sharding assigns it, so the
+device count, mesh shape, and world size may all differ from checkpoint
+time.  Rank images wrap around (new rank r restores image r mod old_world).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import ckpt_io
+from repro.core.backends import BACKENDS, backend_family
+from repro.core.descriptors import Kind, Strategy
+from repro.core.vid import VidTable
+
+_REBIND_TIMEOUT = 60.0
+
+
+# ---------------------------------------------------------------------------
+# capability translation: the backend-pair restart matrix
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PairPlan:
+    """Resolved translation rules for one ordered (checkpoint, restart)
+    backend pair."""
+    src: str
+    dst: str
+    src_family: str
+    dst_family: str
+    same_family: bool            # HYBRID resolves to replay iff True
+    native_split: bool           # dst implements comm_split natively
+    dtype_aliases: dict          # dst aliasing table over predefined names
+    reencode_envelopes: bool     # any alias differs -> envelopes re-encoded
+
+    @property
+    def replay_comm_split(self) -> bool:
+        """Split replays only when HYBRID resolves to replay AND the
+        destination has the native call; otherwise comm_create serializes."""
+        return self.same_family and self.native_split
+
+
+def translation_plan(src: str, dst: str, dst_backend=None) -> PairPlan:
+    """Build the capability-translation plan for restarting a checkpoint
+    taken under ``src`` on a lower half of flavor ``dst``.  ``dst_backend``
+    (a live instance) supplies capabilities/aliasing; without one a
+    throwaway probe instance is constructed."""
+    if dst_backend is None:
+        from repro.core.backends.fabric import Fabric
+        dst_backend = BACKENDS[dst](Fabric(1), 0, 1)
+    from repro.core.backends.base import PREDEFINED_DTYPES
+    aliases = {nm: dst_backend.alias_dtype(nm)
+               for nm, _, _ in PREDEFINED_DTYPES}
+    return PairPlan(
+        src=src, dst=dst,
+        src_family=backend_family(src),
+        dst_family=dst_backend.family,
+        same_family=backend_family(src) == dst_backend.family,
+        native_split="comm_split" in dst_backend.capabilities(),
+        dtype_aliases=aliases,
+        reencode_envelopes=any(k != v for k, v in aliases.items()),
+    )
+
+
+def restart_matrix() -> dict:
+    """Every ordered (checkpoint_backend, restart_backend) pair with its
+    resolved translation plan — the support matrix documented in
+    docs/restart_matrix.md and exercised exhaustively by
+    tests/test_restore_matrix.py."""
+    return {(s, d): translation_plan(s, d)
+            for s in BACKENDS for d in BACKENDS}
+
+
+def reencode_envelope(env: dict, plan: PairPlan) -> dict:
+    """Re-encode a datatype envelope through the destination's aliasing
+    discipline: named leaves are mapped via ``alias_dtype`` (recursing into
+    derived-type ``base`` envelopes) so the rebuilt handle always lands on
+    the destination's canonical constant."""
+    if not plan.reencode_envelopes:
+        return env
+    out = dict(env)
+    if out.get("combiner") == "named":
+        out["name"] = plan.dtype_aliases.get(out["name"], out["name"])
+    base = out.get("base")
+    if isinstance(base, dict):
+        out["base"] = reencode_envelope(base, plan)
+    return out
+
+
+def resolve_strategy(d, plan: PairPlan) -> str:
+    """Per-descriptor reconstruction mode under a pair plan:
+    ``lazy`` (constants, §4.3) | ``replay`` | ``serialize``."""
+    if d.kind == Kind.COMM and d.meta.get("axis_name") == "world":
+        return "lazy"
+    if d.kind == Kind.DATATYPE and d.meta.get("envelope", {}).get(
+            "combiner") == "named":
+        return "lazy"
+    if d.kind == Kind.OP and d.meta.get("predefined"):
+        return "lazy"
+    if d.kind == Kind.COMM:
+        use_replay = (d.strategy == Strategy.RECORD_REPLAY or
+                      (d.strategy == Strategy.HYBRID and plan.same_family))
+        if use_replay and d.meta.get("color") is not None \
+                and plan.native_split:
+            return "replay"
+        return "serialize"
+    if d.kind == Kind.OP:
+        return "replay"
+    if d.kind == Kind.REQUEST:
+        return "request"
+    return "serialize"          # GROUP, derived DATATYPE
+
+
+# ---------------------------------------------------------------------------
+# rebind engine: dependency-ordered, parallel across and within ranks
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _RebindPlan:
+    """One rank's classified rebind work: descriptor jobs keyed by vid,
+    replay dependencies (parent comm before child split), and the
+    per-rank lock that serializes lower-half creation calls."""
+    mana: object
+    plan: PairPlan
+    by_vid: dict
+    modes: dict                  # vid -> lazy|replay|serialize|request
+    deps: dict = field(default_factory=dict)   # vid -> parent vid
+    stats: dict = field(default_factory=dict)
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+
+def _plan_rebind(mana, snap: dict) -> _RebindPlan:
+    """Swap the snapshot's vid table into ``mana`` and classify every
+    unbound descriptor under the pair plan.  No lower-half calls yet."""
+    plan = translation_plan(snap["backend_name"], mana.backend_name,
+                            mana.backend)
+    table = VidTable.restore(snap["vids"])
+    mana.vids = table
+    mana.log = list(snap["log"])
+    mana.pending_messages = [tuple(p) for p in snap["pending"]]
+    # rebuild the legacy shadow tables when running in slow-translation mode
+    if mana.legacy is not None:
+        from repro.core.legacy_vid import LegacyVidTables
+        mana.legacy = LegacyVidTables()
+        mana._legacy_of = {}
+    by_vid = {d.vid: d for d in table.all_descriptors()}
+    rp = _RebindPlan(mana=mana, plan=plan, by_vid=by_vid, modes={},
+                     stats={"replayed": 0, "serialized": 0, "lazy": 0,
+                            "reencoded_envelopes": 0})
+    # two passes: classify EVERYTHING first, then register dependencies.
+    # by_vid iterates in vid order, which for comms is ggid (hash) order —
+    # a child split can hash below its parent, so a single fused pass would
+    # silently drop the parent->child edge and let the parallel engine
+    # replay the split against world_comm instead of its parent.
+    for d in by_vid.values():
+        if d.phys is not None:
+            continue
+        mode = resolve_strategy(d, plan)
+        rp.modes[d.vid] = mode
+        if mode == "lazy":
+            rp.stats["lazy"] += 1
+    for vid, mode in rp.modes.items():
+        if mode != "replay":
+            continue
+        d = by_vid[vid]
+        if d.kind != Kind.COMM:
+            continue
+        parent = d.meta.get("parent")
+        # order only matters when the parent itself is being replayed/
+        # serialized in this pass (constants bind lazily on first use)
+        if parent in rp.modes and rp.modes[parent] in ("replay",
+                                                       "serialize"):
+            rp.deps[vid] = parent
+    return rp
+
+
+def _bind_one(rp: _RebindPlan, vid: int) -> None:
+    """Bind one descriptor's physical handle.  Creation calls serialize on
+    the rank's lock — lower halves are not thread-safe — but run
+    concurrently ACROSS ranks and with leaf-restore I/O."""
+    d = rp.by_vid[vid]
+    mode = rp.modes[vid]
+    backend = rp.mana.backend
+    plan = rp.plan
+    with rp.lock:
+        if mode == "replay" and d.kind == Kind.COMM:
+            parent = rp.by_vid.get(d.meta.get("parent"))
+            pphys = parent.phys if parent and parent.phys is not None \
+                else backend.world_comm()
+            d.phys = backend.comm_split(
+                pphys, d.meta["color"], d.meta["key"], d.meta["ranks"])
+            rp.stats["replayed"] += 1
+        elif d.kind == Kind.COMM:
+            d.phys = backend.comm_create(d.meta["ranks"])
+            rp.stats["serialized"] += 1
+        elif d.kind == Kind.GROUP:
+            d.phys = backend.comm_group(
+                backend.comm_create(d.meta["ranks"]))
+            rp.stats["serialized"] += 1
+        elif d.kind == Kind.DATATYPE:
+            env = reencode_envelope(d.meta["envelope"], plan)
+            if env != d.meta["envelope"]:
+                d.meta["envelope"] = env
+                rp.stats["reencoded_envelopes"] += 1
+            d.phys = backend.type_create(env)
+            rp.stats["serialized"] += 1
+        elif d.kind == Kind.OP:
+            d.phys = backend.op_create(d.meta["name"],
+                                       d.meta.get("commutative", True))
+            rp.stats["replayed"] += 1
+        elif d.kind == Kind.REQUEST:
+            # completed during drain; re-materialize as a done request
+            d.phys = backend.request_create(dict(d.meta))
+            d.state["done"] = True
+
+
+def _finalize_rebind(rp: _RebindPlan) -> None:
+    """Post-bind bookkeeping that needs every handle in place (legacy
+    shadow tables mirror physical handles)."""
+    mana = rp.mana
+    if mana.legacy is not None:
+        from repro.core.interpose import _KIND_NAME
+        for d in mana.vids.all_descriptors():
+            lvid = mana.legacy.insert(_KIND_NAME[d.kind], d.phys)
+            mana._legacy_of[d.vid] = lvid
+
+
+def _execute_rebind(plans: list, pool=None) -> None:
+    """Run every rank's rebind DAG.  With a pool: one combined ready-queue —
+    a job is submitted the moment its parent resolves, so independent
+    descriptors of ALL ranks interleave with whatever else (leaf reads) the
+    pool is chewing on.  Without: the seed-equivalent sequential walk in
+    creation order (kept as the measured baseline and zero-thread path)."""
+    if pool is None:
+        for rp in plans:
+            order = sorted((vid for vid, m in rp.modes.items() if m != "lazy"),
+                           key=lambda v: rp.by_vid[v].meta.get("order", 0))
+            for vid in order:
+                _bind_one(rp, vid)
+            _finalize_rebind(rp)
+        return
+
+    lock = threading.Lock()
+    done = threading.Event()
+    errors: list[BaseException] = []
+    waiting: dict[tuple, list] = {}      # (plan_i, parent) -> [(plan_i, vid)]
+    ready: list[tuple] = []
+    pending = 0
+    completed = 0
+    for i, rp in enumerate(plans):
+        for vid, mode in rp.modes.items():
+            if mode == "lazy":
+                continue
+            pending += 1
+            parent = rp.deps.get(vid)
+            if parent is None:
+                ready.append((i, vid))
+            else:
+                waiting.setdefault((i, parent), []).append((i, vid))
+    if pending == 0:
+        for rp in plans:
+            _finalize_rebind(rp)
+        return
+
+    def run(node):
+        nonlocal pending, completed
+        i, vid = node
+        try:
+            _bind_one(plans[i], vid)
+        except BaseException as e:  # noqa: BLE001
+            with lock:
+                errors.append(e)
+        with lock:
+            for child in waiting.pop((i, vid), ()):
+                pool.submit(run, child)
+            pending -= 1
+            completed += 1
+            if pending == 0:
+                done.set()
+
+    for node in ready:
+        pool.submit(run, node)
+    # progress-aware wait: raise only when a whole timeout slice passes
+    # with ZERO descriptors resolved — a genuine wedge — rather than
+    # capping total rebind time (a big world legitimately takes a while)
+    last = 0
+    while not done.wait(_REBIND_TIMEOUT):
+        with lock:
+            now, left = completed, pending
+        if now == last:
+            raise TimeoutError(f"rebind stalled: {left} descriptor(s) "
+                               f"unresolved with no progress for "
+                               f"{_REBIND_TIMEOUT}s")
+        last = now
+    if errors:
+        raise errors[0]
+    for rp in plans:
+        _finalize_rebind(rp)
+
+
+def rebind_objects(mana, snap: dict, *, pool=None) -> dict:
+    """Replace ``mana``'s fresh vid table with the snapshot's and bind
+    physical handles for every descriptor under the pair plan (checkpoint
+    flavor -> ``mana``'s flavor).  ``pool`` (a ``ckpt_io.IOPool``) enables
+    the dependency-ordered parallel engine; ``None`` is the sequential
+    baseline.  Returns the rebind stats, including the resolved pair."""
+    rp = _plan_rebind(mana, snap)
+    _execute_rebind([rp], pool)
+    rp.stats["pair"] = f"{rp.plan.src}->{rp.plan.dst}"
+    return rp.stats
+
+
+def rebind_world(pairs, *, pool=None) -> list:
+    """Rebind MANY ranks' snapshots concurrently over one pool (the restart
+    path: every rank's DAG plus the leaf-restore reads share the workers).
+    ``pairs`` is [(mana, snap), ...]; returns per-rank stats in order."""
+    plans = [_plan_rebind(m, s) for m, s in pairs]
+    _execute_rebind(plans, pool)
+    for rp in plans:
+        rp.stats["pair"] = f"{rp.plan.src}->{rp.plan.dst}"
+    return [rp.stats for rp in plans]
+
+
+# ---------------------------------------------------------------------------
+# array state: topology-oblivious load + elastic reshape
+# ---------------------------------------------------------------------------
+
+class _NpzCache:
+    """Bounded LRU of open ``np.load`` handles (legacy v1 images).  The seed
+    loader kept every handle open forever; this evicts + closes past ``cap``
+    and closes everything on exit."""
+
+    def __init__(self, cap: int = 8):
+        from collections import OrderedDict
+        self.cap = cap
+        self._od = OrderedDict()
+
+    def get(self, path):
+        if path in self._od:
+            self._od.move_to_end(path)
+            return self._od[path]
+        npz = np.load(path)
+        self._od[path] = npz
+        while len(self._od) > self.cap:
+            _, old = self._od.popitem(last=False)
+            old.close()
+        return npz
+
+    def close(self):
+        for npz in self._od.values():
+            npz.close()
+        self._od.clear()
+
+
+def _load_leaves_v1(ckpt_dir: Path, leaves_meta: list) -> list:
+    """Legacy (format 1) loader: monolithic per-rank ``arrays.npz`` files."""
+    cache = _NpzCache()
+    leaves = []
+    try:
+        for meta in leaves_meta:
+            arr = np.zeros(meta["shape"],
+                           dtype=ckpt_io.resolve_dtype(meta["dtype"]))
+            for sh in meta["shards"]:
+                data = cache.get(ckpt_dir / sh["file"])[sh["key"]]
+                idx = tuple(slice(a, b) for a, b in sh["index"])
+                arr[idx] = data
+            leaves.append(arr)
+    finally:
+        cache.close()
+    return leaves
+
+
+def plan_leaf_reads(manifest: dict) -> dict:
+    """Group every shard entry by the (step, rank) container that physically
+    holds its bytes — delta checkpoints point clean shards at a prior step —
+    so each read task opens exactly one shard file.  The write-side planner
+    (``ckpt_pipeline.plan_snapshot``) decided these locations; this is that
+    plan read back in reverse."""
+    groups: dict[tuple, list] = {}
+    for li, meta in enumerate(manifest["leaves"]):
+        for sh in meta["shards"]:
+            step = sh.get("step", manifest["step"])
+            groups.setdefault((step, sh["rank"]), []).append((li, sh))
+    return groups
+
+
+def _full_cover(sh: dict, shape: list) -> bool:
+    """True when one shard entry spans the entire leaf — the common case
+    (replicated or unsharded leaves), where the decoded bytes can BE the
+    leaf instead of being copied into a preallocated buffer."""
+    return sh["index"] == [[0, s] for s in shape]
+
+
+class ArrayRestoreJob:
+    """Leaf restore in flight on a shared pool.
+
+    Constructing the job preallocates every leaf and immediately submits
+    one task PER SHARD ENTRY — not per file — so a checkpoint whose bytes
+    all live in one rank's container still fans out across every worker
+    (entries of one file decode concurrently over a shared pread
+    descriptor).  The file reads and GIL-releasing decompression overlap
+    descriptor rebinding scheduled on the same pool; ``result()`` waits for
+    the reads and performs the elastic reshape placement."""
+
+    def __init__(self, ckpt_dir, manifest: dict, shardings, pool):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.manifest = manifest
+        self._meta = manifest["leaves"]
+        flat_sh, self._treedef = jax.tree.flatten(
+            shardings, is_leaf=lambda x: x is None)
+        if len(flat_sh) != len(self._meta):
+            raise ValueError(f"checkpoint has {len(self._meta)} leaves, "
+                             f"target tree has {len(flat_sh)}")
+        self._flat_sh = flat_sh
+        # leaves allocate lazily: a full-cover shard's decoded bytes BECOME
+        # the leaf (zero staging copy); only partially-sharded leaves get a
+        # preallocated destination buffer
+        self._leaves: list = [None] * len(self._meta)
+        self._readers: dict[tuple, ckpt_io.RankShardReader] = {}
+        self._rlock = threading.Lock()
+        self._alloc_lock = threading.Lock()
+        root = self.ckpt_dir.parent
+        self._futures = [
+            pool.submit(self._read_entry, root, step, rank, li, sh)
+            for (step, rank), shards in plan_leaf_reads(manifest).items()
+            for li, sh in shards]
+
+    def _reader(self, root, step, rank) -> ckpt_io.RankShardReader:
+        key = (step, rank)
+        with self._rlock:
+            r = self._readers.get(key)
+            if r is None:
+                rdir = root / f"step_{step:08d}" / f"rank{rank:05d}"
+                r = self._readers[key] = ckpt_io.RankShardReader(rdir)
+            return r
+
+    def _dest(self, li: int) -> np.ndarray:
+        arr = self._leaves[li]
+        if arr is None:
+            with self._alloc_lock:
+                arr = self._leaves[li]
+                if arr is None:
+                    meta = self._meta[li]
+                    arr = self._leaves[li] = np.empty(
+                        meta["shape"],
+                        dtype=ckpt_io.resolve_dtype(meta["dtype"]))
+        return arr
+
+    def _read_entry(self, root, step, rank, li, sh) -> None:
+        r = self._reader(root, step, rank)
+        if _full_cover(sh, self._meta[li]["shape"]):
+            # a full-cover shard is by construction the leaf's ONLY shard
+            self._leaves[li] = r.read(sh["key"])
+        else:
+            # disjoint destination slices: concurrent writers never overlap
+            idx = tuple(slice(a, b) for a, b in sh["index"])
+            self._dest(li)[idx] = r.read(sh["key"])
+
+    def result(self, timeout: float = 300.0):
+        first_err = None
+        for f in self._futures:
+            try:
+                f.result(timeout=timeout)
+            except BaseException as e:  # noqa: BLE001
+                if first_err is None:
+                    first_err = e
+        self.close()
+        if first_err is not None:
+            raise first_err
+        out = [place_leaf(arr, sh)
+               for arr, sh in zip(self._leaves, self._flat_sh)]
+        return jax.tree.unflatten(self._treedef, out)
+
+    def close(self) -> None:
+        """Release the shared readers (idempotent; ``result()`` calls it).
+        Callers that abandon the job after a failure elsewhere in the
+        restart MUST close it, or the pread fds leak."""
+        with self._rlock:
+            for r in self._readers.values():
+                r.close()
+
+
+def place_leaf(arr: np.ndarray, sharding):
+    """Put one reassembled host leaf onto devices under the NEW sharding —
+    the write-side shard planner run in reverse: each target device pulls
+    exactly the slice the new layout assigns it (``devices_indices_map``
+    via ``make_array_from_callback``), however the leaf was sharded at
+    checkpoint time.  ``None`` sharding (single-device run) is a plain
+    host->device transfer."""
+    if sharding is None:
+        return jax.numpy.asarray(arr)
+    try:
+        return jax.make_array_from_callback(
+            arr.shape, sharding, lambda idx: arr[idx])
+    except (TypeError, ValueError):
+        # exotic shardings (e.g. bare SingleDeviceSharding wrappers that
+        # reject the callback protocol): whole-leaf put, XLA reshards
+        return jax.device_put(arr, sharding)
+
+
+def _load_leaves_v2_seq(ckpt_dir: Path, manifest: dict) -> list:
+    """Sequential v2 loader: same format, same group plan, same zero-copy
+    full-cover path, ZERO threads — the measured baseline for the
+    parallel-restore gate in benchmarks/bench_restart.py (and the fallback
+    when a caller cannot afford a pool)."""
+    leaves_meta = manifest["leaves"]
+    leaves: list = [None] * len(leaves_meta)
+    root = Path(ckpt_dir).parent
+    for (step, rank), shards in plan_leaf_reads(manifest).items():
+        rdir = root / f"step_{step:08d}" / f"rank{rank:05d}"
+        with ckpt_io.RankShardReader(rdir) as r:
+            for li, sh in shards:
+                meta = leaves_meta[li]
+                if _full_cover(sh, meta["shape"]):
+                    leaves[li] = r.read(sh["key"])
+                    continue
+                if leaves[li] is None:
+                    leaves[li] = np.empty(
+                        meta["shape"],
+                        dtype=ckpt_io.resolve_dtype(meta["dtype"]))
+                idx = tuple(slice(a, b) for a, b in sh["index"])
+                leaves[li][idx] = r.read(sh["key"])
+    return leaves
+
+
+def load_arrays(ckpt_dir, shardings, *, io_workers=None, parallel=True,
+                pool=None):
+    """Reassemble every leaf from per-rank shard files and place it with the
+    NEW shardings (tree matching the manifest leaf order) — the new mesh /
+    device count may differ from checkpoint time (elastic reshape).
+
+    ``parallel=True`` fans shard-group reads out over ``pool`` (or a
+    transient pool of ``io_workers``); ``parallel=False`` is the sequential
+    baseline.  Handles both the v2 chunked/compressed/incremental format
+    and legacy v1 npz images."""
+    ckpt_dir = Path(ckpt_dir)
+    manifest = load_manifest(ckpt_dir)
+    if manifest.get("format", 1) >= 2:
+        if parallel:
+            own = pool is None
+            if own:
+                pool = ckpt_io.IOPool(
+                    io_workers
+                    or ckpt_io.default_workers(manifest["world_size"]))
+            try:
+                return ArrayRestoreJob(ckpt_dir, manifest, shardings,
+                                       pool).result()
+            finally:
+                if own:
+                    pool.close()
+        leaves = _load_leaves_v2_seq(ckpt_dir, manifest)
+    else:
+        leaves = _load_leaves_v1(ckpt_dir, manifest["leaves"])
+    flat_sh, treedef = jax.tree.flatten(shardings, is_leaf=lambda x: x is None)
+    if len(flat_sh) != len(leaves):
+        raise ValueError(f"checkpoint has {len(leaves)} leaves, "
+                         f"target tree has {len(flat_sh)}")
+    out = [place_leaf(arr, sh) for arr, sh in zip(leaves, flat_sh)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint directory scanning: manifests, rank images, resume chains
+# ---------------------------------------------------------------------------
+
+def load_manifest(ckpt_dir) -> dict:
+    return json.loads((Path(ckpt_dir) / "manifest.json").read_text())
+
+
+def load_rank_state(ckpt_dir, rank: int) -> dict:
+    p = Path(ckpt_dir) / f"rank{rank:05d}" / "state.json"
+    return json.loads(p.read_text())
+
+
+def completed_steps(base_dir) -> list:
+    """Sorted committed step dirs under a checkpoint base dir (``.tmp`` and
+    uncommitted dirs are invisible: half-written checkpoints can never be
+    restored from)."""
+    base = Path(base_dir)
+    if not base.is_dir():
+        return []
+    return sorted(d for d in base.iterdir()
+                  if d.name.startswith("step_")
+                  and not d.name.endswith(".tmp")
+                  and (d / "COMMIT").exists())
+
+
+def find_resumable(base_dir):
+    """Newest committed checkpoint whose delta chain fully resolves: every
+    ``base_steps`` entry a delta manifest references must itself still be a
+    committed step dir (GC protects live chains, but an operator rm / a
+    partial copy can orphan one).  Walks newest-to-oldest and returns the
+    first intact checkpoint, or ``None`` — resume-from-latest must never
+    pick an image whose clean shards have no backing bytes."""
+    steps = completed_steps(base_dir)
+    have = set()
+    for d in steps:
+        try:
+            have.add(int(d.name[len("step_"):]))
+        except ValueError:
+            continue
+    for d in reversed(steps):
+        try:
+            man = load_manifest(d)
+        except (OSError, ValueError):
+            continue
+        if all(b in have for b in man.get("base_steps", [])):
+            return d
+    return None

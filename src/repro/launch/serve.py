@@ -17,7 +17,7 @@ import numpy as np
 from repro import steps as ST
 from repro.configs import get_config, smoke_config
 from repro.core import Cluster
-from repro.core.restart import load_arrays, load_manifest, load_rank_state
+from repro.core.restore import load_arrays, load_manifest, load_rank_state
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
 from repro.sharding import ShardingCtx, rules_for
@@ -39,6 +39,7 @@ class Server:
         self.caches = None
         self.pos = 0
         self.generated = []
+        self.resume_tok = None
 
     def prefill(self, tokens, patch_embeds=None, pad_to=None):
         batch = {"tokens": jnp.asarray(tokens)}
@@ -78,24 +79,49 @@ class Server:
     # -- transparent serving snapshot ---------------------------------------
     def checkpoint(self, tag=0):
         arrays = {"caches": self.caches}
-        req = self.cluster.checkpoint(
-            tag, arrays, self.mesh,
-            extra_rank_state=lambda r: {"pos": int(self.pos)})
+        extra = {"pos": int(self.pos)}
+        if self.generated:
+            # the token that seeds the next decode step after a resume
+            extra["last_tok"] = np.asarray(self.generated[-1]).tolist()
+        req = self.cluster.checkpoint(tag, arrays, self.mesh,
+                                      extra_rank_state=lambda r: dict(extra))
         return req
 
-    def restore(self, ckpt_dir):
-        cache_sh = jax.tree.map(lambda x: None, {"caches": self.caches},
-                                is_leaf=lambda x: x is None) \
-            if self.caches is not None else None
+    def restore(self, ckpt_dir, *, new_backend=None):
+        """Resume mid-sequence from a serving snapshot.  ``new_backend``
+        rebuilds the cluster's lower halves under a different flavor
+        (cross-backend restart) with cache-leaf reads overlapping the
+        descriptor re-bind; restart phase timings land in
+        ``self.cluster.restart_timings``."""
         # shardings: reuse current cache structure if present, else None tree
         manifest = load_manifest(ckpt_dir)
         if self.caches is not None:
             sh = {"caches": jax.tree.map(lambda _: None, self.caches)}
         else:
             sh = {"caches": [None] * len(manifest["leaves"])}
-        arrays = load_arrays(ckpt_dir, sh)
+        if new_backend is not None:
+            self.cluster = self.cluster.restart(ckpt_dir,
+                                                new_backend=new_backend,
+                                                shardings=sh)
+            arrays = self.cluster.restored_arrays
+        else:
+            arrays = load_arrays(ckpt_dir, sh)
         self.caches = arrays["caches"]
-        self.pos = load_rank_state(ckpt_dir, 0)["pos"]
+        rs = load_rank_state(ckpt_dir, 0)
+        self.pos = rs["pos"]
+        self.resume_tok = np.asarray(rs["last_tok"], np.int32) \
+            if "last_tok" in rs else None
+
+    def resume_latest(self, *, new_backend=None):
+        """Resume-from-latest with delta-chain resolution; returns the
+        checkpoint dir or ``None`` when nothing restorable exists."""
+        if self.cluster.writer is None:
+            return None
+        ck = self.cluster.writer.resumable()
+        if ck is None:
+            return None
+        self.restore(ck, new_backend=new_backend)
+        return ck
 
 
 def main():
@@ -105,9 +131,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--backend", default="mpich")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="snapshot dir; enables mid-decode checkpointing")
+    ap.add_argument("--snapshot-at", type=int, default=0,
+                    help="take a serving snapshot after N decode steps")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the newest resolvable snapshot in "
+                         "--ckpt-dir instead of prefilling from scratch")
+    ap.add_argument("--restore-backend", default=None,
+                    choices=["mpich", "craympi", "openmpi", "exampi",
+                             "fabric"],
+                    help="backend flavor to restart under on --resume")
     args = ap.parse_args()
     cfg = smoke_config(args.arch)
-    srv = Server(cfg, backend=args.backend)
+    srv = Server(cfg, backend=args.backend, ckpt_dir=args.ckpt_dir)
     rng = np.random.default_rng(0)
     shape = (args.batch, cfg.n_codebooks, args.prompt_len) \
         if cfg.n_codebooks > 1 else (args.batch, args.prompt_len)
@@ -118,9 +155,30 @@ def main():
     first = np.argmax(np.asarray(logits)[..., : cfg.vocab_size], axis=-1)
     if cfg.n_codebooks > 1:
         first = first.reshape(args.batch, -1)[:, : cfg.n_codebooks]
-    toks, dt = srv.decode(args.gen, first.astype(np.int32))
-    print(f"generated {args.gen} tokens x batch {args.batch} in {dt:.2f}s "
-          f"({args.gen * args.batch / dt:.1f} tok/s)")
+    first = first.astype(np.int32)
+    gen = args.gen
+    # NB: the prefill above runs even on --resume — the snapshot stores
+    # cache LEAVES only, and Server.restore needs a live cache pytree to
+    # recover the tree structure; the prefill is what builds it.  A
+    # production server would persist the treedef and skip this.
+    if args.resume and args.ckpt_dir:
+        ck = srv.resume_latest(new_backend=args.restore_backend)
+        if ck is not None:
+            gen = max(args.prompt_len + args.gen - srv.pos, 0)
+            if srv.resume_tok is not None:
+                first = srv.resume_tok
+            print(f"resumed {ck.name} mid-sequence at pos {srv.pos} under "
+                  f"{srv.cluster.backend_name}; {gen} tokens left")
+    elif args.ckpt_dir and args.snapshot_at:
+        toks, dt = srv.decode(min(args.snapshot_at, gen), first)
+        srv.checkpoint(tag=srv.pos).wait()
+        print(f"serving snapshot at pos {srv.pos} -> "
+              f"{srv.cluster.writer.latest().name}")
+        gen -= len(toks)
+        first = toks[-1]
+    toks, dt = srv.decode(gen, first)
+    print(f"generated {gen} tokens x batch {args.batch} in {dt:.2f}s "
+          f"({gen * args.batch / dt:.1f} tok/s)")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import numpy as np
 from repro import steps as ST
 from repro.configs import CkptIOConfig, get_config, smoke_config
 from repro.core import Cluster
-from repro.core.restart import load_arrays, load_manifest, load_rank_state
+from repro.core.restore import load_manifest, load_rank_state
 from repro.data import DataPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
@@ -55,6 +55,7 @@ class Trainer:
         self.params = None
         self.opt_state = None
         self.history = []
+        self.restart_timings = {}
 
     # ------------------------------------------------------------------
     def _build_step(self):
@@ -143,19 +144,39 @@ class Trainer:
               f"{self.cluster.backend_name})", flush=True)
 
     def restore(self, ckpt_dir, *, new_world_size=None, new_backend=None):
+        """Elastic restart from a checkpoint dir: array-leaf reads overlap
+        descriptor re-binding on one pool (``Cluster.restart``), and the
+        phase timings land in ``self.restart_timings`` (mirroring
+        ``checkpoint``'s ``req.timings``)."""
         manifest = load_manifest(ckpt_dir)
         self.pipeline.stop()
+        shardings = {"params": self.param_sh, "opt": self.opt_sh}
         self.cluster = self.cluster.restart(ckpt_dir,
                                             new_world_size=new_world_size,
-                                            new_backend=new_backend)
-        shardings = {"params": self.param_sh, "opt": self.opt_sh}
-        arrays = load_arrays(ckpt_dir, shardings)
+                                            new_backend=new_backend,
+                                            shardings=shardings)
+        arrays = self.cluster.restored_arrays
+        self.restart_timings = self.cluster.restart_timings
         self.params, self.opt_state = arrays["params"], arrays["opt"]
         rs = load_rank_state(ckpt_dir, 0)
         self.step = rs["train_step"]
         self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],
                                             mana=self.cluster.mana(0))
         return manifest
+
+    def resume_latest(self, *, new_backend=None, new_world_size=None):
+        """Resume-from-latest with delta-chain resolution: picks the newest
+        committed checkpoint whose delta chain fully resolves
+        (``CheckpointWriter.resumable``).  Returns the checkpoint dir, or
+        ``None`` when nothing restorable exists (cold start)."""
+        if self.cluster.writer is None:
+            return None
+        ck = self.cluster.writer.resumable()
+        if ck is None:
+            return None
+        self.restore(ck, new_world_size=new_world_size,
+                     new_backend=new_backend)
+        return ck
 
 
 def main():
@@ -168,13 +189,22 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--world-size", type=int, default=2)
     ap.add_argument("--backend", default="mpich",
-                    choices=["mpich", "craympi", "openmpi", "exampi"])
+                    choices=["mpich", "craympi", "openmpi", "exampi",
+                             "fabric"])
     ap.add_argument("--translation", default="fast", choices=["fast", "slow"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--kill-rank-at", type=int, default=None)
     ap.add_argument("--restart-backend", default=None)
     ap.add_argument("--restart-world-size", type=int, default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest committed checkpoint in "
+                         "--ckpt-dir whose delta chain resolves")
+    ap.add_argument("--restore-backend", default=None,
+                    choices=["mpich", "craympi", "openmpi", "exampi",
+                             "fabric"],
+                    help="backend flavor to restart under on --resume "
+                         "(cross-backend restart; default: --backend)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-codec", default="zlib",
                     choices=["none", "zlib", "lz4", "int8"],
@@ -210,8 +240,26 @@ def main():
                  translation=args.translation, ckpt_dir=args.ckpt_dir,
                  lr=args.lr, total_steps=args.steps, ckpt_io=ckpt_io)
     tr.init_state()
+    n_steps = args.steps
+    if args.resume:
+        # the CLI's --world-size wins over the checkpoint's recorded world:
+        # elastic resume onto whatever fleet exists now
+        ck = tr.resume_latest(new_backend=args.restore_backend,
+                              new_world_size=args.world_size)
+        if ck is not None:
+            t = tr.restart_timings
+            print(f"resumed from {ck.name} at step {tr.step} under "
+                  f"{tr.cluster.backend_name} "
+                  f"(rebind {t['rebind_ms']:.1f}ms, arrays "
+                  f"{t['arrays_ms']:.1f}ms, total {t['total_ms']:.1f}ms)",
+                  flush=True)
+            # --steps is the TOTAL budget: a job preempted at step 60 of
+            # 100 resumes for the remaining 40, not another 100
+            n_steps = max(args.steps - tr.step, 0)
+        else:
+            print("no resumable checkpoint found — cold start", flush=True)
     try:
-        tr.run(args.steps, ckpt_every=args.ckpt_every,
+        tr.run(n_steps, ckpt_every=args.ckpt_every,
                kill_rank_at=args.kill_rank_at,
                new_world_size_on_restart=args.restart_world_size,
                new_backend_on_restart=args.restart_backend)
@@ -226,8 +274,12 @@ def main():
             except Exception as e:  # noqa: BLE001 — report, don't mask exit
                 print(f"checkpoint writer shutdown failed: {e}",
                       file=sys.stderr)
-    first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
-    print(f"done: loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+    if tr.history:
+        first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
+        print(f"done: loss {first:.4f} -> {last:.4f} over {n_steps} steps")
+    else:
+        print(f"done: nothing left to run (step {tr.step} >= "
+              f"--steps {args.steps})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,279 @@
+"""Cross-backend elastic restart: the full save->restore backend-pair
+matrix (docs/restart_matrix.md) at world=4.
+
+Every ordered (checkpoint_backend, restart_backend) pair is exercised
+against one rich checkpoint per source flavor — split communicators, a
+derived datatype over an ALIASED base (MPI_INT8_T), a custom reduction op,
+an in-flight message drained into the image — asserting restored
+param/optimizer equality, live handle translation through OLD handle
+values, drain-log replay stats, and the capability-translation counters
+the pair plan predicts."""
+import itertools
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BACKENDS, Cluster, backend_family, restart_matrix
+from repro.core.restore import (find_resumable, load_arrays, load_rank_state,
+                                translation_plan)
+
+WORLD = 4
+PAIRS = sorted(itertools.product(BACKENDS, BACKENDS))
+
+
+def _split_all(cluster, color_fn):
+    out = [None] * cluster.world_size
+
+    def run(r):
+        m = cluster.mana(r)
+        out[r] = m.comm_split(m.comm_world(), color_fn(r), r)
+
+    ts = [threading.Thread(target=run, args=(r,))
+          for r in range(cluster.world_size)]
+    [t.start() for t in ts]
+    [t.join(timeout=30) for t in ts]
+    assert all(h is not None for h in out)
+    return out
+
+
+class _SrcCkpt:
+    """One source flavor's checkpoint plus the OLD handle values the
+    restarted side must keep honoring."""
+
+    def __init__(self, base_dir, src: str):
+        rng = np.random.default_rng(7)
+        self.arrays = {
+            "params": jnp.asarray(rng.normal(size=(32, 16))
+                                  .astype(np.float32)),
+            "opt": {"m": jnp.asarray(rng.normal(size=(32, 16))
+                                     .astype(np.float32)),
+                    "count": jnp.asarray(np.int32(13))},
+        }
+        self.shardings = jax.tree.map(lambda _: None, self.arrays)
+        self.cluster = Cluster(WORLD, src, ckpt_dir=base_dir / f"ck_{src}")
+        self.subs = _split_all(self.cluster, lambda r: r % 2)
+        m0 = self.cluster.mana(0)
+        self.vec = m0.type_vector(3, 2, 8, m0.dtype_handles["MPI_INT8_T"])
+        self.op = m0.op_create("logsumexp", commutative=False)
+        self.cluster.mana(3).isend(0, tag=21, payload={"src": src})
+        self.cluster.checkpoint(5, self.arrays, None).wait()
+        self.ck = self.cluster.writer.latest()
+
+
+@pytest.fixture(scope="module")
+def src_ckpts(tmp_path_factory):
+    base = tmp_path_factory.mktemp("matrix")
+    return {src: _SrcCkpt(base, src) for src in BACKENDS}
+
+
+@pytest.mark.parametrize("src,dst", PAIRS)
+def test_backend_pair_restart(src_ckpts, src, dst):
+    sc = src_ckpts[src]
+    fresh = sc.cluster.restart(sc.ck, new_backend=dst,
+                               shardings=sc.shardings)
+    # -- param/optimizer equality through the overlapped restore ----------
+    got = fresh.restored_arrays
+    np.testing.assert_array_equal(np.asarray(got["params"]),
+                                  np.asarray(sc.arrays["params"]))
+    np.testing.assert_array_equal(np.asarray(got["opt"]["m"]),
+                                  np.asarray(sc.arrays["opt"]["m"]))
+    assert int(got["opt"]["count"]) == 13
+    # -- old handle values stay live under the new flavor ------------------
+    f0 = fresh.mana(0)
+    assert f0.comm_size(sc.subs[0]) == WORLD // 2
+    env = f0.type_envelope(sc.vec)
+    assert env["combiner"] == "vector" and env["stride"] == 8
+    base_name = env["base"]["name"]
+    # envelope re-encode: the aliased base landed on dst's canonical name
+    # (the SOURCE may itself have canonicalized at creation time — exampi
+    # resolves MPI_INT8_T to the shared MPI_CHAR pointer before logging)
+    plan = translation_plan(src, dst, f0.backend)
+    src_canonical = translation_plan(src, src).dtype_aliases["MPI_INT8_T"]
+    assert base_name == plan.dtype_aliases.get(src_canonical, src_canonical)
+    # -- drained in-flight message redelivered exactly once ----------------
+    assert f0.recv(3, 21) == {"src": src}
+    # nothing left, buffered or on the fabric (iprobe: non-blocking)
+    assert f0.iprobe(3, 21) is None
+    # -- drain-log replay stats rode the checkpoint image ------------------
+    rs = load_rank_state(sc.ck, 0)
+    assert rs["drain"]["messages_buffered"] >= 1 \
+        or load_rank_state(sc.ck, 3)["drain"]["requests_completed"] >= 1
+    # -- rebind counters match what the pair plan predicts -----------------
+    st = fresh.rebind_stats[0]
+    assert st["pair"] == f"{src}->{dst}"
+    assert st["lazy"] >= 3          # world comm + named dtypes + ops
+    if plan.replay_comm_split:
+        assert st["replayed"] >= 2  # the split comm AND the custom op
+    else:
+        assert st["serialized"] >= 1
+        assert st["replayed"] >= 1  # ops always replay
+    # -- restart timings mirror checkpoint's phase breakdown ---------------
+    for key in ("manifest_ms", "lower_half_ms", "rebind_ms", "arrays_ms",
+                "total_ms"):
+        assert key in fresh.restart_timings
+
+
+def test_matrix_shape_and_families():
+    m = restart_matrix()
+    assert len(m) == len(BACKENDS) ** 2
+    for (s, d), plan in m.items():
+        assert plan.same_family == (backend_family(s) == backend_family(d))
+    # the MPICH family replays across its members; nobody else cross-replays
+    assert m[("craympi", "mpich")].replay_comm_split
+    assert m[("mpich", "craympi")].replay_comm_split
+    assert not m[("mpich", "openmpi")].replay_comm_split
+    assert not m[("openmpi", "exampi")].replay_comm_split
+    # exampi restarts re-encode aliased dtype envelopes; others don't
+    assert m[("mpich", "exampi")].reencode_envelopes
+    assert not m[("exampi", "mpich")].reencode_envelopes
+
+
+def test_parallel_rebind_matches_sequential(src_ckpts):
+    sc = src_ckpts["craympi"]
+    par = sc.cluster.restart(sc.ck, new_backend="openmpi",
+                             shardings=sc.shardings, parallel=True)
+    seq = sc.cluster.restart(sc.ck, new_backend="openmpi",
+                             shardings=sc.shardings, parallel=False)
+    np.testing.assert_array_equal(np.asarray(par.restored_arrays["params"]),
+                                  np.asarray(seq.restored_arrays["params"]))
+    for a, b in zip(par.rebind_stats, seq.rebind_stats):
+        assert {k: a[k] for k in ("replayed", "serialized", "lazy")} \
+            == {k: b[k] for k in ("replayed", "serialized", "lazy")}
+    assert par.mana(0).comm_size(sc.subs[0]) \
+        == seq.mana(0).comm_size(sc.subs[0])
+
+
+@pytest.mark.parametrize("new_world", [2, 6])
+def test_elastic_world_resize_across_backends(src_ckpts, new_world):
+    sc = src_ckpts["mpich"]
+    fresh = sc.cluster.restart(sc.ck, new_backend="fabric",
+                               new_world_size=new_world,
+                               shardings=sc.shardings)
+    assert fresh.world_size == new_world
+    assert len(fresh.rebind_stats) == new_world
+    np.testing.assert_array_equal(np.asarray(fresh.restored_arrays["params"]),
+                                  np.asarray(sc.arrays["params"]))
+    # rank images wrap around: every new rank has a live vid table
+    for r in range(new_world):
+        assert fresh.mana(r).vids.live_count() > 0
+
+
+def test_find_resumable_skips_orphaned_delta_chain(tmp_path):
+    import shutil
+
+    from repro.core.ckpt import CheckpointWriter
+
+    # keep=5: GC retains everything here AND deltas stay deltas (a full
+    # checkpoint only every 5th) — keep=0 would force every step full
+    w = CheckpointWriter(tmp_path, 2, keep=5, codec="none",
+                         incremental=True)
+    arrays = {"w": jnp.arange(8.0)}
+    try:
+        w.checkpoint(1, arrays, None, {}).wait()      # full
+        w.checkpoint(2, arrays, None, {}).wait()      # delta on 1
+        w.checkpoint(3, arrays, None, {}).wait()      # delta on 1
+    finally:
+        w.close()
+    assert find_resumable(tmp_path).name == "step_00000003"
+    # orphan the chain: the base full checkpoint disappears behind GC's back
+    shutil.rmtree(tmp_path / "step_00000001")
+    res = find_resumable(tmp_path)
+    # steps 2 and 3 reference step 1 -> unusable; nothing intact remains
+    assert res is None
+    # a later FULL checkpoint becomes resumable again
+    w2 = CheckpointWriter(tmp_path, 2, keep=5, codec="none",
+                          incremental=True)
+    try:
+        w2.checkpoint(4, arrays, None, {}).wait()
+    finally:
+        w2.close()
+    assert find_resumable(tmp_path).name == "step_00000004"
+    out = load_arrays(tmp_path / "step_00000004", {"w": None})
+    np.testing.assert_array_equal(out["w"], np.arange(8.0))
+
+
+def test_nested_split_replay_keeps_parent_dependency(tmp_path):
+    """A replayed split must bind AFTER its parent regardless of ggid hash
+    order (vids are CRC32 of member ranks — a child can hash below its
+    parent, which a single-pass planner would mis-order)."""
+    from repro.core import Fabric, Mana
+    from repro.core.descriptors import Kind
+    from repro.core.restore import _plan_rebind, rebind_objects
+    from repro.core import ckpt_io
+
+    c = Cluster(WORLD, "mpich", ckpt_dir=tmp_path / "ck")
+    subs = _split_all(c, lambda r: r % 2)      # world -> {0,2} / {1,3}
+    # split the SUBCOMM again: a replayable split whose parent is itself
+    # a replayed descriptor
+    nested = [None] * WORLD
+
+    def run(r):
+        m = c.mana(r)
+        nested[r] = m.comm_split(subs[r], color=0, key=r)
+
+    ts = [threading.Thread(target=run, args=(r,)) for r in range(WORLD)]
+    [t.start() for t in ts]
+    [t.join(timeout=30) for t in ts]
+    snap = c.mana(0).snapshot()
+
+    # the plan must carry a dep edge for EVERY replayed child whose parent
+    # is rebuilt in this pass, independent of hash order
+    shell = Mana("craympi", Fabric(WORLD), 0, WORLD)
+    rp = _plan_rebind(shell, snap)
+    replayed_children = [
+        vid for vid, mode in rp.modes.items()
+        if mode == "replay" and rp.by_vid[vid].kind == Kind.COMM
+        and rp.by_vid[vid].meta.get("parent") in rp.modes
+        and rp.modes[rp.by_vid[vid].meta.get("parent")] != "lazy"]
+    assert replayed_children, "scenario must produce a dependent split"
+    for vid in replayed_children:
+        assert vid in rp.deps, f"missing parent dep for {vid:#x}"
+
+    # end-to-end under the PARALLEL engine: nested membership survives
+    pool = ckpt_io.IOPool(4)
+    try:
+        m2 = Mana("craympi", Fabric(WORLD), 0, WORLD)
+        rebind_objects(m2, c.mana(0).snapshot(), pool=pool)
+    finally:
+        pool.close()
+    assert m2.comm_size(nested[0]) == 2
+    assert sorted(m2._desc(nested[0]).meta["ranks"]) == [0, 2]
+    phys = m2._phys(nested[0])
+    assert sorted(m2.backend.comm_ranks(phys)) == [0, 2]
+
+
+def test_mana_restore_single_rank_api(src_ckpts):
+    """Mana.restore stays the supported single-rank entry point (used
+    outside Cluster.restart), with and without a pool."""
+    from repro.core import Fabric, Mana
+    from repro.core import ckpt_io
+
+    sc = src_ckpts["openmpi"]
+    snap = load_rank_state(sc.ck, 0)["mana"]
+    fabric = Fabric(WORLD)
+    seq = Mana.restore(dict(snap), fabric, 0, WORLD, backend_name="mpich")
+    assert seq.comm_size(sc.subs[0]) == WORLD // 2
+    pool = ckpt_io.IOPool(2)
+    try:
+        snap2 = load_rank_state(sc.ck, 0)["mana"]
+        par = Mana.restore(snap2, Fabric(WORLD), 0, WORLD,
+                           backend_name="exampi", pool=pool)
+    finally:
+        pool.close()
+    assert par.comm_size(sc.subs[0]) == WORLD // 2
+    assert par.type_envelope(sc.vec)["combiner"] == "vector"
+
+
+def test_resumable_writer_accessor(tmp_path):
+    from repro.core.ckpt import CheckpointWriter
+
+    w = CheckpointWriter(tmp_path, 2)
+    try:
+        assert w.resumable() is None
+        w.checkpoint(9, {"x": jnp.zeros(3)}, None, {}).wait()
+        assert w.resumable() == w.latest()
+    finally:
+        w.close()

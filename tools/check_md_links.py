@@ -1,0 +1,57 @@
+"""Markdown link checker (stdlib-only, CI docs job).
+
+Scans the repo's markdown files for inline links/images and verifies that
+every RELATIVE target resolves to an existing file (anchors are stripped;
+external http(s)/mailto links are skipped — CI must not depend on network).
+Exits non-zero listing each broken link as ``file:line: target``.
+
+  python tools/check_md_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules"}
+
+
+def md_files(root: Path):
+    for p in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def check(root: Path) -> list:
+    broken = []
+    for md in md_files(root):
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (root / path.lstrip("/")) if path.startswith("/") \
+                    else (md.parent / path)
+                if not resolved.exists():
+                    broken.append(f"{md.relative_to(root)}:{lineno}: {target}")
+    return broken
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path.cwd()
+    files = list(md_files(root))
+    broken = check(root)
+    for b in broken:
+        print(f"BROKEN LINK {b}")
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not broken else f'{len(broken)} broken link(s)'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
