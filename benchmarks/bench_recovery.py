@@ -1,0 +1,70 @@
+"""Recovery-path benchmark: MTTR breakdown for supervised auto-recovery.
+
+The chaos matrix asserts every failure class RECOVERS; this bench measures
+how fast — per-incident ``{detect, classify, restore, resume}_ms`` as
+reported by the supervisor, across representative failure classes.  The
+restore leg rides the elastic restart engine, so this is also the restart
+benchmark under realistic (failure-driven, world-shrinking) conditions
+rather than the clean A/B in ``bench_restart``.
+
+Rows (full bench mode, ``benchmarks/run.py``):
+    recovery_<kind>,<total_us>,detect=..;classify=..;restore=..;resume=..
+"""
+from __future__ import annotations
+
+import tempfile
+from dataclasses import replace
+from pathlib import Path
+
+STEPS = 9
+CKPT_EVERY = 3
+KINDS = ("kill_rank", "snapshot_error", "drop_token")
+
+
+def _trainer(ckpt_dir):
+    from repro.configs import CkptIOConfig, smoke_config
+    from repro.launch.train import Trainer
+    cfg = replace(smoke_config("granite-3-2b"), n_layers=1, d_model=32,
+                  n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                  vocab_size=128, vocab_pad_multiple=64)
+    io = CkptIOConfig(codec="zlib", incremental=True, drain_timeout=1.0)
+    return Trainer(cfg, batch_size=4, seq_len=16, world_size=2,
+                   ckpt_dir=ckpt_dir, total_steps=STEPS, ckpt_io=io)
+
+
+def measure(kind: str) -> dict:
+    """One supervised run with one injected fault; returns the incident's
+    timing breakdown."""
+    from repro.core.faults import FaultInjector, FaultPlan, FaultSpec, \
+        disarm_all
+    from repro.core.supervisor import Supervisor
+    disarm_all()
+    base = Path(tempfile.mkdtemp(prefix=f"bench_recovery_{kind}_"))
+    phase = "snapshot" if kind == "snapshot_error" else "compute"
+    at = 6 if phase == "snapshot" else 5
+    tr = _trainer(base / "ck")
+    tr.init_state()
+    try:
+        with FaultInjector(FaultPlan([FaultSpec(kind, at_step=at,
+                                                phase=phase)])) as injector:
+            sup = Supervisor(tr, injector=injector, lease_s=1.0,
+                             verbose=False)
+            incidents = sup.run(STEPS, ckpt_every=CKPT_EVERY)
+        assert incidents, f"{kind}: no incident recorded"
+        inc = incidents[0]
+        return {"kind": kind, "classified_as": inc.kind,
+                "world": f"{inc.world_before}->{inc.world_after}",
+                **inc.timings}
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def rows():
+    for kind in KINDS:
+        r = measure(kind)
+        yield (f"recovery_{r['kind']}", r["total_ms"] * 1e3,
+               f"classified={r['classified_as']};world={r['world']};"
+               f"detect_ms={r['detect_ms']:.1f};"
+               f"restore_ms={r['restore_ms']:.1f};"
+               f"resume_ms={r['resume_ms']:.1f}")

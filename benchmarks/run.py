@@ -73,6 +73,8 @@ def main() -> None:
     sections.append(("ckpt", bench_ckpt.rows))
     from benchmarks import bench_restart
     sections.append(("restart", bench_restart.rows))
+    from benchmarks import bench_recovery
+    sections.append(("recovery", bench_recovery.rows))
 
     failures = 0
     for name, fn in sections:

@@ -185,6 +185,9 @@ class CkptIOConfig:
     pipeline: bool = True             # pipelined double-buffered snapshot
     snapshot_batch_mb: float = 8.0    # raw MB per batched device_get group
     drain_backoff: float = 5e-5       # first quiesce poll sleep (s); doubles
+    drain_timeout: float = 10.0       # shared quiesce deadline (s); a blown
+                                      # slice raises DrainStallError for the
+                                      # supervisor to escalate
 
 
 @dataclass(frozen=True)

@@ -4,19 +4,26 @@ from repro.core.ckpt import CheckpointWriter
 from repro.core.ckpt_pipeline import HostArena, SnapshotPipeline, plan_snapshot
 from repro.core.coordinator import Cluster
 from repro.core.descriptors import Descriptor, Kind, Strategy
-from repro.core.drain import drain_rank, drain_world
+from repro.core.drain import DrainStallError, drain_rank, drain_world
+from repro.core.faults import (FaultInjector, FaultPlan, FaultSpec,
+                               InjectedFault, RankDeadError, failpoint)
 from repro.core.interpose import Mana, handle_vid, make_handle
 from repro.core.restore import (PairPlan, find_resumable, load_arrays,
                                 rebind_objects, rebind_world, restart_matrix,
-                                translation_plan)
+                                translation_plan, verify_checkpoint)
+from repro.core.supervisor import (Incident, LeaseDetector, RecoveryFailed,
+                                   Supervisor, WorldFailure, classify_failure)
 from repro.core.vid import VidTable, compute_ggid, pack_vid, vid_index, vid_kind
 
 __all__ = [
     "BACKENDS", "Fabric", "backend_family", "make_backend",
     "CheckpointWriter", "Cluster", "Descriptor", "Kind", "Strategy",
-    "drain_rank", "drain_world", "HostArena", "SnapshotPipeline",
-    "plan_snapshot", "Mana", "handle_vid", "make_handle", "PairPlan",
-    "find_resumable", "load_arrays", "rebind_objects", "rebind_world",
-    "restart_matrix", "translation_plan", "VidTable", "compute_ggid",
-    "pack_vid", "vid_index", "vid_kind",
+    "DrainStallError", "drain_rank", "drain_world", "FaultInjector",
+    "FaultPlan", "FaultSpec", "InjectedFault", "RankDeadError", "failpoint",
+    "HostArena", "SnapshotPipeline", "plan_snapshot", "Mana", "handle_vid",
+    "make_handle", "PairPlan", "find_resumable", "load_arrays",
+    "rebind_objects", "rebind_world", "restart_matrix", "translation_plan",
+    "verify_checkpoint", "Incident", "LeaseDetector", "RecoveryFailed",
+    "Supervisor", "WorldFailure", "classify_failure", "VidTable",
+    "compute_ggid", "pack_vid", "vid_index", "vid_kind",
 ]

@@ -103,6 +103,7 @@ class CheckpointRequest:
         self.directory = directory
         self.done = threading.Event()
         self.error = None
+        self.error_delivered = False  # wait() raised it to SOME caller
         self.write_stats: dict = {}
         self.timings: dict = {}
         self.release = lambda: None   # pipelined: opens the sink floodgates
@@ -111,6 +112,7 @@ class CheckpointRequest:
         if not self.done.wait(timeout):
             raise TimeoutError(f"checkpoint {self.directory} did not complete")
         if self.error:
+            self.error_delivered = True
             raise self.error
         return self.write_stats
 
@@ -252,7 +254,19 @@ class CheckpointWriter:
 
         pipe = ckpt_pipeline.SnapshotPipeline(
             pool, batch_bytes=self.snapshot_batch_bytes, arenas=self._arenas)
-        res = pipe.run(items, sink)
+        try:
+            res = pipe.run(items, sink)
+        except BaseException as e:       # noqa: BLE001 — incl. injected faults
+            # a fault mid-snapshot (e.g. the ckpt.snapshot_batch failpoint)
+            # must not leave the writer wedged: run() has already drained the
+            # sinks it submitted, so the container handles can be released
+            # and the request marked failed before the error propagates to
+            # the supervisor
+            for w in writers.values():
+                w.abort()
+            req.error = e
+            req.done.set()
+            raise
         req.timings["snapshot_ms"] = res["snapshot_ms"]
         req.timings["enqueue_ms"] = res["enqueue_ms"]
         req.write_stats["device_to_host_s"] = round(
@@ -276,7 +290,8 @@ class CheckpointWriter:
                 results = []
                 for r in range(self.world_size):
                     st = _writer_for(r).finish()   # ranks w/o shards: empty
-                    (tdir / f"rank{r:05d}" / "state.json").write_text(
+                    ckpt_io.atomic_write_text(
+                        tdir / f"rank{r:05d}" / "state.json",
                         json.dumps(rank_states.get(r, {})))
                     pr = per_rank[r]
                     results.append({"rank": r, "keys": pr["keys"],
@@ -338,8 +353,8 @@ class CheckpointWriter:
                 self.codec, self.chunk_bytes,
                 digests={k: digests[k] for k in fresh_keys & digests.keys()},
                 compute_digests=self.incremental and not lossy)
-            (rdir / "state.json").write_text(
-                json.dumps(rank_states.get(rank, {})))
+            ckpt_io.atomic_write_text(rdir / "state.json",
+                                      json.dumps(rank_states.get(rank, {})))
             raw_all = sum(a.nbytes for a in arrays_r.values())
             return {"rank": rank, "keys": list(arrays_r),
                     "digests": {**digests, **st["digests"]},
@@ -415,8 +430,9 @@ class CheckpointWriter:
             if per_rank_s else 0,
             **(extra_meta or {}),
         }
-        (tdir / "manifest.json").write_text(json.dumps(manifest))
-        (tdir / "COMMIT").write_text("ok")
+        ckpt_io.atomic_write_text(tdir / "manifest.json",
+                                  json.dumps(manifest))
+        ckpt_io.atomic_write_text(tdir / "COMMIT", "ok")
         if fdir.exists():
             shutil.rmtree(fdir)
         tdir.rename(fdir)       # atomic publish
@@ -480,14 +496,24 @@ class CheckpointWriter:
         self._since_full = 0
 
     def wait_idle(self):
-        if self._inflight is not None:
-            try:
-                self._inflight.wait()
-            finally:
-                # the request IS finished (possibly failed): clearing it even
-                # on error keeps later wait_idle/close calls from re-raising
-                # the same failure forever
-                self._inflight = None
+        req = self._inflight
+        if req is None:
+            return
+        # a failure is delivered EXACTLY once: if some caller already saw it
+        # via req.wait(), draining here (close(), Cluster.restart, the next
+        # checkpoint) must not re-raise it — a supervisor recovering FROM
+        # that failure would count the echo as a second incident
+        already = req.error_delivered
+        try:
+            req.wait()
+        except BaseException:
+            if not already:
+                raise
+        finally:
+            # the request IS finished (possibly failed): clearing it even
+            # on error keeps later wait_idle/close calls from re-raising
+            # the same failure forever
+            self._inflight = None
 
     def close(self):
         try:

@@ -34,10 +34,27 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core.faults import failpoint
+
 FORMAT_VERSION = 2
 DEFAULT_CHUNK_BYTES = 4 << 20        # 4 MiB raw per streamed chunk
 BIN_NAME = "shards.bin"
 INDEX_NAME = "index.json"
+
+
+def atomic_write_text(path, text: str) -> None:
+    """Crash-atomic text publish: write a sibling tmp file, fsync, then
+    ``os.replace`` over the destination.  A kill mid-publish leaves either
+    the old file or nothing — never a torn metadata file that makes a
+    checkpoint LOOK complete (the failure class the chaos harness's
+    corrupt/truncate faults exist to catch)."""
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +304,7 @@ class RankShardWriter:
         is the original bytes and the fused hash equals
         :func:`shard_digest` without a second memory pass.  (Callers must
         pre-compute digests for lossy codecs.)  Returns the entry digest."""
+        failpoint("ckpt_io.append", key=key, rank_dir=self.rank_dir)
         arr = np.asarray(arr)
         enc_arr, qmeta = self.codec.transform(arr)
         view = _byte_view(enc_arr)
@@ -338,7 +356,10 @@ class RankShardWriter:
         with self._lock:
             if not self._f.closed:
                 self._f.close()
-        (self.rank_dir / INDEX_NAME).write_text(json.dumps({
+        # tmp + os.replace: the index is the entry directory — published in
+        # place, a kill mid-write leaves a container that parses as "no/few
+        # entries" while shards.bin holds everything (silent data loss)
+        atomic_write_text(self.rank_dir / INDEX_NAME, json.dumps({
             "format": FORMAT_VERSION, "codec": self.codec.name,
             "entries": self.entries}))
         return {"raw_bytes": self.raw_bytes, "enc_bytes": self.enc_bytes,

@@ -39,6 +39,7 @@ import jax
 import numpy as np
 
 from repro.core import ckpt_io
+from repro.core.faults import failpoint
 
 DEFAULT_BATCH_MB = 8.0
 _MIN_BATCH_BYTES = 64 << 10
@@ -241,29 +242,47 @@ class SnapshotPipeline:
 
         futures = []
         t_get = t_submit = 0.0
-        for rank, its in batches:
-            t0 = time.perf_counter()
-            hosts = jax.device_get([it.data for it in its])
-            t_get += time.perf_counter() - t0
+        try:
+            for bi, (rank, its) in enumerate(batches):
+                # chaos-harness injection site: a raise here fails the
+                # checkpoint INSIDE its blocking window, mid-batch
+                failpoint("ckpt.snapshot_batch", rank=rank, batch=bi)
+                t0 = time.perf_counter()
+                hosts = jax.device_get([it.data for it in its])
+                t_get += time.perf_counter() - t0
 
-            def task(rank=rank, its=its, hosts=hosts):
-                window_closed.wait(timeout=60.0)
-                arena = _acquire_arena()
+                def task(rank=rank, its=its, hosts=hosts):
+                    window_closed.wait(timeout=60.0)
+                    arena = _acquire_arena()
+                    try:
+                        if arena is None:    # starved 30 s: degrade, don't die
+                            with clock:
+                                counters["spills"] += 1
+                            views = _spill(hosts)
+                        else:
+                            views = arena.place(hosts)
+                        sink(rank, its, views)
+                    finally:
+                        if arena is not None:
+                            arena.release()
+
+                t0 = time.perf_counter()
+                futures.append(self.pool.submit(task))
+                t_submit += time.perf_counter() - t0
+        except BaseException:
+            # fail CLEAN: open the floodgates so already-enqueued sinks don't
+            # camp on the 60 s backstop, and drain them so the caller can
+            # abort its writers without racing in-flight appends.  The
+            # per-future bound must exceed the 30 s arena-starvation window,
+            # or a task still waiting in _acquire_arena outlives the drain
+            # and appends into a writer the caller already aborted.
+            window_closed.set()
+            for f in futures:
                 try:
-                    if arena is None:        # starved 30 s: degrade, don't die
-                        with clock:
-                            counters["spills"] += 1
-                        views = _spill(hosts)
-                    else:
-                        views = arena.place(hosts)
-                    sink(rank, its, views)
-                finally:
-                    if arena is not None:
-                        arena.release()
-
-            t0 = time.perf_counter()
-            futures.append(self.pool.submit(task))
-            t_submit += time.perf_counter() - t0
+                    f.result(timeout=35.0)
+                except BaseException:  # noqa: BLE001 — best-effort drain
+                    pass
+            raise
         return {"futures": futures,
                 "release": window_closed.set,
                 "batches": len(batches),

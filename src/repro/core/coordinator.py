@@ -25,6 +25,10 @@ from repro.core.interpose import Mana
 class RankState:
     mana: Mana
     alive: bool = True
+    #: lower half unresponsive (crashed node): the rank cannot renew its
+    #: heartbeat lease, but the coordinator has not yet DETECTED the death —
+    #: that is the supervisor's job (lease expiry or active probe)
+    halted: bool = False
     last_heartbeat: float = field(default_factory=time.time)
 
 
@@ -64,6 +68,9 @@ class Cluster:
 
     @property
     def manas(self):
+        # halted (crashed-but-undetected) ranks are still in the world: a
+        # drain that probes one fails with RankDeadError, which is exactly
+        # how a checkpoint DISCOVERS an unreported death
         return [r.mana for r in self.ranks if r.alive]
 
     def mana(self, rank: int) -> Mana:
@@ -71,7 +78,10 @@ class Cluster:
 
     # -- heartbeats / failure detection ------------------------------------
     def heartbeat(self, rank: int):
-        self.ranks[rank].last_heartbeat = time.time()
+        # a halted rank's lease must EXPIRE: dead nodes don't heartbeat,
+        # even when the driver loop dutifully pings every rank id
+        if not self.ranks[rank].halted:
+            self.ranks[rank].last_heartbeat = time.time()
 
     def detect_failures(self, timeout_s: float = 5.0) -> list:
         now = time.time()
@@ -88,6 +98,26 @@ class Cluster:
         self.ranks[rank].mana.backend.shutdown()
         self.events.append(("killed", rank, time.time()))
 
+    def halt_rank(self, rank: int):
+        """A rank's node crashes WITHOUT the coordinator being told: the
+        lower half is swapped for a :class:`~repro.core.faults.DeadLowerHalf`
+        (any call raises ``RankDeadError``) and the rank stops renewing its
+        lease.  Unlike :meth:`kill_rank` the rank stays ``alive=True`` until
+        a failure detector actually notices — the honest failure model the
+        supervisor is built against."""
+        from repro.core.faults import DeadLowerHalf
+        r = self.ranks[rank]
+        r.mana.backend.shutdown()
+        r.mana.backend = DeadLowerHalf(rank, self.backend_name)
+        r.halted = True
+        self.events.append(("halted", rank, time.time()))
+
+    def survivors(self) -> list:
+        """Rank ids whose lower halves are still usable (not dead, not
+        halted) — the world an elastic recovery restarts on."""
+        return [i for i, r in enumerate(self.ranks)
+                if r.alive and not r.halted]
+
     # -- transparent checkpoint --------------------------------------------
     def checkpoint(self, step: int, arrays, mesh, extra_rank_state=None):
         """Drain -> barrier -> pipelined snapshot -> async write.  Returns
@@ -99,6 +129,7 @@ class Cluster:
         t0 = time.perf_counter()
         if self.ckpt_io.pipeline:
             drain_stats = drain_world(self.manas,
+                                      timeout=self.ckpt_io.drain_timeout,
                                       backoff=self.ckpt_io.drain_backoff)
         else:
             # pipeline=False selects the WHOLE PR 1 stop-the-world path for

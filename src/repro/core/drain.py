@@ -35,6 +35,19 @@ DEFAULT_TIMEOUT = 10.0
 DEFAULT_BACKOFF = 5e-5          # first poll sleep; doubles up to _BACKOFF_CAP
 _BACKOFF_CAP = 5e-3
 
+
+class DrainStallError(TimeoutError):
+    """A rank's quiesce blew its deadline slice: some request refused to
+    complete or the fabric refused to drain.  Carries the stalled ``rank``
+    and the partial ``stats`` so a supervisor can ESCALATE — classify the
+    stall, fence the stuck rank, and recover from the last good checkpoint —
+    instead of the checkpoint call crashing the job."""
+
+    def __init__(self, rank: int, stats: dict, msg: str):
+        self.rank = rank
+        self.stats = stats
+        super().__init__(msg)
+
 _pool: ThreadPoolExecutor | None = None
 _pool_size = 0
 _pool_lock = threading.Lock()
@@ -93,7 +106,8 @@ def drain_rank(mana, timeout: float = DEFAULT_TIMEOUT, *,
             break
         if time.time() >= p1_deadline:
             stats["waited_s"] = round(time.time() - t0, 6)
-            raise TimeoutError(
+            raise DrainStallError(
+                mana.rank, stats,
                 f"rank {mana.rank}: {len(pending)} request(s) refused to "
                 f"complete within the {p1_deadline - t0:.3f}s request-phase "
                 f"budget (first: {pending[0].vid:#x}); partial drain: {stats}")
@@ -112,7 +126,8 @@ def drain_rank(mana, timeout: float = DEFAULT_TIMEOUT, *,
         stats["messages_buffered"] += 1
         if time.time() >= deadline:
             stats["waited_s"] = round(time.time() - t0, 6)
-            raise TimeoutError(
+            raise DrainStallError(
+                mana.rank, stats,
                 f"rank {mana.rank}: fabric refused to drain within the "
                 f"{deadline - t0:.3f}s budget; partial drain: {stats}")
 
@@ -189,7 +204,11 @@ def drain_world(manas, timeout: float = DEFAULT_TIMEOUT, *,
 
     def one(m):
         st = drain_rank(m, timeout, backoff=backoff, deadline=deadline)
-        m.barrier(expected=n, timeout=max(deadline - time.time(), 0.1) + 5)
+        # barrier grace scales with the budget (capped at the historical 5 s)
+        # so a supervisor running a tight drain_timeout gets a proportionally
+        # tight escalation latency, not deadline + 5 s of dead air
+        m.barrier(expected=n, timeout=max(deadline - time.time(), 0.1)
+                  + min(5.0, timeout / 2))
         return st
 
     futures = {m.rank: pool.submit(one, m) for m in manas}

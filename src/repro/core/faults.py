@@ -1,0 +1,405 @@
+"""Fault-injection harness: scheduled, first-class failures for chaos testing.
+
+The NERSC production follow-up to MANA (Chouhan et al.) is blunt about where
+transparent checkpointing earns its keep: surviving *real* failures — dead
+ranks, torn writes, stalled drains — not the happy path.  This module makes
+failure a schedulable event instead of a hand-rolled ``Cluster.kill_rank``
+call, so the supervisor (``repro.core.supervisor``) and the chaos matrix
+(``tests/scenarios/chaos_matrix.py``) can continuously exercise every
+recovery path.
+
+Two mechanisms:
+
+**Failpoints** — named injection sites compiled into production code
+(``failpoint("ckpt.snapshot_batch", ...)``).  Disarmed, a failpoint is one
+dict lookup returning ``None``; armed, the registered handler runs with the
+site's context and may raise.  This is how a fault lands *inside* a layer
+(mid-``snapshot_batch``, mid-``RankShardWriter.add``) without threading
+test-only parameters through every signature.
+
+**FaultInjector** — interprets a :class:`FaultPlan` (a list of
+:class:`FaultSpec`) against a live cluster.  Each spec fires once at a
+scheduled step and simulates one production failure class:
+
+  ==============  ========================================================
+  kind            mechanics
+  ==============  ========================================================
+  kill_rank       the victim's lower half dies: backend swapped for a
+                  :class:`DeadLowerHalf` that raises on any call, and the
+                  rank stops renewing its heartbeat lease
+  stall_drain     a poisoned never-completing request is planted on the
+                  victim, so the next ``drain_world`` blows its deadline
+                  slice (``DrainStallError`` -> supervisor escalation)
+  corrupt_shard   random bytes overwrite the middle of a committed
+                  checkpoint's ``shards.bin`` (or ``index.json``) — the
+                  checkpoint *looks* complete but digest-verification
+                  must reject it
+  truncate_shard  a committed ``shards.bin`` is truncated to 60% (torn
+                  write at power loss)
+  drop_token      the victim's session token for COMM_WORLD is freed out
+                  from under it (fabric-direct nonce tokens are the
+                  motivating case; every flavor dangles uniformly via
+                  ``comm_free``), detected by the supervisor's active probe
+  snapshot_error  the ``ckpt.snapshot_batch`` failpoint raises mid-batch,
+                  failing a checkpoint inside its blocking window
+  ==============  ========================================================
+
+Nothing here imports the checkpoint/restore stack — injection sites call in,
+never the reverse — so arming faults can never change happy-path behavior.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+
+FAULT_KINDS = ("kill_rank", "stall_drain", "corrupt_shard", "truncate_shard",
+               "drop_token", "snapshot_error")
+
+#: fault -> the checkpoint-cycle phase where it lands (the chaos matrix
+#: sweeps (kind, phase, backend family); kill/drop can also fire at the
+#: checkpoint boundary, where death is discovered by the drain instead of
+#: the lease detector)
+DEFAULT_PHASE = {"kill_rank": "compute", "stall_drain": "drain",
+                 "corrupt_shard": "commit", "truncate_shard": "commit",
+                 "drop_token": "compute", "snapshot_error": "snapshot"}
+
+
+class InjectedFault(RuntimeError):
+    """Raised by failpoint handlers that inject an error (distinguishable
+    from organic failures in logs; the supervisor treats both the same)."""
+
+
+# ---------------------------------------------------------------------------
+# failpoints
+# ---------------------------------------------------------------------------
+
+_ARMED: dict[str, list] = {}
+_ARM_LOCK = threading.Lock()
+
+
+def failpoint(name: str, **ctx) -> None:
+    """Injection site hook.  Production code calls this at named sites;
+    the disarmed cost is a single dict lookup.  Handlers run with the
+    site's context kwargs and may raise to inject a failure."""
+    handlers = _ARMED.get(name)
+    if not handlers:
+        return
+    for h in list(handlers):
+        h(name, ctx)
+
+
+def arm(name: str, handler) -> None:
+    """Register ``handler(name, ctx)`` at a failpoint site."""
+    with _ARM_LOCK:
+        _ARMED.setdefault(name, []).append(handler)
+
+
+def disarm(name: str, handler=None) -> None:
+    """Remove one handler (or every handler of ``name``)."""
+    with _ARM_LOCK:
+        if handler is None:
+            _ARMED.pop(name, None)
+            return
+        hs = _ARMED.get(name, [])
+        if handler in hs:
+            hs.remove(handler)
+        if not hs:
+            _ARMED.pop(name, None)
+
+
+def disarm_all() -> None:
+    with _ARM_LOCK:
+        _ARMED.clear()
+
+
+def armed() -> list:
+    return sorted(_ARMED)
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FaultSpec:
+    """One scheduled fault."""
+    kind: str
+    at_step: int = 0             # workload step at which the fault fires
+    rank: int | None = None      # victim rank (None -> highest alive rank)
+    phase: str | None = None     # compute | drain | snapshot | commit
+    target: str = "shards"       # corrupt/truncate target: shards | index
+    fired: bool = False
+
+    _PHASES = ("compute", "commit", "drain", "snapshot", "checkpoint")
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"known: {FAULT_KINDS}")
+        if self.phase is None:
+            self.phase = DEFAULT_PHASE[self.kind]
+        # a typo'd phase would match NEITHER firing point and the fault
+        # would silently never inject — the operator would believe
+        # resilience was exercised when nothing happened
+        if self.phase not in self._PHASES:
+            raise ValueError(f"unknown fault phase {self.phase!r}; "
+                             f"known: {self._PHASES}")
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "at_step": self.at_step,
+                "rank": self.rank, "phase": self.phase,
+                "target": self.target}
+
+
+@dataclass
+class FaultPlan:
+    """An ordered list of scheduled faults, parseable from the CLI
+    (``train.py --fault-plan``) as inline JSON or a path to a JSON file:
+    ``[{"kind": "kill_rank", "at_step": 12, "rank": 1}, ...]``."""
+    specs: list = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultPlan":
+        s = text.strip()
+        if not s.startswith("[") and not s.startswith("{"):
+            s = Path(text).read_text()
+        data = json.loads(s)
+        if isinstance(data, dict):
+            data = [data]
+        return cls([FaultSpec(**{k: v for k, v in spec.items()
+                                 if k != "fired"}) for spec in data])
+
+    def to_json(self) -> str:
+        return json.dumps([s.to_dict() for s in self.specs])
+
+    def pending(self) -> list:
+        return [s for s in self.specs if not s.fired]
+
+
+# ---------------------------------------------------------------------------
+# dead lower half
+# ---------------------------------------------------------------------------
+
+class RankDeadError(RuntimeError):
+    """Any call into a dead rank's lower half (the MPI library of a crashed
+    node does not answer)."""
+
+    def __init__(self, rank, msg: str | None = None):
+        self.rank = rank
+        super().__init__(msg or f"rank {rank}: lower half is dead")
+
+
+class DeadLowerHalf:
+    """Backend stand-in for a crashed node: every call raises
+    :class:`RankDeadError`.  ``Cluster.halt_rank`` swaps this in so death is
+    OBSERVABLE (a drain probing the dead rank fails, the supervisor's active
+    probe fails) rather than the rank merely being flagged dead in the
+    coordinator's bookkeeping."""
+
+    def __init__(self, rank: int, name: str = "dead"):
+        self.rank = rank
+        self.name = name
+        self.world_size = 0
+
+    def shutdown(self):             # idempotent teardown stays callable
+        pass
+
+    def __getattr__(self, attr):
+        if attr.startswith("__"):
+            raise AttributeError(attr)
+        rank = object.__getattribute__(self, "rank")
+
+        def _dead(*a, **k):
+            raise RankDeadError(rank, f"rank {rank}: lower-half call "
+                                      f"{attr!r} on a dead node")
+        return _dead
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Fires a :class:`FaultPlan` against a live cluster.
+
+    The supervisor (or a driver loop) calls :meth:`on_step` once per
+    workload step; each due spec fires exactly once.  ``fired`` records
+    ``(step, spec)`` for assertions; every fired fault also lands in
+    ``cluster.events`` as ``("fault_injected", kind, rank, step)``."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.fired: list = []
+        self._armed: list = []      # (site, handler) pairs to disarm
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        """Disarm every failpoint this injector registered."""
+        for site, handler in self._armed:
+            disarm(site, handler)
+        self._armed.clear()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- firing -------------------------------------------------------------
+    _STEP_PHASES = ("compute", "commit")
+    _CKPT_PHASES = ("drain", "snapshot", "checkpoint")
+
+    def _fire_due(self, step: int, cluster, phases) -> list:
+        out = []
+        for spec in self.plan.specs:
+            if spec.fired or step < spec.at_step or spec.phase not in phases:
+                continue
+            spec.fired = True
+            self._fire(spec, step, cluster)
+            self.fired.append((step, spec))
+            out.append(spec)
+        return out
+
+    def on_step(self, step: int, cluster) -> list:
+        """Fire every due compute/commit-phase spec (called once per
+        workload step, before the step runs).  Returns the specs fired."""
+        return self._fire_due(step, cluster, self._STEP_PHASES)
+
+    def on_checkpoint(self, step: int, cluster) -> list:
+        """Fire every due drain/snapshot/checkpoint-phase spec (called
+        immediately before a checkpoint, so the fault lands inside the
+        stop-the-world window — discovered by the drain or the snapshot
+        engine rather than the lease detector)."""
+        return self._fire_due(step, cluster, self._CKPT_PHASES)
+
+    def _victim(self, spec: FaultSpec, cluster) -> int:
+        if spec.rank is not None:
+            return spec.rank
+        alive = cluster.survivors()
+        if not alive:
+            raise RuntimeError("no alive rank to inject into")
+        return alive[-1]
+
+    def _fire(self, spec: FaultSpec, step: int, cluster) -> None:
+        fn = getattr(self, f"_fire_{spec.kind}")
+        fn(spec, step, cluster)
+        cluster.events.append(("fault_injected", spec.kind,
+                               spec.rank, step))
+
+    # -- kill_rank ----------------------------------------------------------
+    def _fire_kill_rank(self, spec, step, cluster):
+        victim = spec.rank = self._victim(spec, cluster)
+        cluster.halt_rank(victim)
+
+    # -- stall_drain --------------------------------------------------------
+    def _fire_stall_drain(self, spec, step, cluster):
+        """Plant a poisoned request on the victim: its descriptor is pending
+        and the lower half reports it incomplete forever, so the next
+        ``drain_world`` burns its request-phase deadline slice and raises
+        ``DrainStallError`` — which the supervisor must catch and escalate
+        instead of letting the checkpoint crash the job."""
+        from repro.core.descriptors import request_desc
+        victim = spec.rank = self._victim(spec, cluster)
+        mana = cluster.ranks[victim].mana
+        backend = mana.backend
+        phys = backend.request_create({"op": "isend", "dst": victim,
+                                       "tag": -1, "poisoned": True})
+        d = request_desc("isend", peer=victim, tag=-1)
+        mana._register(d, phys)
+        poisoned = {id(phys)}
+        real_test_all, real_test = backend.test_all, backend.test
+
+        def test_all(requests):
+            flags = real_test_all(requests)
+            return [False if id(r) in poisoned else f
+                    for r, f in zip(requests, flags)]
+
+        def test(request):
+            if id(request) in poisoned:
+                return False
+            return real_test(request)
+
+        backend.test_all, backend.test = test_all, test
+
+    # -- corrupt / truncate -------------------------------------------------
+    def _latest_committed(self, cluster) -> Path:
+        from repro.core.restore import completed_steps
+        if cluster.writer is None:
+            raise RuntimeError("corrupt/truncate fault needs a ckpt_dir")
+        cluster.writer.wait_idle()     # the torn write targets COMMITTED bytes
+        done = completed_steps(cluster.writer.base)
+        if not done:
+            raise RuntimeError("no committed checkpoint to corrupt")
+        return done[-1]
+
+    def _victim_file(self, spec, cluster) -> Path:
+        from repro.core import ckpt_io
+        step_dir = self._latest_committed(cluster)
+        rdirs = sorted(d for d in step_dir.iterdir()
+                       if d.name.startswith("rank"))
+        # the torn write must hit a container that actually HOLDS entries:
+        # on a meshless run every shard lands in rank 0's container and the
+        # other rank dirs are empty — corrupting one of those would be a
+        # silent no-op and the chaos cell would "pass" without testing
+        # anything
+        if spec.rank is not None:
+            victims = [rdirs[spec.rank]]
+        else:
+            victims = [d for d in reversed(rdirs)
+                       if ckpt_io.read_rank_index(d).get("entries")]
+            if not victims:
+                raise RuntimeError(f"no rank container with entries under "
+                                   f"{step_dir} to corrupt")
+        rdir = victims[0]
+        spec.rank = rdirs.index(rdir)
+        name = ckpt_io.INDEX_NAME if spec.target == "index" \
+            else ckpt_io.BIN_NAME
+        return rdir / name
+
+    def _fire_corrupt_shard(self, spec, step, cluster):
+        path = self._victim_file(spec, cluster)
+        size = path.stat().st_size
+        blob = os.urandom(max(16, min(256, size // 4)))
+        with open(path, "r+b") as f:
+            f.seek(max(0, size // 2 - len(blob) // 2))
+            f.write(blob)
+
+    def _fire_truncate_shard(self, spec, step, cluster):
+        path = self._victim_file(spec, cluster)
+        os.truncate(path, int(path.stat().st_size * 0.6))
+
+    # -- drop_token ---------------------------------------------------------
+    def _fire_drop_token(self, spec, step, cluster):
+        """Free the victim's COMM_WORLD object out from under its session
+        token.  Every flavor dangles the same way (``comm_free`` removes the
+        entry its handle resolves through); fabric-direct is the motivating
+        case — its tokens embed a session nonce and nothing survives.  The
+        descriptor's cached phys is also dropped so the stale binding cannot
+        mask the dangling token."""
+        from repro.core.descriptors import Kind
+        victim = spec.rank = self._victim(spec, cluster)
+        mana = cluster.ranks[victim].mana
+        backend = mana.backend
+        backend.comm_free(backend.world_comm())
+        for d in mana.vids.iter_kind(Kind.COMM):
+            if d.meta.get("axis_name") == "world":
+                d.phys = backend.world_comm()  # stale token, now dangling
+
+    # -- snapshot_error -----------------------------------------------------
+    def _fire_snapshot_error(self, spec, step, cluster):
+        """Arm the ``ckpt.snapshot_batch`` failpoint: the NEXT pipelined
+        snapshot raises mid-batch, inside the blocking window.  One-shot:
+        the handler disarms itself before raising."""
+        site = "ckpt.snapshot_batch"
+
+        def handler(name, ctx):
+            disarm(site, handler)
+            raise InjectedFault(
+                f"injected snapshot fault at batch {ctx.get('batch')} "
+                f"(rank {ctx.get('rank')})")
+
+        arm(site, handler)
+        self._armed.append((site, handler))

@@ -627,25 +627,122 @@ def completed_steps(base_dir) -> list:
                   and (d / "COMMIT").exists())
 
 
-def find_resumable(base_dir):
-    """Newest committed checkpoint whose delta chain fully resolves: every
-    ``base_steps`` entry a delta manifest references must itself still be a
-    committed step dir (GC protects live chains, but an operator rm / a
-    partial copy can orphan one).  Walks newest-to-oldest and returns the
-    first intact checkpoint, or ``None`` — resume-from-latest must never
-    pick an image whose clean shards have no backing bytes."""
+def verify_checkpoint(step_dir, *, deep: bool = True) -> list:
+    """Integrity-check one committed checkpoint dir.  Returns a list of
+    problems (empty = the checkpoint verifies):
+
+      * manifest / per-rank ``index.json`` / ``state.json`` must parse;
+      * every entry's chunk extents must fit inside ``shards.bin`` (catches
+        truncation — a torn write at power loss);
+      * with ``deep=True`` every entry is decoded (corrupt compressed
+        streams fail here) and, where the index records a content digest
+        and the codec is lossless, re-hashed against it (catches silent
+        bit-flips in raw chunks).
+
+    Raw (``none``-codec) entries written without digests are structurally
+    checked only — write with ``incremental=True`` or a compressed codec
+    when corruption detection matters (the chaos harness does)."""
+    step_dir = Path(step_dir)
+    problems: list[str] = []
+    try:
+        manifest = load_manifest(step_dir)
+    except (OSError, ValueError) as e:
+        return [f"manifest unreadable: {e}"]
+    # every rank the manifest promises must have its container: restart
+    # reads rank{r}/state.json for r in range(world_size), so a lost rank
+    # dir (partial copy, operator rm) makes the image unrestorable even
+    # though everything still present verifies
+    for r in range(manifest.get("world_size", 0)):
+        if not (step_dir / f"rank{r:05d}").is_dir():
+            problems.append(f"rank{r:05d}: container missing")
+    for rdir in sorted(step_dir.iterdir()):
+        if not rdir.is_dir() or not rdir.name.startswith("rank"):
+            continue
+        try:
+            json.loads((rdir / "state.json").read_text())
+        except (OSError, ValueError) as e:
+            problems.append(f"{rdir.name}/state.json unreadable: {e}")
+        try:
+            index = ckpt_io.read_rank_index(rdir)
+        except (OSError, ValueError) as e:
+            problems.append(f"{rdir.name}/index.json unreadable: {e}")
+            continue
+        try:
+            bin_size = (rdir / ckpt_io.BIN_NAME).stat().st_size
+        except OSError as e:
+            problems.append(f"{rdir.name}/{ckpt_io.BIN_NAME} missing: {e}")
+            continue
+        entries = index.get("entries", {})
+        torn = False
+        for key, ent in entries.items():
+            end = ent["offset"] + sum(c[0] for c in ent["chunks"])
+            if end > bin_size:
+                problems.append(
+                    f"{rdir.name}/{key}: entry extends to byte {end} but "
+                    f"{ckpt_io.BIN_NAME} holds {bin_size} (truncated)")
+                torn = True
+        if torn or not deep or not entries:
+            continue
+        try:
+            codec = ckpt_io.get_codec(index["codec"])
+        except KeyError as e:
+            problems.append(f"{rdir.name}: unknown codec: {e}")
+            continue
+        with ckpt_io.RankShardReader(rdir, codec) as r:
+            for key, ent in entries.items():
+                try:
+                    arr = r.read(key)
+                except Exception as e:  # noqa: BLE001 — any decode failure
+                    problems.append(f"{rdir.name}/{key}: undecodable: {e}")
+                    continue
+                # lossy codecs round-trip to different bytes by design, so
+                # their recorded (pre-quantization) digests cannot re-verify
+                if ent.get("digest") and not codec.lossy:
+                    if ckpt_io.shard_digest(arr) != ent["digest"]:
+                        problems.append(
+                            f"{rdir.name}/{key}: content digest mismatch")
+    return problems
+
+
+def find_resumable(base_dir, *, verify: bool = True, deep: bool = True):
+    """Newest committed checkpoint that is actually RESTORABLE:
+
+      * its delta chain fully resolves — every ``base_steps`` entry a delta
+        manifest references must itself still be a committed step dir (GC
+        protects live chains, but an operator rm / a partial copy can
+        orphan one);
+      * with ``verify=True`` (default) the checkpoint AND every base step
+        its clean shards point at pass :func:`verify_checkpoint` — a torn
+        or corrupted image that still carries its COMMIT marker is skipped,
+        so recovery lands on the previous good checkpoint instead of
+        failing mid-restore.
+
+    Walks newest-to-oldest and returns the first intact checkpoint, or
+    ``None`` — resume-from-latest must never pick an image whose shards
+    have no (valid) backing bytes."""
     steps = completed_steps(base_dir)
-    have = set()
+    have: dict[int, Path] = {}
     for d in steps:
         try:
-            have.add(int(d.name[len("step_"):]))
+            have[int(d.name[len("step_"):])] = d
         except ValueError:
             continue
+    verified: dict[str, bool] = {}
+
+    def _ok(d: Path) -> bool:
+        if d.name not in verified:
+            verified[d.name] = not verify_checkpoint(d, deep=deep)
+        return verified[d.name]
+
     for d in reversed(steps):
         try:
             man = load_manifest(d)
         except (OSError, ValueError):
             continue
-        if all(b in have for b in man.get("base_steps", [])):
-            return d
+        bases = man.get("base_steps", [])
+        if not all(b in have for b in bases):
+            continue
+        if verify and not all(_ok(x) for x in [d] + [have[b] for b in bases]):
+            continue
+        return d
     return None

@@ -40,6 +40,7 @@ class Server:
         self.pos = 0
         self.generated = []
         self.resume_tok = None
+        self._tok = None         # next decode seed (supervised step state)
 
     def prefill(self, tokens, patch_embeds=None, pad_to=None):
         batch = {"tokens": jnp.asarray(tokens)}
@@ -59,25 +60,46 @@ class Server:
         self.pos = S
         return logits
 
+    # -- supervisor workload protocol ---------------------------------------
+    # (step / step_once / checkpoint / recover: the same contract Trainer
+    # implements, so one Supervisor drives training AND serving)
+    @property
+    def step(self) -> int:
+        return self.pos
+
+    def start_decode(self, first_token):
+        """Seed the supervised decode loop (``step_once`` consumes it)."""
+        self._tok = jnp.asarray(first_token)
+
+    def step_once(self):
+        """Decode ONE token from the internal seed; the unit the supervisor
+        drives between snapshots."""
+        logits, self.caches = self.decode_fn(self.params, self._tok,
+                                             jnp.int32(self.pos), self.caches)
+        tok = jnp.argmax(logits[..., : self.cfg.vocab_size], axis=-1)
+        if self.cfg.n_codebooks > 1:
+            tok = tok.reshape(tok.shape[0], -1)[:, : self.cfg.n_codebooks]
+        self._tok = tok.astype(jnp.int32)
+        out = np.asarray(self._tok)
+        self.generated.append(out)
+        self.pos += 1
+        for r in range(len(self.cluster.ranks)):
+            self.cluster.heartbeat(r)
+        return out
+
     def decode(self, n_tokens, first_token):
-        tok = jnp.asarray(first_token)
+        self.start_decode(first_token)
         out = []
         t0 = time.time()
         for _ in range(n_tokens):
-            logits, self.caches = self.decode_fn(self.params, tok,
-                                                 jnp.int32(self.pos), self.caches)
-            tok = jnp.argmax(logits[..., : self.cfg.vocab_size], axis=-1)
-            if self.cfg.n_codebooks > 1:
-                tok = tok.reshape(tok.shape[0], -1)[:, : self.cfg.n_codebooks]
-            tok = tok.astype(jnp.int32)
-            out.append(np.asarray(tok))
-            self.pos += 1
+            out.append(self.step_once())
         dt = time.time() - t0
-        self.generated.extend(out)
         return out, dt
 
     # -- transparent serving snapshot ---------------------------------------
-    def checkpoint(self, tag=0):
+    def checkpoint(self, tag=None):
+        if tag is None:
+            tag = self.pos
         arrays = {"caches": self.caches}
         extra = {"pos": int(self.pos)}
         if self.generated:
@@ -87,30 +109,47 @@ class Server:
                                       extra_rank_state=lambda r: dict(extra))
         return req
 
-    def restore(self, ckpt_dir, *, new_backend=None):
-        """Resume mid-sequence from a serving snapshot.  ``new_backend``
-        rebuilds the cluster's lower halves under a different flavor
-        (cross-backend restart) with cache-leaf reads overlapping the
-        descriptor re-bind; restart phase timings land in
-        ``self.cluster.restart_timings``."""
+    def restore(self, ckpt_dir, *, new_backend=None, new_world_size=None,
+                rebuild=False):
+        """Resume mid-sequence from a serving snapshot.  ``new_backend`` /
+        ``new_world_size`` / ``rebuild`` go through ``Cluster.restart``:
+        fresh lower halves (possibly a different flavor or a shrunken
+        world) with cache-leaf reads overlapping the descriptor re-bind;
+        restart phase timings land in ``self.cluster.restart_timings``."""
         # shardings: reuse current cache structure if present, else None tree
         manifest = load_manifest(ckpt_dir)
         if self.caches is not None:
             sh = {"caches": jax.tree.map(lambda _: None, self.caches)}
         else:
             sh = {"caches": [None] * len(manifest["leaves"])}
-        if new_backend is not None:
+        if new_backend is not None or new_world_size is not None or rebuild:
             self.cluster = self.cluster.restart(ckpt_dir,
                                                 new_backend=new_backend,
+                                                new_world_size=new_world_size,
                                                 shardings=sh)
             arrays = self.cluster.restored_arrays
         else:
             arrays = load_arrays(ckpt_dir, sh)
         self.caches = arrays["caches"]
         rs = load_rank_state(ckpt_dir, 0)
+        # rewinding pos must also rewind the generated stream, or the
+        # tokens decoded between snapshot and failure appear TWICE after
+        # the supervisor replays them
+        prefill_pos = self.pos - len(self.generated)
         self.pos = rs["pos"]
+        keep = max(0, self.pos - prefill_pos)
+        if len(self.generated) > keep:
+            del self.generated[keep:]
         self.resume_tok = np.asarray(rs["last_tok"], np.int32) \
             if "last_tok" in rs else None
+        if self.resume_tok is not None:
+            self._tok = jnp.asarray(self.resume_tok)
+
+    def recover(self, ckpt_dir, *, new_world_size=None):
+        """Supervisor entry point: rebuild the lower halves (tokens are
+        re-minted — the fabric-direct dropped-token case) on the surviving
+        world and rewind decode to the snapshot position."""
+        self.restore(ckpt_dir, new_world_size=new_world_size, rebuild=True)
 
     def resume_latest(self, *, new_backend=None):
         """Resume-from-latest with delta-chain resolution; returns the
@@ -142,6 +181,16 @@ def main():
                     choices=["mpich", "craympi", "openmpi", "exampi",
                              "fabric"],
                     help="backend flavor to restart under on --resume")
+    ap.add_argument("--supervise", action="store_true",
+                    help="decode under the auto-recovery supervisor "
+                         "(requires --ckpt-dir)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos testing: inline JSON or a path to a JSON "
+                         "fault plan (see train.py --fault-plan); implies "
+                         "--supervise")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="supervised mode: snapshot every N decode steps "
+                         "(default gen/2)")
     args = ap.parse_args()
     cfg = smoke_config(args.arch)
     srv = Server(cfg, backend=args.backend, ckpt_dir=args.ckpt_dir)
@@ -161,6 +210,10 @@ def main():
     # cache LEAVES only, and Server.restore needs a live cache pytree to
     # recover the tree structure; the prefill is what builds it.  A
     # production server would persist the treedef and skip this.
+    supervised = args.supervise or args.fault_plan
+    # resume runs FIRST (matching train.py): a preempted supervised server
+    # relaunched with --supervise --resume continues mid-sequence instead
+    # of silently cold-starting
     if args.resume and args.ckpt_dir:
         ck = srv.resume_latest(new_backend=args.restore_backend)
         if ck is not None:
@@ -169,13 +222,36 @@ def main():
                 first = srv.resume_tok
             print(f"resumed {ck.name} mid-sequence at pos {srv.pos} under "
                   f"{srv.cluster.backend_name}; {gen} tokens left")
-    elif args.ckpt_dir and args.snapshot_at:
+    elif args.ckpt_dir and args.snapshot_at and not supervised:
         toks, dt = srv.decode(min(args.snapshot_at, gen), first)
         srv.checkpoint(tag=srv.pos).wait()
         print(f"serving snapshot at pos {srv.pos} -> "
               f"{srv.cluster.writer.latest().name}")
         gen -= len(toks)
         first = toks[-1]
+    if supervised:
+        if not args.ckpt_dir:
+            raise SystemExit("--supervise requires --ckpt-dir")
+        from repro.core.faults import FaultInjector, FaultPlan
+        from repro.core.supervisor import Supervisor
+        plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
+            else FaultPlan()
+        srv.start_decode(first)
+        t0 = time.time()
+        with FaultInjector(plan) as injector:
+            sup = Supervisor(srv, injector=injector)
+            incidents = sup.run(gen,
+                                ckpt_every=args.snapshot_every
+                                or max(gen // 2, 1))
+        dt = time.time() - t0
+        for inc in incidents:
+            t = inc.timings
+            print(f"incident: {inc.kind} rank={inc.rank} "
+                  f"pos={inc.step}->{inc.resumed_step} ckpt={inc.ckpt} "
+                  f"restore={t['restore_ms']:.1f}ms", flush=True)
+        print(f"supervised decode: {gen} tokens x batch {args.batch} in "
+              f"{dt:.2f}s, {len(incidents)} incident(s)")
+        return
     toks, dt = srv.decode(gen, first)
     print(f"generated {gen} tokens x batch {args.batch} in {dt:.2f}s "
           f"({gen * args.batch / dt:.1f} tok/s)")

@@ -56,6 +56,7 @@ class Trainer:
         self.opt_state = None
         self.history = []
         self.restart_timings = {}
+        self._log_t0 = time.time()
 
     # ------------------------------------------------------------------
     def _build_step(self):
@@ -85,10 +86,36 @@ class Trainer:
         return jax.tree.map(lambda x, s: jax.device_put(x, s), batch, sh)
 
     # ------------------------------------------------------------------
+    def step_once(self):
+        """One training step: next batch -> jit'd SPMD update -> heartbeat
+        every rank.  The unit the supervisor drives; ``run`` loops over it."""
+        batch = self._device_batch(self.pipeline.next())
+        self.params, self.opt_state, metrics = self.train_step(
+            self.params, self.opt_state, batch, jnp.int32(self.step))
+        self.step += 1
+        for r in range(len(self.cluster.ranks)):
+            self.cluster.heartbeat(r)
+        return metrics
+
+    def log_step(self, metrics, log_every=25, force=False):
+        """Record/print progress every ``log_every`` steps (``run`` and the
+        supervisor both route through here)."""
+        if self.step % log_every and not force:
+            return
+        m = {k: float(v) for k, v in metrics.items()}
+        m["tokens_per_s"] = (self.batch_size * self.seq_len * log_every
+                             / max(time.time() - self._log_t0, 1e-9))
+        self._log_t0 = time.time()
+        m["step"] = self.step
+        self.history.append(m)
+        print(f"step {self.step:5d} loss {m['loss']:.4f} "
+              f"gnorm {m['grad_norm']:.3f} tok/s {m['tokens_per_s']:.0f}",
+              flush=True)
+
     def run(self, n_steps, *, ckpt_every=0, kill_rank_at=None,
             new_world_size_on_restart=None, new_backend_on_restart=None,
             log_every=25):
-        t0 = time.time()
+        self._log_t0 = time.time()
         target = self.step + n_steps
         while self.step < target:
             if kill_rank_at is not None and self.step == kill_rank_at:
@@ -96,24 +123,10 @@ class Trainer:
                 self._fail_and_recover(new_world_size_on_restart,
                                        new_backend_on_restart)
                 continue
-            batch = self._device_batch(self.pipeline.next())
-            self.params, self.opt_state, metrics = self.train_step(
-                self.params, self.opt_state, batch, jnp.int32(self.step))
-            self.step += 1
-            for r in range(len(self.cluster.ranks)):
-                self.cluster.heartbeat(r)
+            metrics = self.step_once()
             if ckpt_every and self.step % ckpt_every == 0:
                 self.checkpoint()
-            if self.step % log_every == 0 or self.step == target:
-                m = {k: float(v) for k, v in metrics.items()}
-                m["tokens_per_s"] = (self.batch_size * self.seq_len *
-                                     log_every / max(time.time() - t0, 1e-9))
-                t0 = time.time()
-                m["step"] = self.step
-                self.history.append(m)
-                print(f"step {self.step:5d} loss {m['loss']:.4f} "
-                      f"gnorm {m['grad_norm']:.3f} tok/s {m['tokens_per_s']:.0f}",
-                      flush=True)
+            self.log_step(metrics, log_every, force=self.step == target)
         return self.history
 
     # ------------------------------------------------------------------
@@ -163,6 +176,13 @@ class Trainer:
         self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],
                                             mana=self.cluster.mana(0))
         return manifest
+
+    def recover(self, ckpt_dir, *, new_world_size=None):
+        """Supervisor entry point: elastic restore onto the (possibly
+        shrunken) surviving world.  Same-size recovery keeps the mesh and
+        shardings, so post-recovery parameters are byte-identical to a
+        fault-free trajectory re-run from the same checkpoint."""
+        self.restore(ckpt_dir, new_world_size=new_world_size)
 
     def resume_latest(self, *, new_backend=None, new_world_size=None):
         """Resume-from-latest with delta-chain resolution: picks the newest
@@ -225,6 +245,25 @@ def main():
                     help="raw MB per batched device->host transfer group")
     ap.add_argument("--drain-backoff", type=float, default=5e-5,
                     help="first quiesce poll sleep in seconds (doubles)")
+    ap.add_argument("--drain-timeout", type=float, default=10.0,
+                    help="shared quiesce deadline in seconds (a blown slice "
+                         "raises DrainStallError for the supervisor)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the auto-recovery supervisor: failures "
+                         "are detected (heartbeat lease + lower-half probe), "
+                         "classified, and recovered from the newest "
+                         "digest-valid checkpoint on the surviving world")
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos testing: inline JSON or a path to a JSON "
+                         "fault plan, e.g. "
+                         '\'[{"kind": "kill_rank", "at_step": 12}]\' '
+                         "(kinds: kill_rank stall_drain corrupt_shard "
+                         "truncate_shard drop_token snapshot_error); "
+                         "implies --supervise")
+    ap.add_argument("--lease-s", type=float, default=2.0,
+                    help="supervisor heartbeat lease (s)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="supervisor recovery attempts per failure")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -234,7 +273,8 @@ def main():
                            keep=args.ckpt_keep,
                            pipeline=args.ckpt_pipeline,
                            snapshot_batch_mb=args.snapshot_batch_mb,
-                           drain_backoff=args.drain_backoff)
+                           drain_backoff=args.drain_backoff,
+                           drain_timeout=args.drain_timeout)
     tr = Trainer(cfg, batch_size=args.batch_size, seq_len=args.seq_len,
                  world_size=args.world_size, backend=args.backend,
                  translation=args.translation, ckpt_dir=args.ckpt_dir,
@@ -258,12 +298,34 @@ def main():
             n_steps = max(args.steps - tr.step, 0)
         else:
             print("no resumable checkpoint found — cold start", flush=True)
+    injector = None
     try:
-        tr.run(n_steps, ckpt_every=args.ckpt_every,
-               kill_rank_at=args.kill_rank_at,
-               new_world_size_on_restart=args.restart_world_size,
-               new_backend_on_restart=args.restart_backend)
+        if args.supervise or args.fault_plan:
+            from repro.core.faults import FaultInjector, FaultPlan
+            from repro.core.supervisor import Supervisor
+            plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
+                else FaultPlan()
+            injector = FaultInjector(plan)
+            sup = Supervisor(tr, injector=injector, lease_s=args.lease_s,
+                             max_retries=args.max_retries)
+            incidents = sup.run(n_steps, ckpt_every=args.ckpt_every)
+            for inc in incidents:
+                t = inc.timings
+                print(f"incident: {inc.kind} rank={inc.rank} "
+                      f"step={inc.step}->{inc.resumed_step} "
+                      f"ckpt={inc.ckpt} detect={t['detect_ms']:.1f}ms "
+                      f"restore={t['restore_ms']:.1f}ms "
+                      f"resume={t['resume_ms']:.1f}ms", flush=True)
+            print(f"supervised run done: {len(incidents)} incident(s), "
+                  f"world={len(tr.cluster.ranks)}", flush=True)
+        else:
+            tr.run(n_steps, ckpt_every=args.ckpt_every,
+                   kill_rank_at=args.kill_rank_at,
+                   new_world_size_on_restart=args.restart_world_size,
+                   new_backend_on_restart=args.restart_backend)
     finally:
+        if injector is not None:
+            injector.close()
         # EVERY exit path — exception, Ctrl-C, or clean finish — must leave
         # the in-flight pipelined checkpoint committed (wait_idle inside
         # close) or cleanly abandoned, never half-owned by a dying process
@@ -277,7 +339,7 @@ def main():
     if tr.history:
         first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
         print(f"done: loss {first:.4f} -> {last:.4f} over {n_steps} steps")
-    else:
+    elif not (args.supervise or args.fault_plan):
         print(f"done: nothing left to run (step {tr.step} >= "
               f"--steps {args.steps})")
 

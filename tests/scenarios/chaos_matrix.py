@@ -1,0 +1,241 @@
+"""Chaos matrix: sweep (fault kind x phase x backend family) through the
+supervised auto-recovery engine.
+
+Every cell trains a tiny model under the Supervisor with one scheduled
+fault plan, then asserts:
+
+  * the supervisor detected AND recovered (>= 1 incident of the expected
+    failure class, with the full {detect,classify,restore,resume}_ms
+    telemetry);
+  * the run still reaches the target step;
+  * post-recovery parameters AND optimizer state are BYTE-IDENTICAL to a
+    fault-free reference run at the same step (digest comparison over every
+    leaf) — recovery must be transparent, not merely survivable;
+  * corrupt/truncate cells additionally recovered from the checkpoint
+    BEFORE the poisoned one (digest-verified fallback).
+
+Modes:
+  --full    every valid (kind, phase) combo x every backend family
+  --smoke   one cell per fault kind, rotating backend families (the CI
+            chaos job: every PR exercises at least one injected fault per
+            fault type)
+  --quick   two cells (tier-1 wrapper: exercises the harness itself)
+
+Usage:  PYTHONPATH=src python tests/scenarios/chaos_matrix.py --smoke
+"""
+import argparse
+import itertools
+import json
+import os
+import sys
+import time
+from dataclasses import replace
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import CkptIOConfig, smoke_config  # noqa: E402
+from repro.core import ckpt_io  # noqa: E402
+from repro.core.backends import BACKENDS, backend_family  # noqa: E402
+from repro.core.faults import (FaultPlan, FaultSpec,  # noqa: E402
+                               FaultInjector, disarm_all)
+from repro.core.supervisor import Supervisor  # noqa: E402
+from repro.launch.train import Trainer  # noqa: E402
+
+WORLD = 2
+STEPS = 12
+CKPT_EVERY = 3
+
+#: valid (fault kind, phase) combos — the phase is WHERE the fault lands in
+#: the step/checkpoint cycle, which selects the detection path (lease/probe
+#: detector for compute-phase faults, the drain or the snapshot engine for
+#: stop-the-world-phase faults, the digest-verified resumable walk for
+#: commit-phase torn writes)
+KIND_PHASES = [
+    ("kill_rank", "compute"),
+    ("kill_rank", "drain"),          # death discovered BY the quiesce
+    ("stall_drain", "drain"),
+    ("snapshot_error", "snapshot"),
+    ("corrupt_shard", "commit"),
+    ("truncate_shard", "commit"),
+    ("drop_token", "compute"),
+]
+
+#: failure class each cell's first incident must be classified as
+EXPECT = {"kill_rank": "rank_dead", "stall_drain": "drain_stall",
+          "snapshot_error": "snapshot_error", "corrupt_shard": "rank_dead",
+          "truncate_shard": "rank_dead", "drop_token": "lost_token"}
+
+#: fault kinds whose recovery must land on the checkpoint BEFORE the newest
+#: (the newest was poisoned; digest verification must reject it)
+FALLBACK_KINDS = {"corrupt_shard", "truncate_shard"}
+
+
+def family_reps() -> dict:
+    """One representative backend per implementation family."""
+    reps = {}
+    for name in BACKENDS:
+        reps.setdefault(backend_family(name), name)
+    return reps
+
+
+def build_plan(kind: str, phase: str) -> FaultPlan:
+    if kind in FALLBACK_KINDS:
+        # poison the newest committed checkpoint (step 6) at step 7, then
+        # kill a rank at step 8: recovery must skip the poisoned image and
+        # fall back to step 3
+        return FaultPlan([FaultSpec(kind, at_step=7),
+                          FaultSpec("kill_rank", at_step=8, rank=0)])
+    if phase in ("drain", "snapshot"):
+        # stop-the-world faults fire at a checkpoint boundary
+        return FaultPlan([FaultSpec(kind, at_step=6, phase=phase)])
+    return FaultPlan([FaultSpec(kind, at_step=7, phase=phase)])
+
+
+def tiny_config():
+    return replace(smoke_config("granite-3-2b"), n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_size=256, vocab_pad_multiple=64)
+
+
+def io_config():
+    # incremental + zlib: every shard carries a content digest, so the
+    # verified-resumable walk can actually reject corrupted images
+    return CkptIOConfig(codec="zlib", incremental=True, keep=3,
+                        drain_timeout=1.0)
+
+
+def make_trainer(ckpt_dir, backend: str) -> Trainer:
+    return Trainer(tiny_config(), batch_size=4, seq_len=16, world_size=WORLD,
+                   backend=backend, ckpt_dir=ckpt_dir, total_steps=STEPS,
+                   ckpt_io=io_config())
+
+
+def param_digests(tr: Trainer) -> list:
+    leaves = jax.tree.leaves({"params": tr.params, "opt": tr.opt_state})
+    return [ckpt_io.shard_digest(jax.device_get(leaf)) for leaf in leaves]
+
+
+def run_reference(base: Path) -> list:
+    """Fault-free trajectory digest at the target step (backend-independent:
+    the training math is pure JAX over the mesh — the MPI plane never
+    touches it)."""
+    tr = make_trainer(base / "ref", "mpich")
+    tr.init_state()
+    tr.run(STEPS, ckpt_every=CKPT_EVERY, log_every=10 * STEPS)
+    ref = param_digests(tr)
+    tr.pipeline.stop()
+    tr.cluster.writer.close()
+    return ref
+
+
+def run_cell(base: Path, kind: str, phase: str, backend: str,
+             ref: list) -> dict:
+    disarm_all()
+    name = f"{kind}:{phase}:{backend}"
+    t0 = time.time()
+    tr = make_trainer(base / name.replace(":", "_"), backend)
+    tr.init_state()
+    try:
+        # inside the try: a cell whose supervisor raises (RecoveryFailed)
+        # must still release its pipeline threads and writer fds, or one
+        # failed cell leaks into every later one in the sweep
+        with FaultInjector(build_plan(kind, phase)) as injector:
+            sup = Supervisor(tr, injector=injector, lease_s=1.0,
+                             verbose=False)
+            incidents = sup.run(STEPS, ckpt_every=CKPT_EVERY)
+        assert injector.fired, f"{name}: fault never fired"
+        assert incidents, f"{name}: supervisor recorded no incident"
+        inc = incidents[0]
+        assert inc.kind == EXPECT[kind], \
+            f"{name}: classified {inc.kind!r}, expected {EXPECT[kind]!r} " \
+            f"({inc.error})"
+        assert tr.step == STEPS, f"{name}: stopped at step {tr.step}"
+        for key in ("detect_ms", "classify_ms", "restore_ms", "resume_ms"):
+            assert key in inc.timings, f"{name}: missing telemetry {key}"
+        if kind in FALLBACK_KINDS:
+            assert inc.resumed_step < 2 * CKPT_EVERY, \
+                f"{name}: resumed from {inc.resumed_step}, not the " \
+                f"pre-poison checkpoint"
+        assert param_digests(tr) == ref, \
+            f"{name}: post-recovery params NOT byte-identical to the " \
+            f"fault-free run"
+    finally:
+        tr.pipeline.stop()
+        try:
+            tr.cluster.writer.close()
+        except Exception:  # noqa: BLE001 — never mask the cell's verdict
+            pass
+    return {"cell": name, "kind": inc.kind, "rank": inc.rank,
+            "resumed_step": inc.resumed_step, "ckpt": inc.ckpt,
+            "world": f"{inc.world_before}->{inc.world_after}",
+            "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
+
+
+def select_cells(mode: str) -> list:
+    families = sorted(family_reps().values())
+    if mode == "full":
+        return [(k, p, b) for (k, p), b in
+                itertools.product(KIND_PHASES, families)]
+    if mode == "smoke":
+        # one cell per fault KIND (the CI gate: every fault type injected on
+        # every PR), rotating the backend family for cross-family coverage
+        kinds, cells = set(), []
+        for i, (k, p) in enumerate(KIND_PHASES):
+            if k in kinds:
+                continue
+            kinds.add(k)
+            cells.append((k, p, families[i % len(families)]))
+        return cells
+    # quick: exercises the harness itself from tier-1 without the sweep cost
+    return [("kill_rank", "compute", "mpich"),
+            ("snapshot_error", "snapshot", families[-1])]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--full", dest="mode", action="store_const",
+                      const="full", default="smoke")
+    mode.add_argument("--smoke", dest="mode", action="store_const",
+                      const="smoke")
+    mode.add_argument("--quick", dest="mode", action="store_const",
+                      const="quick")
+    ap.add_argument("--out", default=None, help="write cell results as JSON")
+    args = ap.parse_args()
+
+    import tempfile
+    base = Path(tempfile.mkdtemp(prefix="chaos_"))
+    cells = select_cells(args.mode)
+    print(f"chaos matrix ({args.mode}): {len(cells)} cell(s), "
+          f"world={WORLD}, steps={STEPS}", flush=True)
+    ref = run_reference(base)
+    results, failures = [], []
+    for kind, phase, backend in cells:
+        try:
+            r = run_cell(base, kind, phase, backend, ref)
+            results.append(r)
+            t = r["timings"]
+            print(f"  ok {r['cell']:<34} -> {r['kind']:<14} "
+                  f"resumed={r['resumed_step']} world={r['world']} "
+                  f"detect={t['detect_ms']:.0f}ms "
+                  f"restore={t['restore_ms']:.0f}ms [{r['wall_s']}s]",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — report every failed cell
+            failures.append(f"{kind}:{phase}:{backend}: {e}")
+            print(f"  FAIL {kind}:{phase}:{backend}: {e}", flush=True)
+    if args.out:
+        Path(args.out).write_text(json.dumps(
+            {"bench": "chaos_matrix", "mode": args.mode,
+             "cells": results, "failures": failures}, indent=2))
+    if failures:
+        print(f"CHAOS_MATRIX_FAILED ({len(failures)}/{len(cells)} cells)")
+        return 1
+    print(f"CHAOS_MATRIX_OK ({len(cells)} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -400,3 +400,66 @@ def test_write_error_surfaces_on_wait(tmp_path):
     req2 = w.checkpoint(2, {"a": jnp.zeros(2)}, None, {})
     with pytest.raises(Exception):
         req2.wait()
+
+
+# ---------------------------------------------------------------------------
+# crash-atomicity: kill-mid-append + torn index publish (chaos hardening)
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_append_leaves_previous_ckpt_resumable(tmp_path):
+    """A process death inside RankShardWriter.add (the ckpt_io.append
+    failpoint) must never poison resume: the half-written step stays
+    uncommitted and resume-from-latest lands on the previous good one."""
+    from repro.core import faults
+    from repro.core.restore import find_resumable
+
+    w = _writer(tmp_path, codec="zlib", incremental=True)
+    arrays = {"a": jnp.asarray(np.arange(4096, dtype=np.float32)),
+              "b": jnp.asarray(np.ones((64, 8), np.float32))}
+    w.checkpoint(1, arrays, None, {}).wait()
+    good = w.latest()
+
+    calls = []
+
+    def die_on_second(name, ctx):
+        calls.append(ctx["key"])
+        if len(calls) >= 2:
+            raise faults.InjectedFault("kill mid-append")
+
+    faults.arm("ckpt_io.append", die_on_second)
+    try:
+        arrays2 = {k: v + 1 for k, v in arrays.items()}
+        req = w.checkpoint(2, arrays2, None, {})
+        with pytest.raises(Exception):
+            req.wait()
+    finally:
+        faults.disarm("ckpt_io.append")
+    # the failed step never published: no COMMIT, invisible to scans
+    assert w.latest() == good
+    assert find_resumable(tmp_path / "ck") == good
+    out = load_arrays(good, {"a": None, "b": None})
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(arrays["a"]))
+    w.close()
+
+
+def test_index_publish_is_atomic(tmp_path):
+    """finish() publishes index.json via tmp + os.replace: no .tmp residue,
+    and a handler dying between container writes and finish leaves NO
+    index at all (unreadable dir) rather than a torn one."""
+    codec = ckpt_io.get_codec("zlib")
+    w = ckpt_io.RankShardWriter(tmp_path / "r0", codec)
+    w.add("x", np.arange(100, dtype=np.float32))
+    st = w.finish()
+    assert (tmp_path / "r0" / ckpt_io.INDEX_NAME).exists()
+    assert not (tmp_path / "r0" / (ckpt_io.INDEX_NAME + ".tmp")).exists()
+    assert ckpt_io.read_rank_index(tmp_path / "r0")["entries"].keys() \
+        == st["entries"].keys()
+
+
+def test_atomic_write_text_replaces_not_truncates(tmp_path):
+    p = tmp_path / "f.json"
+    p.write_text("old")
+    ckpt_io.atomic_write_text(p, "new contents")
+    assert p.read_text() == "new contents"
+    assert not p.with_name(p.name + ".tmp").exists()

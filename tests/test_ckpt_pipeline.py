@@ -312,10 +312,34 @@ def test_pipelined_writer_error_propagates(tmp_path):
     with pytest.raises(Exception):
         w.checkpoint(1, {"x": bad}, None, {}).wait()
     assert w.latest() is None           # nothing half-committed
-    with pytest.raises(Exception):
-        w.close()                       # reports the failure once...
-    assert w._pool is None and w._inflight is None   # ...but releases all
-    w.close()                           # and stays idempotent after
+    # the failure was DELIVERED via wait(): close() must not echo it — a
+    # supervisor recovering from the failure would count the echo as a
+    # second incident (Cluster.restart closes the abandoned writer)
+    w.close()
+    assert w._pool is None and w._inflight is None
+    w.close()                           # idempotent
+
+
+def test_pipelined_writer_unobserved_error_delivered_once_by_close(tmp_path):
+    """A BACKGROUND failure nobody wait()ed on is still reported exactly
+    once — by the first drain point (close/wait_idle) — then cleared."""
+    from repro.core import faults
+
+    w = CheckpointWriter(tmp_path, 1, codec="zlib", pipeline=True)
+
+    def die(name, ctx):
+        raise faults.InjectedFault("kill mid-append")
+
+    faults.arm("ckpt_io.append", die)
+    try:
+        w.checkpoint(1, {"x": jnp.zeros(512)}, None, {})   # no wait()
+        with pytest.raises(faults.InjectedFault):
+            w.close()
+    finally:
+        faults.disarm("ckpt_io.append")
+    assert w._pool is None and w._inflight is None
+    w.close()                           # idempotent after delivery
+    assert w.latest() is None
 
 
 def test_rank_shard_writer_matches_one_shot(tmp_path):

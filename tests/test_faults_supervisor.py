@@ -1,0 +1,404 @@
+"""Fault injection + supervised auto-recovery: failpoints, the injector's
+fault mechanics, the lease/probe failure detector, drain-stall escalation,
+digest-verified resumable selection, and end-to-end supervised recovery
+with byte-identical parameters (the chaos-matrix contract, in-process)."""
+import json
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CkptIOConfig, smoke_config
+from repro.core import Cluster, ckpt_io, faults
+from repro.core.drain import DrainStallError, drain_world
+from repro.core.faults import (DeadLowerHalf, FaultInjector, FaultPlan,
+                               FaultSpec, InjectedFault, RankDeadError)
+from repro.core.restore import find_resumable, verify_checkpoint
+from repro.core.supervisor import (LeaseDetector, RecoveryFailed, Supervisor,
+                                   WorldFailure, classify_failure)
+from repro.launch.train import Trainer
+
+
+@pytest.fixture(autouse=True)
+def _clean_failpoints():
+    yield
+    faults.disarm_all()
+
+
+def _io(**kw):
+    kw.setdefault("codec", "zlib")
+    kw.setdefault("incremental", True)
+    kw.setdefault("drain_timeout", 1.0)
+    return CkptIOConfig(**kw)
+
+
+def _arrays():
+    rng = np.random.default_rng(3)
+    return {"w": jax.numpy.asarray(rng.normal(size=(64, 16))
+                                   .astype(np.float32)),
+            "m": jax.numpy.asarray(rng.normal(size=(64, 16))
+                                   .astype(np.float32))}
+
+
+# ---------------------------------------------------------------------------
+# failpoints + plans
+# ---------------------------------------------------------------------------
+
+def test_failpoint_arm_fire_disarm():
+    hits = []
+
+    def h(name, ctx):
+        hits.append((name, ctx["x"]))
+
+    faults.failpoint("t.site", x=0)            # disarmed: no-op
+    faults.arm("t.site", h)
+    faults.failpoint("t.site", x=1)
+    faults.disarm("t.site", h)
+    faults.failpoint("t.site", x=2)
+    assert hits == [("t.site", 1)]
+    assert "t.site" not in faults.armed()
+
+
+def test_fault_plan_parse_inline_and_file(tmp_path):
+    plan = FaultPlan.parse('[{"kind": "kill_rank", "at_step": 5, "rank": 1}]')
+    assert plan.specs[0].kind == "kill_rank" and plan.specs[0].phase == "compute"
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps([{"kind": "stall_drain", "at_step": 3}]))
+    plan2 = FaultPlan.parse(str(p))
+    assert plan2.specs[0].phase == "drain"     # intrinsic default phase
+    with pytest.raises(ValueError):
+        FaultPlan.parse('[{"kind": "meteor_strike"}]')
+    # round-trips through to_json (fired flag never serialized)
+    assert FaultPlan.parse(plan.to_json()).specs[0].at_step == 5
+
+
+def test_dead_lower_half_raises_rank_dead():
+    dead = DeadLowerHalf(2)
+    with pytest.raises(RankDeadError) as ei:
+        dead.iprobe()
+    assert ei.value.rank == 2
+    dead.shutdown()                            # teardown stays callable
+
+
+# ---------------------------------------------------------------------------
+# detector
+# ---------------------------------------------------------------------------
+
+def test_halt_rank_is_observable_not_bookkept():
+    c = Cluster(2, "mpich")
+    c.halt_rank(1)
+    assert c.ranks[1].alive            # death NOT yet detected
+    assert c.ranks[1].halted
+    assert c.survivors() == [0]
+    before = c.ranks[1].last_heartbeat
+    time.sleep(0.01)
+    c.heartbeat(1)                     # dead nodes don't renew their lease
+    assert c.ranks[1].last_heartbeat == before
+    with pytest.raises(RankDeadError):
+        c.ranks[1].mana.backend.iprobe()
+
+
+def test_lease_detector_expiry_and_probe():
+    c = Cluster(2, "mpich")
+    det = LeaseDetector(c, lease_s=0.05, probe=False)
+    det.beat()
+    assert det.poll() == []
+    c.halt_rank(1)
+    time.sleep(0.08)
+    det.beat()                         # rank 0 renews; rank 1 cannot
+    assert det.poll() == [(1, "lease_expired")]
+    assert not c.ranks[1].alive
+    # active probe catches the same death with NO lease latency
+    c2 = Cluster(2, "openmpi")
+    det2 = LeaseDetector(c2, lease_s=60.0, probe=True)
+    c2.halt_rank(0)
+    assert det2.poll() == [(0, "rank_dead")]
+
+
+def test_probe_detects_dropped_token_without_declaring_death():
+    c = Cluster(2, "fabric")
+    inj = FaultInjector(FaultPlan([FaultSpec("drop_token", at_step=0,
+                                             rank=1)]))
+    inj.on_step(0, c)
+    det = LeaseDetector(c, lease_s=60.0, probe=True)
+    dead = det.poll()
+    assert dead == [(1, "lost_token")]
+    assert c.ranks[1].alive            # the node is fine; its token is not
+    assert classify_failure(WorldFailure(dead)) == ("lost_token", 1)
+
+
+# ---------------------------------------------------------------------------
+# drain escalation
+# ---------------------------------------------------------------------------
+
+def test_stall_drain_raises_typed_escalation():
+    c = Cluster(2, "mpich")
+    inj = FaultInjector(FaultPlan([FaultSpec("stall_drain", at_step=0,
+                                             rank=1)]))
+    inj.on_checkpoint(0, c)
+    t0 = time.time()
+    with pytest.raises(DrainStallError) as ei:
+        drain_world(c.manas, timeout=0.4)
+    assert ei.value.rank == 1
+    assert ei.value.stats["rank"] == 1
+    assert classify_failure(ei.value) == ("drain_stall", 1)
+    # escalation latency is bounded by the budget + proportional grace,
+    # not a hardcoded multi-second barrier slack
+    assert time.time() - t0 < 3.0
+
+
+def test_dead_rank_discovered_by_drain():
+    c = Cluster(2, "craympi")
+    c.halt_rank(0)
+    with pytest.raises(RankDeadError):
+        drain_world(c.manas, timeout=0.5)
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+def test_classify_failure_table():
+    assert classify_failure(DrainStallError(3, {}, "x")) == ("drain_stall", 3)
+    assert classify_failure(RankDeadError(1)) == ("rank_dead", 1)
+    assert classify_failure(WorldFailure([(2, "lease_expired")])) \
+        == ("rank_dead", 2)
+    # mixed verdicts: the fenced victim must be an actually-dead rank,
+    # never a healthy one that merely lost its session token
+    assert classify_failure(WorldFailure([(0, "lost_token"),
+                                          (1, "lease_expired")])) \
+        == ("rank_dead", 1)
+    assert classify_failure(InjectedFault("boom")) == ("snapshot_error", None)
+    assert classify_failure(KeyError("dangling endpoint token fi://x")) \
+        == ("lost_token", None)
+    assert classify_failure(ValueError("wat")) == ("unknown", None)
+
+
+# ---------------------------------------------------------------------------
+# verified resumable selection
+# ---------------------------------------------------------------------------
+
+def _two_ckpts(tmp_path, backend="mpich"):
+    c = Cluster(2, backend, ckpt_dir=tmp_path, ckpt_io=_io())
+    arrays = _arrays()
+    c.checkpoint(1, arrays, None).wait()
+    # the second step must write FRESH shard bytes (an identical delta
+    # checkpoint has an empty container — nothing to corrupt)
+    arrays2 = {k: v + 1 for k, v in arrays.items()}
+    c.checkpoint(2, arrays2, None).wait()
+    c.writer.wait_idle()
+    steps = sorted(tmp_path.glob("step_*"))
+    assert len(steps) == 2
+    return c, steps
+
+
+def test_verify_checkpoint_clean_and_corrupt(tmp_path):
+    c, (s1, s2) = _two_ckpts(tmp_path)
+    assert verify_checkpoint(s2) == []
+    blob = (s2 / "rank00000" / ckpt_io.BIN_NAME)
+    data = bytearray(blob.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    blob.write_bytes(bytes(data))
+    problems = verify_checkpoint(s2)
+    assert problems, "single flipped bit escaped verification"
+    c.writer.close()
+
+
+def test_find_resumable_skips_truncated_and_falls_back(tmp_path):
+    c, (s1, s2) = _two_ckpts(tmp_path)
+    bin2 = s2 / "rank00000" / ckpt_io.BIN_NAME
+    import os
+    os.truncate(bin2, bin2.stat().st_size // 2)
+    assert any("truncated" in p for p in verify_checkpoint(s2, deep=False))
+    assert find_resumable(tmp_path) == s1          # fell back
+    assert find_resumable(tmp_path, verify=False) == s2  # old behavior
+    c.writer.close()
+
+
+def test_find_resumable_skips_missing_rank_container(tmp_path):
+    import shutil
+    c, (s1, s2) = _two_ckpts(tmp_path)
+    shutil.rmtree(s2 / "rank00001")        # partial copy / operator rm
+    assert any("container missing" in p for p in verify_checkpoint(s2))
+    assert find_resumable(tmp_path) == s1
+    c.writer.close()
+
+
+def test_find_resumable_skips_torn_index(tmp_path):
+    c, (s1, s2) = _two_ckpts(tmp_path)
+    idx = s2 / "rank00000" / ckpt_io.INDEX_NAME
+    idx.write_text(idx.read_text()[: idx.stat().st_size // 2])  # torn write
+    assert find_resumable(tmp_path) == s1
+    c.writer.close()
+
+
+def test_snapshot_failpoint_fails_checkpoint_but_writer_survives(tmp_path):
+    c = Cluster(2, "mpich", ckpt_dir=tmp_path, ckpt_io=_io())
+    arrays = _arrays()
+    c.checkpoint(1, arrays, None).wait()
+    inj = FaultInjector(FaultPlan([FaultSpec("snapshot_error", at_step=0)]))
+    inj.on_checkpoint(0, c)
+    with pytest.raises(InjectedFault):
+        c.checkpoint(2, arrays, None)
+    # the failed attempt never published and the writer is NOT wedged:
+    # the next checkpoint commits normally
+    req = c.checkpoint(3, arrays, None)
+    req.wait()
+    assert find_resumable(tmp_path).name == "step_00000003"
+    inj.close()
+    c.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end supervised recovery (byte-identical params)
+# ---------------------------------------------------------------------------
+
+STEPS, EVERY = 9, 3
+
+
+def _tiny_cfg():
+    return replace(smoke_config("granite-3-2b"), n_layers=1, d_model=32,
+                   n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                   vocab_size=128, vocab_pad_multiple=64)
+
+
+def _trainer(ckpt_dir):
+    return Trainer(_tiny_cfg(), batch_size=4, seq_len=16, world_size=2,
+                   ckpt_dir=ckpt_dir, total_steps=STEPS, ckpt_io=_io())
+
+
+def _digests(tr):
+    leaves = jax.tree.leaves({"p": tr.params, "o": tr.opt_state})
+    return [ckpt_io.shard_digest(jax.device_get(leaf)) for leaf in leaves]
+
+
+@pytest.fixture(scope="module")
+def ref_digests(tmp_path_factory):
+    tr = _trainer(tmp_path_factory.mktemp("ref") / "ck")
+    tr.init_state()
+    tr.run(STEPS, ckpt_every=EVERY, log_every=100)
+    d = _digests(tr)
+    tr.pipeline.stop()
+    tr.cluster.writer.close()
+    return d
+
+
+def _supervised(tmp_path, specs, **sup_kw):
+    tr = _trainer(tmp_path / "ck")
+    tr.init_state()
+    with FaultInjector(FaultPlan(specs)) as inj:
+        sup = Supervisor(tr, injector=inj, lease_s=1.0, verbose=False,
+                         **sup_kw)
+        incidents = sup.run(STEPS, ckpt_every=EVERY)
+    return tr, incidents
+
+
+def test_supervised_kill_rank_byte_identical(tmp_path, ref_digests):
+    tr, incidents = _supervised(
+        tmp_path, [FaultSpec("kill_rank", at_step=5)])
+    try:
+        assert [i.kind for i in incidents] == ["rank_dead"]
+        inc = incidents[0]
+        assert inc.resumed_step == 3 and inc.world_after == 1
+        assert set(inc.timings) >= {"detect_ms", "classify_ms",
+                                    "restore_ms", "resume_ms", "total_ms"}
+        assert tr.step == STEPS
+        assert _digests(tr) == ref_digests
+        assert ("incident", "rank_dead", 1, 5) in tr.cluster.events
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_supervised_corrupt_falls_back_to_good_ckpt(tmp_path, ref_digests):
+    # poison the step-6 checkpoint at step 7, kill at step 8: recovery must
+    # skip the poisoned image and land on step 3 — and still reproduce the
+    # fault-free trajectory exactly
+    tr, incidents = _supervised(
+        tmp_path, [FaultSpec("corrupt_shard", at_step=7),
+                   FaultSpec("kill_rank", at_step=8, rank=0)])
+    try:
+        assert incidents[0].kind == "rank_dead"
+        assert incidents[0].resumed_step == 3
+        assert tr.step == STEPS
+        assert _digests(tr) == ref_digests
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_supervisor_bounded_retries(tmp_path):
+    class Hopeless:
+        """Workload whose step always fails; recovery 'works' but never
+        helps — the supervisor must give up after max_retries."""
+
+        def __init__(self, cluster):
+            self.cluster = cluster
+            self.step = 0
+            self.recoveries = 0
+
+        def step_once(self):
+            raise ValueError("persistent mystery failure")
+
+        def checkpoint(self):
+            pass
+
+        def recover(self, ck, *, new_world_size=None):
+            self.recoveries += 1
+
+    c = Cluster(1, "mpich", ckpt_dir=tmp_path, ckpt_io=_io())
+    c.checkpoint(1, _arrays(), None).wait()
+    w = Hopeless(c)
+    sup = Supervisor(w, max_retries=2, verbose=False)
+    with pytest.raises(RecoveryFailed) as ei:
+        sup.run(3)
+    assert w.recoveries == 2
+    assert len(ei.value.incidents) == 2
+    assert all(i.kind == "unknown" for i in ei.value.incidents)
+    c.writer.close()
+
+
+def test_supervisor_recurring_failure_does_not_livelock(tmp_path):
+    class Sisyphus:
+        """Recovery rewinds past a deterministically recurring failure:
+        the replayed (pre-failure) steps must NOT reset the retry budget,
+        or the supervisor loops forever instead of giving up."""
+
+        def __init__(self, cluster):
+            self.cluster = cluster
+            self.step = 0
+            self.recoveries = 0
+
+        def step_once(self):
+            if self.step + 1 == 2:
+                raise ValueError("deterministic failure at step 2")
+            self.step += 1
+
+        def checkpoint(self):
+            pass
+
+        def recover(self, ck, *, new_world_size=None):
+            self.recoveries += 1
+            self.step = 0
+
+    c = Cluster(1, "mpich", ckpt_dir=tmp_path, ckpt_io=_io())
+    c.checkpoint(1, _arrays(), None).wait()
+    w = Sisyphus(c)
+    sup = Supervisor(w, max_retries=2, verbose=False)
+    with pytest.raises(RecoveryFailed):
+        sup.run(5)
+    assert w.recoveries == 2
+    c.writer.close()
+
+
+def test_supervisor_refuses_without_valid_checkpoint(tmp_path):
+    tr = _trainer(tmp_path / "ck")
+    tr.init_state()
+    with FaultInjector(FaultPlan([FaultSpec("kill_rank", at_step=1)])) as inj:
+        sup = Supervisor(tr, injector=inj, verbose=False)
+        with pytest.raises(RecoveryFailed, match="resumable"):
+            sup.run(EVERY - 1)          # fails before the first checkpoint
+    tr.pipeline.stop()
+    tr.cluster.writer.close()

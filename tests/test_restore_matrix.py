@@ -277,3 +277,62 @@ def test_resumable_writer_accessor(tmp_path):
         assert w.resumable() == w.latest()
     finally:
         w.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos fallback: torn/corrupted newest checkpoint, restore on every family
+# ---------------------------------------------------------------------------
+
+def test_corrupt_and_torn_ckpts_fall_back_on_all_families(tmp_path):
+    """Corrupt one shard of the newest committed checkpoint AND leave a
+    kill-mid-append half-written step behind it: digest-verified resumable
+    selection must land on the last complete, digest-valid checkpoint, and
+    that checkpoint must restore under EVERY backend family."""
+    from repro.configs import CkptIOConfig
+    from repro.core import ckpt_io, faults
+    from repro.core.restore import verify_checkpoint
+
+    rng = np.random.default_rng(11)
+    arrays1 = {"w": jnp.asarray(rng.normal(size=(48, 8)).astype(np.float32))}
+    arrays2 = {"w": jnp.asarray(rng.normal(size=(48, 8)).astype(np.float32))}
+    base = tmp_path / "ck"
+    c = Cluster(2, "mpich", ckpt_dir=base,
+                ckpt_io=CkptIOConfig(codec="zlib", incremental=True))
+    c.checkpoint(1, arrays1, None).wait()
+    good = c.writer.latest()
+    c.checkpoint(2, arrays2, None).wait()
+
+    # corrupt one shard of the newest COMMITTED image
+    newest = c.writer.latest()
+    assert newest != good
+    binf = newest / "rank00000" / ckpt_io.BIN_NAME
+    data = bytearray(binf.read_bytes())
+    data[len(data) // 2] ^= 0x5A
+    binf.write_bytes(bytes(data))
+    assert verify_checkpoint(newest), "corruption escaped verification"
+
+    # and a kill-mid-append on top: step 3 dies half-written (uncommitted)
+    def die(name, ctx):
+        raise faults.InjectedFault("kill mid-append")
+
+    faults.arm("ckpt_io.append", die)
+    try:
+        with pytest.raises(Exception):
+            c.checkpoint(3, arrays1, None).wait()
+    finally:
+        faults.disarm("ckpt_io.append")
+
+    assert find_resumable(base) == good
+    # the surviving checkpoint restores under every implementation family
+    families = {}
+    for name in BACKENDS:
+        families.setdefault(backend_family(name), name)
+    for fam, dst in sorted(families.items()):
+        fresh = c.restart(good, new_backend=dst,
+                          shardings={"w": None})
+        got = np.asarray(fresh.restored_arrays["w"])
+        np.testing.assert_array_equal(got, np.asarray(arrays1["w"]),
+                                      err_msg=f"family {fam} ({dst})")
+        assert fresh.backend_name == dst
+        fresh.writer.close()
+    c.writer.close()

@@ -115,3 +115,38 @@ def test_elastic_scenario_8_devices():
     out = subprocess.run([sys.executable, str(script)], env=env,
                          capture_output=True, text=True, timeout=560)
     assert "ELASTIC_SCENARIO_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_chaos_matrix_quick():
+    """The chaos harness itself (sweep driver, injector wiring, byte-
+    identical assertion) on two cells; the full fault-type sweep runs as
+    the CI `chaos` job (`chaos_matrix.py --smoke`)."""
+    script = Path(__file__).parent / "scenarios" / "chaos_matrix.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parents[1] / "src")
+    out = subprocess.run([sys.executable, str(script), "--quick"], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "CHAOS_MATRIX_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_serve_restore_rewinds_generated_stream(tmp_path):
+    """Rewinding pos at restore must also truncate Server.generated — the
+    tokens decoded between snapshot and failure would otherwise appear
+    twice after the supervisor replays them."""
+    from repro.launch.serve import Server
+    cfg = smoke_config("granite-3-2b")
+    srv = Server(cfg, ckpt_dir=tmp_path / "g")
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 8), dtype=np.int32)
+    logits = srv.prefill(prompts, pad_to=16)
+    first = np.argmax(np.asarray(logits)[..., : cfg.vocab_size],
+                      axis=-1).astype(np.int32)
+    toks, _ = srv.decode(3, first)
+    srv.checkpoint().wait()
+    srv.decode(2, toks[-1])                 # progress that will be lost
+    assert len(srv.generated) == 5
+    srv.restore(srv.cluster.writer.latest(), rebuild=True)
+    assert srv.pos == 8 + 3
+    assert len(srv.generated) == 3          # replayed tokens not duplicated
+    srv.decode(2, srv.resume_tok)
+    assert len(srv.generated) == 5

@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Bench-trend comparator: fresh smoke results vs the committed baselines.
+
+CI runs the checkpoint/restart smoke benches on every PR and already FAILS
+on hard gate regressions (benchmarks/run.py and bench_restart exit non-zero
+when a gate trips).  This tool adds the TREND layer on top: it compares the
+fresh numbers against the repo's committed ``BENCH_ckpt.json`` /
+``BENCH_restart.json`` within a tolerance band and
+
+  * **warns** (exit 0) when a tracked metric drifted outside the band —
+    noisy CI runners make drift-as-failure a flake factory, but the drift
+    should be VISIBLE in the job summary, not silent;
+  * **fails** (exit 1) when a fresh result violates a hard gate the
+    committed baseline satisfied (belt-and-braces: the bench's own exit
+    code is the first line of defense);
+  * writes a markdown summary table — appended to ``$GITHUB_STEP_SUMMARY``
+    when set (the CI job summary page), stdout otherwise.
+
+Usage:
+  python tools/bench_compare.py \
+      --ckpt-fresh BENCH_ckpt.fresh.json --ckpt-base BENCH_ckpt.json \
+      --restart-fresh BENCH_restart.fresh.json \
+      --restart-base BENCH_restart.json [--tolerance 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+#: (label, extractor, higher_is_better, hard_gate_min | None)
+CKPT_METRICS = [
+    ("write_speedup", lambda r: r["write_speedup"], True, 1.0),
+    ("blocking_reduction", lambda r: r["blocking_reduction"], True, 2.0),
+    ("restore_speedup", lambda r: r["restore_speedup"], True, None),
+    ("blocking_ms_pipelined", lambda r: r["blocking_ms_pipelined"],
+     False, None),
+]
+RESTART_METRICS = [
+    ("restore_speedup", lambda r: r["restore_ab"]["restore_speedup"],
+     True, 1.3),
+    ("parallel_s", lambda r: r["restore_ab"]["parallel_s"], False, None),
+]
+
+
+def _load(path):
+    p = Path(path)
+    if not p.is_file():
+        return None
+    return json.loads(p.read_text())
+
+
+def _ckpt_result(payload):
+    return payload["results"][0] if payload and payload.get("results") \
+        else None
+
+
+def _restart_result(payload):
+    return payload.get("results") if payload else None
+
+
+def compare(metrics, fresh, base, tolerance):
+    """Returns (rows, warnings, failures) for one bench's metric table."""
+    rows, warnings, failures = [], [], []
+    for label, get, higher_better, gate in metrics:
+        try:
+            f = float(get(fresh))
+        except (KeyError, TypeError, IndexError):
+            failures.append(f"{label}: missing from fresh results")
+            continue
+        try:
+            b = float(get(base)) if base is not None else None
+        except (KeyError, TypeError, IndexError):
+            b = None
+        status = "ok"
+        if gate is not None and f < gate:
+            status = "GATE FAILED"
+            failures.append(f"{label}: {f:.3f} below hard gate {gate}")
+        elif b:
+            drift = (f - b) / abs(b)
+            regressed = drift < -tolerance if higher_better \
+                else drift > tolerance
+            if regressed:
+                status = "drift"
+                warnings.append(
+                    f"{label}: {f:.3f} vs baseline {b:.3f} "
+                    f"({drift:+.0%}, tolerance ±{tolerance:.0%})")
+        rows.append((label, f, b, status))
+    return rows, warnings, failures
+
+
+def markdown(title, rows, tolerance):
+    out = [f"### {title}", "",
+           "| metric | fresh | baseline | status |",
+           "|---|---|---|---|"]
+    for label, f, b, status in rows:
+        badge = {"ok": "✅", "drift": f"⚠️ drift > ±{tolerance:.0%}",
+                 "GATE FAILED": "❌ gate"}[status]
+        out.append(f"| {label} | {f:.3f} | "
+                   f"{'—' if b is None else f'{b:.3f}'} | {badge} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-fresh", default="BENCH_ckpt.fresh.json")
+    ap.add_argument("--ckpt-base", default="BENCH_ckpt.json")
+    ap.add_argument("--restart-fresh", default="BENCH_restart.fresh.json")
+    ap.add_argument("--restart-base", default="BENCH_restart.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative drift band before a warning (default 25%%)")
+    args = ap.parse_args()
+
+    sections, all_warn, all_fail = [], [], []
+    for title, fresh_path, base_path, metrics, extract in [
+            ("Checkpoint smoke (BENCH_ckpt)", args.ckpt_fresh,
+             args.ckpt_base, CKPT_METRICS, _ckpt_result),
+            ("Restart smoke (BENCH_restart)", args.restart_fresh,
+             args.restart_base, RESTART_METRICS, _restart_result)]:
+        fresh = extract(_load(fresh_path))
+        if fresh is None:
+            all_fail.append(f"{title}: no fresh results at {fresh_path}")
+            continue
+        base = extract(_load(base_path))
+        if base is None:
+            all_warn.append(f"{title}: no committed baseline at "
+                            f"{base_path}; trend skipped")
+        rows, warns, fails = compare(metrics, fresh, base, args.tolerance)
+        sections.append(markdown(title, rows, args.tolerance))
+        all_warn += warns
+        all_fail += fails
+
+    summary = "\n".join(["## Bench trend vs committed baseline", ""]
+                        + sections)
+    if all_warn:
+        summary += "\n**Drift warnings (non-fatal):**\n" + "".join(
+            f"- ⚠️ {w}\n" for w in all_warn)
+    if all_fail:
+        summary += "\n**Gate failures:**\n" + "".join(
+            f"- ❌ {f}\n" for f in all_fail)
+
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as fh:
+            fh.write(summary + "\n")
+    print(summary)
+    for w in all_warn:
+        print(f"WARNING: {w}", file=sys.stderr)
+    for f in all_fail:
+        print(f"FAILURE: {f}", file=sys.stderr)
+    return 1 if all_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
