@@ -121,7 +121,7 @@ def one(arch, overrides, world=4, engine="par_zlib_inc", steps=2,
         delta_ratio = stats2["bytes_written"] / max(stats["bytes_written"], 1)
         # array-restore latency from the latest (= the delta) checkpoint,
         # through the parallel streaming loader
-        from repro.core.restart import load_arrays
+        from repro.core.restore import load_arrays
         shardings = {"params": tr.param_sh, "opt": tr.opt_sh}
         array_load_s = 1e9
         for _ in range(2):
@@ -231,7 +231,7 @@ def pipeline_digest_match(world=4) -> bool:
 
     from repro.core import ckpt_io
     from repro.core.ckpt import CheckpointWriter
-    from repro.core.restart import load_arrays
+    from repro.core.restore import load_arrays
 
     rng = np.random.default_rng(0)
     arrays = {"w": jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32)),

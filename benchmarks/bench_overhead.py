@@ -100,6 +100,49 @@ def blocking_rows(arch="granite-3-2b", world=4, trials=5):
     return out
 
 
+def collective_rows(world=4, backends=("mpich", "fabric"), iters=25,
+                    trials=3):
+    """Collective wrapper overhead: allreduce/bcast through the generated
+    interposition layer, fast vs slow translation, per backend flavor.
+
+    ``mpich`` exercises the NATIVE paths (binomial-tree bcast, rooted
+    allreduce); ``fabric`` has no collective capabilities, so the same
+    wrappers resolve to the registry's DERIVED p2p compositions — the rows
+    show what the capability gate costs/buys.  Each measured call is a
+    FULL collective across ``world`` ranks (threads meeting on the
+    in-process fabric), timed as wall/iters; the fast-vs-slow gap is the
+    per-call translation overhead at collective granularity."""
+    out = []
+    for backend in backends:
+        caps = Cluster(1, backend).mana(0).backend.capabilities()
+        for coll in ("allreduce", "bcast"):
+            times = {}
+            for mode in ("fast", "slow"):
+                c = Cluster(world, backend, translation=mode)
+
+                def one(m):
+                    w = m.comm_world()
+                    if coll == "allreduce":
+                        op = m.op_handles["MPI_SUM"]
+                        for i in range(iters):
+                            m.allreduce(w, i, op)
+                    else:
+                        for i in range(iters):
+                            m.bcast(w, i, root=0)
+
+                c.run_collective(one)     # warm: thread pool + lazy binds
+                best = 1e9
+                for _ in range(trials):
+                    t0 = time.perf_counter()
+                    c.run_collective(one)
+                    best = min(best, time.perf_counter() - t0)
+                times[mode] = 1e6 * best / iters
+            out.append((f"coll_{coll}_{backend}", times["fast"],
+                        f"slow_us={times['slow']:.1f};"
+                        f"native={coll in caps};world={world}"))
+    return out
+
+
 def rows(backends=("mpich", "openmpi", "exampi"), trials=5):
     out = []
     for arch, calls in APPS:
@@ -123,6 +166,7 @@ def rows(backends=("mpich", "openmpi", "exampi"), trials=5):
                         f"native_us={1e6*t_native/STEPS:.0f};"
                         f"virtId_ov={ov_f:.1f}%;legacy_ov={ov_s:.1f}%;"
                         f"calls/step={calls}"))
+    out.extend(collective_rows(trials=trials))
     out.extend(blocking_rows(trials=trials))
     return out
 

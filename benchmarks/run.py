@@ -25,11 +25,22 @@ def smoke(out_path: str) -> None:
 
     Exits non-zero on ANY gate failure so CI actually enforces the perf
     trajectory instead of just recording it."""
-    from benchmarks import bench_ckpt
+    from benchmarks import bench_ckpt, bench_overhead
     results = bench_ckpt.smoke()
-    payload = {"bench": "ckpt_io_smoke", "results": results}
+    # collective wrapper rows (allreduce/bcast, fast vs slow translation,
+    # native vs derived flavor): tracked, not hard-gated — collective
+    # latency on a shared CI host is noise-bound, but the trajectory
+    # should be visible per PR
+    coll = [{"name": name, "us_per_call": round(us, 2), "derived": extra}
+            for name, us, extra in bench_overhead.collective_rows(
+                world=2, iters=10, trials=2)]
+    payload = {"bench": "ckpt_io_smoke", "results": results,
+               "collectives": coll}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
+    for row in coll:
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}",
+              flush=True)
     ok = True
     for r in results:
         line = (f"ckpt_smoke_{r['arch']}: "

@@ -1,4 +1,4 @@
-from repro.core.backends.base import Backend
+from repro.core.backends.base import COLLECTIVE_CAPS, Backend
 from repro.core.backends.craympi import CrayMpiBackend
 from repro.core.backends.exampi import ExaMpiBackend
 from repro.core.backends.fabric import Fabric
@@ -24,6 +24,7 @@ def backend_family(name: str) -> str:
     return BACKENDS[name].family
 
 
-__all__ = ["Backend", "Fabric", "BACKENDS", "make_backend", "backend_family",
+__all__ = ["Backend", "COLLECTIVE_CAPS", "Fabric", "BACKENDS",
+           "make_backend", "backend_family",
            "MpichBackend", "CrayMpiBackend", "OpenMpiBackend", "ExaMpiBackend",
            "FabricDirectBackend"]

@@ -33,6 +33,18 @@ PREDEFINED_DTYPES = (
 
 PREDEFINED_OPS = ("MPI_SUM", "MPI_MAX", "MPI_MIN", "MPI_PROD")
 
+#: the collective surface a FULL implementation advertises; subset flavors
+#: (ExaMPI, fabric-direct) advertise fewer and the interpose layer derives
+#: the rest from p2p (see repro.core.callspec)
+COLLECTIVE_CAPS = ("bcast", "reduce", "allreduce", "scatter", "gather",
+                   "allgather", "reduce_scatter", "scan", "alltoall")
+
+# multi-phase native algorithms separate phases by the registry's tag
+# offset (the callspec tag schema spaces collective bases 100 << 32 apart)
+from repro.core.callspec import PHASE2  # noqa: E402
+
+_UNSET = object()
+
 
 class Backend(abc.ABC):
     """One logical-rank view of the lower half."""
@@ -77,7 +89,8 @@ class Backend(abc.ABC):
         ...
 
     def capabilities(self) -> set:
-        return {"comm_split", "comm_create", "type_create", "op_create"}
+        return {"comm_split", "comm_create", "type_create", "op_create",
+                *COLLECTIVE_CAPS}
 
     # -- object creation (replayed at restart) ------------------------------
     @abc.abstractmethod
@@ -149,18 +162,145 @@ class Backend(abc.ABC):
         native batched form; the default is the portable per-request loop."""
         return [self.test(r) for r in requests]
 
-    def alltoall(self, comm, payloads: list) -> None:
-        ranks = self.comm_ranks(comm)
-        for dst, payload in zip(ranks, payloads):
-            self.fabric.send(self.rank, dst, 70000, payload)
-
-    def alltoall_recv(self, comm) -> list:
-        ranks = self.comm_ranks(comm)
-        return [self.fabric.recv(self.rank, src, 70000) for src in ranks]
-
     def barrier(self, expected: int | None = None,
                 timeout: float | None = None) -> None:
         self.fabric.barrier(self.rank, expected, timeout)
+
+    # -- native collectives --------------------------------------------------
+    # One method per advertised COLLECTIVE_CAPS entry.  Every RECEIVE goes
+    # through ``recv`` — the upper half's buffered receive — so payloads the
+    # quiesce protocol drained into the checkpoint image re-deliver after
+    # restart exactly like user p2p traffic.  ``fold`` (for reductions) is
+    # applied in communicator-rank order: the fold order is part of the
+    # call's determinism contract.  ``root`` is a POSITION in the
+    # communicator's rank list, MPI-style.  Subset flavors that do not
+    # advertise a capability never see the corresponding method called (the
+    # interpose layer routes to its derived p2p composition instead).
+
+    def _coll_ranks(self, comm) -> tuple:
+        # same typed error the derived compositions raise, so the
+        # native/derived distinction never leaks through error handling
+        from repro.core.callspec import NotInCommunicatorError
+        ranks = self.comm_ranks(comm)
+        try:
+            return ranks, ranks.index(self.rank)
+        except ValueError:
+            raise NotInCommunicatorError(
+                f"{self.name}: rank {self.rank} is not a member of "
+                f"{ranks}") from None
+
+    @staticmethod
+    def _coll_root(ranks, root: int):
+        if not 0 <= root < len(ranks):
+            raise ValueError(f"root {root} out of range for a "
+                             f"{len(ranks)}-member communicator")
+        return ranks[root]
+
+    def bcast(self, comm, root: int, value, *, tag: int, recv):
+        """Linear fan-out from the root (Open MPI's base algorithm; the
+        MPICH family overrides with a binomial tree)."""
+        ranks, _ = self._coll_ranks(comm)
+        root_rank = self._coll_root(ranks, root)
+        if self.rank == root_rank:
+            for dst in ranks:
+                if dst != self.rank:
+                    self.send(dst, tag, value)
+            return value
+        return recv(root_rank, tag)
+
+    def reduce(self, comm, root: int, value, fold, *, tag: int, recv):
+        """Rooted reduce: contributions received and folded at the root in
+        rank order; returns the result at root, None elsewhere."""
+        ranks, _ = self._coll_ranks(comm)
+        root_rank = self._coll_root(ranks, root)
+        if self.rank != root_rank:
+            self.send(root_rank, tag, value)
+            return None
+        acc = _UNSET
+        for src in ranks:
+            x = value if src == self.rank else recv(src, tag)
+            acc = x if acc is _UNSET else fold(acc, x)
+        return acc
+
+    def allreduce(self, comm, value, fold, *, tag: int, recv):
+        """Rooted reduce + broadcast: two phases, O(n) messages (the
+        derived p2p composition is a one-phase O(n^2) full exchange)."""
+        red = self.reduce(comm, 0, value, fold, tag=tag, recv=recv)
+        return self.bcast(comm, 0, red, tag=tag + PHASE2, recv=recv)
+
+    def scatter(self, comm, root: int, values, *, tag: int, recv):
+        ranks, _ = self._coll_ranks(comm)
+        root_rank = self._coll_root(ranks, root)
+        if self.rank == root_rank:
+            if values is None or len(values) != len(ranks):
+                raise ValueError(
+                    f"scatter root needs one value per member "
+                    f"({len(ranks)}), got "
+                    f"{None if values is None else len(values)}")
+            for q, dst in enumerate(ranks):
+                if dst != self.rank:
+                    self.send(dst, tag, values[q])
+            return values[root]
+        return recv(root_rank, tag)
+
+    def gather(self, comm, root: int, value, *, tag: int, recv):
+        ranks, _ = self._coll_ranks(comm)
+        root_rank = self._coll_root(ranks, root)
+        if self.rank != root_rank:
+            self.send(root_rank, tag, value)
+            return None
+        return [value if src == self.rank else recv(src, tag)
+                for src in ranks]
+
+    def allgather(self, comm, value, *, tag: int, recv):
+        """Gather to position 0 + broadcast of the assembled list (Open MPI
+        overrides with its ring algorithm)."""
+        got = self.gather(comm, 0, value, tag=tag, recv=recv)
+        return self.bcast(comm, 0, got, tag=tag + PHASE2, recv=recv)
+
+    def reduce_scatter(self, comm, values, fold, *, tag: int, recv):
+        """Gather the full vectors to position 0, fold slot-wise in rank
+        order, scatter the folded chunks."""
+        ranks, _ = self._coll_ranks(comm)
+        if values is None or len(values) != len(ranks):
+            raise ValueError(f"reduce_scatter needs one value per member "
+                             f"({len(ranks)}), got "
+                             f"{None if values is None else len(values)}")
+        gathered = self.gather(comm, 0, values, tag=tag, recv=recv)
+        chunks = None
+        if gathered is not None:
+            chunks = []
+            for q in range(len(ranks)):
+                acc = _UNSET
+                for contrib in gathered:
+                    acc = contrib[q] if acc is _UNSET \
+                        else fold(acc, contrib[q])
+                chunks.append(acc)
+        return self.scatter(comm, 0, chunks, tag=tag + PHASE2, recv=recv)
+
+    def scan(self, comm, value, fold, *, tag: int, recv):
+        """Inclusive prefix: gather to position 0, compute every prefix in
+        rank order, scatter each member its own."""
+        ranks, _ = self._coll_ranks(comm)
+        gathered = self.gather(comm, 0, value, tag=tag, recv=recv)
+        prefixes = None
+        if gathered is not None:
+            acc, prefixes = _UNSET, []
+            for v in gathered:
+                acc = v if acc is _UNSET else fold(acc, v)
+                prefixes.append(acc)
+        return self.scatter(comm, 0, prefixes, tag=tag + PHASE2, recv=recv)
+
+    def alltoall(self, comm, payloads: list, *, tag: int, recv) -> list:
+        """Personalized exchange: payloads[q] to position q (self-message
+        included, through the fabric), received back in rank order."""
+        ranks, _ = self._coll_ranks(comm)
+        if len(payloads) != len(ranks):
+            raise ValueError(f"alltoall needs one payload per member "
+                             f"({len(ranks)}), got {len(payloads)}")
+        for dst, payload in zip(ranks, payloads):
+            self.send(dst, tag, payload)
+        return [recv(src, tag) for src in ranks]
 
     # -- teardown -----------------------------------------------------------
     def shutdown(self) -> None:

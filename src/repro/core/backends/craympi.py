@@ -24,3 +24,12 @@ class CrayMpiBackend(MpichBackend):
         h = super().comm_split(comm, color, key, members_by_color)
         self._deref("comm", h)["_cray_fast_split"] = True
         return h
+
+    def bcast(self, comm, root, value, *, tag, recv):
+        # Cray rides MPICH's binomial tree but keeps NIC-affinity counters
+        # on the communicator struct — vendor bookkeeping the oblivious
+        # upper half must never depend on (tests assert it round-trips
+        # checkpoints untouched)
+        st = self._deref("comm", comm)
+        st["_cray_coll_count"] = st.get("_cray_coll_count", 0) + 1
+        return super().bcast(comm, root, value, tag=tag, recv=recv)

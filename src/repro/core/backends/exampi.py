@@ -61,8 +61,12 @@ class ExaMpiBackend(Backend):
         self.init_constants()
 
     def capabilities(self):
-        # core subset only: no native comm_split
-        return {"comm_create", "type_create", "op_create"}
+        # core subset only: no native comm_split, and of the collective
+        # surface just bcast/allreduce are native — everything else the
+        # interpose layer derives from p2p under the same session token
+        # (paper §5: MANA needs only the core subset)
+        return {"comm_create", "type_create", "op_create",
+                "bcast", "allreduce"}
 
     def alias_dtype(self, name):
         # INT8/CHAR share a pointer via reinterpret cast: the restore path

@@ -42,6 +42,10 @@ class FabricDirectBackend(Backend):
         self.init_constants()
 
     def capabilities(self):
+        # pure core subset: NO native collectives at all — every collective
+        # (bcast..scan, alltoall) reaches this flavor only as the interpose
+        # layer's derived p2p composition, making fabric-direct the
+        # all-derived column of the capability matrix
         return {"comm_create", "type_create", "op_create"}
 
     # -- tokens ---------------------------------------------------------------

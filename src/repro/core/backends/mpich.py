@@ -119,3 +119,28 @@ class MpichBackend(Backend):
         for st in structs:
             st["done"] = True
         return [st["done"] for st in structs]
+
+    # -- native collectives ---------------------------------------------------
+    def bcast(self, comm, root, value, *, tag, recv):
+        """Binomial-tree broadcast — MPICH's default small-message
+        algorithm: rank `rel` (relative to the root) receives from
+        ``rel ^ lowbit(rel)`` and forwards down its subtree.  Semantically
+        identical to the base linear fan-out; the message pattern is the
+        family-specific part."""
+        ranks, _ = self._coll_ranks(comm)
+        self._coll_root(ranks, root)
+        n = len(ranks)
+        rel = (ranks.index(self.rank) - root) % n
+        mask = 1
+        while mask < n:
+            if rel & mask:
+                value = recv(ranks[((rel ^ mask) + root) % n], tag)
+                break
+            mask <<= 1
+        mask >>= 1
+        while mask > 0:
+            child = rel | mask
+            if child != rel and child < n:
+                self.send(ranks[(child + root) % n], tag, value)
+            mask >>= 1
+        return value

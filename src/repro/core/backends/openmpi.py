@@ -117,3 +117,22 @@ class OpenMpiBackend(Backend):
         for st in structs:
             st.data["done"] = True
         return [True] * len(structs)
+
+    # -- native collectives ---------------------------------------------------
+    def allgather(self, comm, value, *, tag, recv):
+        """Ring allgather (Open MPI's tuned large-message algorithm): each
+        step forwards the block received last step to the right neighbor,
+        so every member sends/receives exactly n-1 blocks.  Per-step tag
+        offsets keep a step's block from being consumed a step early."""
+        ranks, me = self._coll_ranks(comm)
+        n = len(ranks)
+        out = [None] * n
+        out[me] = value
+        right, left = ranks[(me + 1) % n], ranks[(me - 1) % n]
+        block, cur = me, value
+        for step in range(n - 1):
+            step_tag = tag + (step << 52)
+            self.send(right, step_tag, (block, cur))
+            block, cur = recv(left, step_tag)
+            out[block] = cur
+        return out

@@ -60,6 +60,8 @@ class Cluster:
             snapshot_batch_mb=self.ckpt_io.snapshot_batch_mb) if ckpt_dir else None
         self.events: list = []
         self.restart_count = 0
+        self._coll_pool = None          # lazy persistent collective executor
+        self._coll_pool_size = 0
         # filled by restart(): phase timings mirroring checkpoint's
         # req.timings, per-rank rebind stats, optionally restored arrays
         self.restart_timings: dict = {}
@@ -75,6 +77,79 @@ class Cluster:
 
     def mana(self, rank: int) -> Mana:
         return self.ranks[rank].mana
+
+    def _coll_executor(self, workers: int):
+        """Persistent executor for collective fan-out (grown, never
+        shrunk): the training step drives one collective per step, so
+        thread spawn must not be per-step cost."""
+        from concurrent.futures import ThreadPoolExecutor
+        pool = getattr(self, "_coll_pool", None)
+        if pool is None or self._coll_pool_size < workers:
+            if pool is not None:
+                pool.shutdown(wait=False)
+            self._coll_pool_size = max(workers, 2)
+            pool = self._coll_pool = ThreadPoolExecutor(
+                max_workers=self._coll_pool_size,
+                thread_name_prefix="coll")
+        return pool
+
+    def _discard_coll_executor(self) -> None:
+        """Drop the pool after a failed/timed-out collective: a worker
+        still parked in a receive would otherwise starve the NEXT
+        collective, which needs every rank entering concurrently."""
+        pool = getattr(self, "_coll_pool", None)
+        if pool is not None:
+            pool.shutdown(wait=False)
+            self._coll_pool = None
+
+    def run_collective(self, fn: Callable, *, timeout: float = 30.0) -> list:
+        """Execute ``fn(mana)`` concurrently on every live rank — the
+        driver for collective wrappers, which every member must enter
+        (``cluster.run_collective(lambda m: m.allreduce(...))``).
+
+        Fail-fast: the first rank error (e.g. a ``RankDeadError`` from a
+        crashed-but-undetected lower half) is raised IMMEDIATELY, without
+        waiting for peers blocked on the dead rank's contribution (the
+        poisoned pool is discarded; stragglers drain on their own).
+        Dead-rank errors outrank secondary timeouts so the supervisor
+        classifies the root cause."""
+        import threading as _threading
+
+        from repro.core.faults import RankDeadError
+        manas = self.manas
+        out = [None] * len(manas)
+        errs: list[BaseException] = []
+        lock = _threading.Lock()
+        done = _threading.Event()
+        remaining = len(manas)
+
+        def run(i, m):
+            nonlocal remaining
+            try:
+                r = fn(m)
+            except BaseException as e:  # noqa: BLE001 — surface to caller
+                with lock:
+                    errs.append(e)
+                done.set()
+            else:
+                out[i] = r
+                with lock:
+                    remaining -= 1
+                    if remaining == 0:
+                        done.set()
+
+        pool = self._coll_executor(len(manas))
+        for i, m in enumerate(manas):
+            pool.submit(run, i, m)
+        if not done.wait(timeout):
+            self._discard_coll_executor()
+            raise TimeoutError(f"collective did not complete within "
+                               f"{timeout}s ({remaining} rank(s) pending)")
+        if errs:
+            self._discard_coll_executor()
+            errs.sort(key=lambda e: not isinstance(e, RankDeadError))
+            raise errs[0]
+        return out
 
     # -- heartbeats / failure detection ------------------------------------
     def heartbeat(self, rank: int):

@@ -29,7 +29,9 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
+from repro.core.callspec import COLL_TAG_MIN
 from repro.core.descriptors import Kind
+from repro.core.faults import failpoint
 
 DEFAULT_TIMEOUT = 10.0
 DEFAULT_BACKOFF = 5e-5          # first poll sleep; doubles up to _BACKOFF_CAP
@@ -82,7 +84,9 @@ def drain_rank(mana, timeout: float = DEFAULT_TIMEOUT, *,
     t0 = time.time()
     if deadline is None:
         deadline = t0 + timeout
+    failpoint("drain.rank", rank=mana.rank)
     stats = {"rank": mana.rank, "messages_buffered": 0,
+             "coll_messages_buffered": 0,
              "requests_completed": 0, "test_rounds": 0, "waited_s": 0.0}
 
     # 1. complete outstanding requests: one batched test per round, backoff
@@ -124,6 +128,11 @@ def drain_rank(mana, timeout: float = DEFAULT_TIMEOUT, *,
         payload = mana.backend.recv(src, tag)
         mana.pending_messages.append((src, tag, payload))
         stats["messages_buffered"] += 1
+        if tag >= COLL_TAG_MIN:
+            # in-flight collective (or split-protocol) payload: it drains
+            # like p2p and re-delivers through the buffered receive when the
+            # peer's collective call resumes after restart
+            stats["coll_messages_buffered"] += 1
         if time.time() >= deadline:
             stats["waited_s"] = round(time.time() - t0, 6)
             raise DrainStallError(
@@ -142,6 +151,7 @@ def _drain_rank_once(mana) -> tuple:
     incomplete — this rank must WAIT on the lower half and the world should
     quiesce on the parallel path instead (the partial stats still count)."""
     stats = {"rank": mana.rank, "messages_buffered": 0,
+             "coll_messages_buffered": 0,
              "requests_completed": 0, "test_rounds": 0, "waited_s": 0.0}
     pending = [d for d in mana.vids.iter_kind(Kind.REQUEST)
                if not d.state.get("done")]
@@ -161,6 +171,8 @@ def _drain_rank_once(mana) -> tuple:
         src, tag = probe
         mana.pending_messages.append((src, tag, mana.backend.recv(src, tag)))
         stats["messages_buffered"] += 1
+        if tag >= COLL_TAG_MIN:
+            stats["coll_messages_buffered"] += 1
     return stats, True
 
 
@@ -216,8 +228,8 @@ def drain_world(manas, timeout: float = DEFAULT_TIMEOUT, *,
     for rank, f in futures.items():
         try:
             st = f.result(timeout=timeout + 10)
-            for k in ("messages_buffered", "requests_completed",
-                      "test_rounds"):
+            for k in ("messages_buffered", "coll_messages_buffered",
+                      "requests_completed", "test_rounds"):
                 st[k] += sweep.get(rank, {}).get(k, 0)
             stats[rank] = st
         except Exception as e:  # noqa: BLE001

@@ -2,46 +2,54 @@
 
 The application sees opaque 64-bit handles whose FIRST 32 BITS are the MANA
 virtual id (mirroring 'the vid occupies the first 4 bytes of whatever handle
-type mpi.h declares', §1.2 point 2). Every wrapper translates virtual ->
+type mpi.h declares', §1.2 point 2).  Every wrapper translates virtual ->
 physical on entry and physical -> virtual on exit; object-creating calls are
-appended to the record-replay log. The same class runs unmodified against all
-four backend flavors — the implementation-oblivious property under test.
+appended to the record-replay log.  The same class runs unmodified against
+all five backend flavors — the implementation-oblivious property under test.
+
+Since the declarative call-spec registry landed, this module holds ONLY the
+per-rank runtime plumbing: the vid table, descriptor registration, the hot
+translation path (fast / slow / none), lazy constant binding (§4.3), the
+buffered receive that re-delivers drained messages, and snapshot/restore.
+Every MPI wrapper — communicators, datatypes, ops, p2p, requests, and the
+full collective surface — is GENERATED from its :class:`~repro.core.callspec
+.CallSpec` by :func:`repro.core.callspec.install`, so translate/log/
+failpoint behavior is defined in exactly one place and cannot drift per
+call.  The generated API is documented in docs/mpi_api.md (auto-generated
+by tools/gen_api_docs.py).
 
 `translation='slow'` routes lookups through the LEGACY per-kind string-keyed
 tables (paper §4.1) — the measured baseline for the virtId speedup and the
 FSGSBASE-style fast/slow path comparison in benchmarks/bench_overhead.py.
+`translation='none'` is the accounting-free deref (no virtualization cost
+model), used as the third leg of the translation-parity tests.
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Optional
+from collections import deque
+from typing import Optional
 
+from repro.core import callspec
 from repro.core.backends import make_backend
+from repro.core.callspec import (HANDLE_MAGIC, TAG_USER, handle_vid,
+                                 make_handle)
 from repro.core.descriptors import (Descriptor, Kind, Strategy, comm_desc,
-                                    datatype_desc, group_desc, op_desc,
-                                    request_desc)
+                                    datatype_desc, op_desc)
 from repro.core.legacy_vid import LegacyVidTables
 from repro.core.vid import VidTable, vid_kind
 
-HANDLE_MAGIC = 0x4D414E41  # 'MANA' in the upper 32 bits of every handle
-_TAG_SPLIT = 60001
-_TAG_USER = 50000
+_TAG_USER = TAG_USER            # legacy alias (pre-registry name)
 
 _KIND_NAME = {Kind.COMM: "MPI_Comm", Kind.GROUP: "MPI_Group",
               Kind.REQUEST: "MPI_Request", Kind.OP: "MPI_Op",
               Kind.DATATYPE: "MPI_Datatype"}
 
 
-def make_handle(vid: int) -> int:
-    return (HANDLE_MAGIC << 32) | (vid & 0xFFFFFFFF)
-
-
-def handle_vid(handle: int) -> int:
-    return handle & 0xFFFFFFFF
-
-
 class Mana:
-    """Per-rank interposition runtime (upper half)."""
+    """Per-rank interposition runtime (upper half).
+
+    MPI wrappers are installed by ``callspec.install(Mana)`` at import
+    time; see ``Mana.CALLSPECS`` for the registry."""
 
     def __init__(self, backend_name: str, fabric, rank: int, world_size: int,
                  *, translation: str = "fast", ggid_policy: str = "eager"):
@@ -56,6 +64,7 @@ class Mana:
         self._legacy_of: dict[int, int] = {}   # vid -> legacy vid
         self.log: list = []                    # record-replay creation log
         self.pending_messages: list = []       # drained in-flight messages
+        self.transcript: deque = deque(maxlen=callspec.TRANSCRIPT_CAP)
         self.translate_count = 0
         self.backend = make_backend(backend_name, fabric, rank, world_size)
         self._register_world()
@@ -79,12 +88,16 @@ class Mana:
         return self.vids.lookup(handle_vid(handle))
 
     def _phys(self, handle: int):
-        """virtual -> physical on every call: THE hot path."""
-        self.translate_count += 1
+        """virtual -> physical on every call: THE hot path.  The generated
+        wrappers call this exactly once per declared handle argument."""
         vid = handle_vid(handle)
         d = self.vids.lookup(vid)
         if d.phys is None:
             self._bind_lazy(d)
+        if self.translation == "none":
+            # no-virtualization baseline: plain deref, no accounting
+            return d.phys
+        self.translate_count += 1
         if self.legacy is not None:
             # legacy path: string-compare map select + 3 attribute lookups
             kn = _KIND_NAME[vid_kind(vid)]
@@ -130,168 +143,24 @@ class Mana:
             od.meta["predefined"] = True
             self.op_handles[nm] = make_handle(self._register(od, None))
 
-    # ------------------------------------------------------------------
-    # wrappers: communicators / groups
-    # ------------------------------------------------------------------
     def comm_world(self) -> int:
+        """Handle of COMM_WORLD (an upper-half constant, not a call)."""
         return self.world_handle
 
-    def comm_rank(self, comm: int) -> int:
-        ranks = self._desc(comm).meta["ranks"]
-        return ranks.index(self.rank)
-
-    def comm_size(self, comm: int) -> int:
-        self._phys(comm)  # translation happens even for metadata calls
-        return len(self._desc(comm).meta["ranks"])
-
-    def comm_split(self, comm: int, color: int, key: int) -> Optional[int]:
-        """Collective over the parent communicator's members."""
-        parent = self._desc(comm)
-        phys_parent = self._phys(comm)
-        members = parent.meta["ranks"]
-        for dst in members:
-            self.backend.send(dst, _TAG_SPLIT, (self.rank, color, key))
-        triples = [self.backend.recv(src, _TAG_SPLIT) for src in members]
-        mine = sorted([(k, r) for r, c, k in triples if c == color])
-        new_members = [r for _, r in mine]
-        if not new_members:
-            return None
-        if "comm_split" in self.backend.capabilities():
-            phys = self.backend.comm_split(phys_parent, color, key, new_members)
-        else:  # ExaMPI subset: emulate via comm_create (paper §5)
-            phys = self.backend.comm_create(new_members)
-        d = comm_desc(new_members, parent=handle_vid(comm), color=color, key=key)
-        vid = self._register(d, phys)
-        self.log.append(("comm_split", {"parent": handle_vid(comm),
-                                        "color": color, "key": key,
-                                        "ranks": new_members}))
-        return make_handle(vid)
-
-    def comm_create(self, ranks) -> int:
-        phys = self.backend.comm_create(list(ranks))
-        d = comm_desc(ranks)
-        vid = self._register(d, phys)
-        self.log.append(("comm_create", {"ranks": list(ranks)}))
-        return make_handle(vid)
-
-    def comm_group(self, comm: int) -> int:
-        phys_g = self.backend.comm_group(self._phys(comm))
-        ranks = self.backend.group_translate_ranks(phys_g)
-        d = group_desc(ranks, parent=handle_vid(comm))
-        vid = self._register(d, phys_g)
-        self.log.append(("comm_group", {"parent": handle_vid(comm),
-                                        "ranks": list(ranks)}))
-        return make_handle(vid)
-
-    def group_ranks(self, group: int) -> list:
-        return self.backend.group_translate_ranks(self._phys(group))
-
-    def comm_free(self, comm: int):
-        self.backend.comm_free(self._phys(comm))
-        self.log.append(("free", {"vid": handle_vid(comm)}))
-        self.vids.free(handle_vid(comm))
-
     # ------------------------------------------------------------------
-    # wrappers: datatypes / ops
+    # buffered receive: the drain-redelivery guarantee, shared by user
+    # p2p AND every collective (native and derived alike)
     # ------------------------------------------------------------------
-    def type_contiguous(self, count: int, base: int) -> int:
-        base_env = self.backend.type_get_envelope(self._phys(base))
-        env = {"combiner": "contiguous", "count": count, "base": base_env}
-        phys = self.backend.type_create(env)
-        vid = self._register(datatype_desc(env), phys)
-        self.log.append(("type_create", {"envelope": env}))
-        return make_handle(vid)
-
-    def type_vector(self, count: int, blocklength: int, stride: int,
-                    base: int) -> int:
-        base_env = self.backend.type_get_envelope(self._phys(base))
-        env = {"combiner": "vector", "count": count, "blocklength": blocklength,
-               "stride": stride, "base": base_env}
-        phys = self.backend.type_create(env)
-        vid = self._register(datatype_desc(env), phys)
-        self.log.append(("type_create", {"envelope": env}))
-        return make_handle(vid)
-
-    def type_envelope(self, dtype: int) -> dict:
-        return self.backend.type_get_envelope(self._phys(dtype))
-
-    def op_create(self, name: str, commutative: bool = True) -> int:
-        phys = self.backend.op_create(name, commutative)
-        vid = self._register(op_desc(name, commutative), phys)
-        self.log.append(("op_create", {"name": name, "commutative": commutative}))
-        return make_handle(vid)
-
-    # ------------------------------------------------------------------
-    # wrappers: point-to-point (host metadata; drained at checkpoint)
-    # ------------------------------------------------------------------
-    def isend(self, dst: int, tag: int, payload) -> int:
-        phys = self.backend.isend(dst, _TAG_USER + tag, payload)
-        d = request_desc("isend", peer=dst, tag=tag)
-        vid = self._register(d, phys)
-        return make_handle(vid)
-
-    def recv(self, src: int, tag: int):
-        # buffered (drained-at-checkpoint) messages are consumed first,
-        # transparently — exactly MANA's restart semantics
+    def _recv_any(self, src: int, tag: int):
+        """Receive (src, tag) — drained-at-checkpoint messages first, then
+        the live fabric.  The single choke point that makes in-flight
+        traffic buffered by the quiesce protocol re-deliver transparently
+        after restart, for collectives exactly like point-to-point."""
         for i, (s, t, payload) in enumerate(self.pending_messages):
-            if s == src and t == _TAG_USER + tag:
+            if s == src and t == tag:
                 self.pending_messages.pop(i)
                 return payload
-        return self.backend.recv(src, _TAG_USER + tag)
-
-    def iprobe(self, src: int = -1, tag: int = -1):
-        for s, t, _ in self.pending_messages:
-            if (src in (-1, s)) and (tag == -1 or _TAG_USER + tag == t):
-                return (s, t - _TAG_USER)
-        return self.backend.iprobe(src, -1 if tag == -1 else _TAG_USER + tag)
-
-    def test(self, request: int) -> bool:
-        d = self._desc(request)
-        done = self.backend.test(self._phys(request))
-        d.state["done"] = bool(done)
-        return done
-
-    def request_free(self, request: int) -> None:
-        """MPI_Request_free semantics: retire a completed request's vid.
-        Without this, descriptors of consumed prefetch batches accumulate
-        one-per-step forever — and the vid table is serialized inside the
-        checkpoint's blocking window, so table growth is stop-the-world
-        growth."""
-        vid = handle_vid(request)
-        if self.legacy is not None:
-            lvid = self._legacy_of.pop(vid, None)
-            if lvid is not None:
-                self.legacy.free(_KIND_NAME[vid_kind(vid)], lvid)
-        self.vids.free(vid)
-
-    def test_all(self, requests) -> list:
-        """MPI_Testall wrapper: translate the whole handle vector, complete it
-        with ONE lower-half call, and mirror completion into the descriptors."""
-        descs = [self._desc(r) for r in requests]
-        flags = self.backend.test_all([self._phys(r) for r in requests])
-        for d, done in zip(descs, flags):
-            d.state["done"] = bool(done)
-        return [bool(f) for f in flags]
-
-    def wait_all(self, requests) -> None:
-        pending = list(requests)
-        delay = 5e-5
-        while pending:
-            flags = self.test_all(pending)
-            pending = [r for r, done in zip(pending, flags) if not done]
-            if pending:
-                time.sleep(delay)
-                delay = min(delay * 2, 0.005)
-
-    def barrier(self, comm: Optional[int] = None,
-                expected: Optional[int] = None,
-                timeout: Optional[float] = None):
-        self.backend.barrier(expected, timeout)
-
-    def alltoall(self, comm: int, payloads: list) -> list:
-        phys = self._phys(comm)
-        self.backend.alltoall(phys, payloads)
-        return self.backend.alltoall_recv(phys)
+        return self.backend.recv(src, tag)
 
     # ------------------------------------------------------------------
     # checkpoint support (the upper-half snapshot of this subsystem)
@@ -317,3 +186,8 @@ class Mana:
         from repro.core.restore import rebind_objects
         rebind_objects(m, snap, pool=pool)
         return m
+
+
+# generate every MPI wrapper from the declarative registry: translation,
+# kind checks, logging, transcripts, and failpoint arming in ONE place
+callspec.install(Mana)

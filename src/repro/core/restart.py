@@ -6,10 +6,18 @@ descriptor re-binding over the backend-pair restart matrix, the
 dependency-ordered parallel rebind/leaf-restore pool, elastic reshape onto
 a new mesh/world, and resume-chain resolution (see
 docs/restart_matrix.md).  This module re-exports the public surface so
-pre-existing ``repro.core.restart`` imports keep working; new code should
-import ``repro.core.restore`` directly.
+pre-existing ``repro.core.restart`` imports keep working — with a
+``DeprecationWarning`` — but new code must import ``repro.core.restore``
+directly; this shim will be removed once out-of-tree consumers migrate.
 """
-from repro.core.restore import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.restart is deprecated: the restart engine lives in "
+    "repro.core.restore (import that directly)",
+    DeprecationWarning, stacklevel=2)
+
+from repro.core.restore import (  # noqa: F401,E402
     ArrayRestoreJob,
     PairPlan,
     _NpzCache,

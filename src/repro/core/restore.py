@@ -180,15 +180,24 @@ def _plan_rebind(mana, snap: dict) -> _RebindPlan:
     mana.vids = table
     mana.log = list(snap["log"])
     mana.pending_messages = [tuple(p) for p in snap["pending"]]
+    _repoint_constants(mana, table)
     # rebuild the legacy shadow tables when running in slow-translation mode
     if mana.legacy is not None:
         from repro.core.legacy_vid import LegacyVidTables
         mana.legacy = LegacyVidTables()
         mana._legacy_of = {}
+    from repro.core.callspec import COLL_TAG_MIN
     by_vid = {d.vid: d for d in table.all_descriptors()}
     rp = _RebindPlan(mana=mana, plan=plan, by_vid=by_vid, modes={},
                      stats={"replayed": 0, "serialized": 0, "lazy": 0,
-                            "reencoded_envelopes": 0})
+                            "reencoded_envelopes": 0,
+                            # drained traffic re-delivered via the buffered
+                            # receive once the peers' calls resume —
+                            # collective payloads replay like p2p
+                            "pending_redelivery": len(mana.pending_messages),
+                            "pending_collective": sum(
+                                1 for _, t, _ in mana.pending_messages
+                                if t >= COLL_TAG_MIN)})
     # two passes: classify EVERYTHING first, then register dependencies.
     # by_vid iterates in vid order, which for comms is ggid (hash) order —
     # a child split can hash below its parent, so a single fused pass would
@@ -214,6 +223,29 @@ def _plan_rebind(mana, snap: dict) -> _RebindPlan:
                                                        "serialize"):
             rp.deps[vid] = parent
     return rp
+
+
+def _repoint_constants(mana, table: VidTable) -> None:
+    """Re-aim the upper-half constant accessors (``comm_world()``,
+    ``dtype_handles``, ``op_handles``) at the RESTORED table's descriptors.
+
+    ``Mana.__init__`` registered fresh constants before the snapshot's
+    table was swapped in; for datatypes/ops the per-kind counters make the
+    vids coincide, but COMM vids are ggid hashes of the MEMBER RANKS — an
+    elastic restart onto a different world size leaves ``world_handle``
+    pointing at a vid the restored table never contained.  A post-recovery
+    collective over ``comm_world()`` (the training step's allreduce hot
+    path) would then die on a dangling vid."""
+    from repro.core.callspec import make_handle
+    for d in table.all_descriptors():
+        if d.kind == Kind.COMM and d.meta.get("axis_name") == "world":
+            mana.world_handle = make_handle(d.vid)
+        elif d.kind == Kind.DATATYPE:
+            env = d.meta.get("envelope", {})
+            if env.get("combiner") == "named":
+                mana.dtype_handles[env["name"]] = make_handle(d.vid)
+        elif d.kind == Kind.OP and d.meta.get("predefined"):
+            mana.op_handles[d.meta["name"]] = make_handle(d.vid)
 
 
 def _bind_one(rp: _RebindPlan, vid: int) -> None:

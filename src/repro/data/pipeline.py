@@ -59,12 +59,11 @@ class DataPipeline:
             b = synth_batch(self.cfg, self.batch_size, self.seq_len,
                             self.seed, idx)
             if self.mana is not None:
-                from repro.core.descriptors import request_desc
-                d = request_desc("prefetch", tag=idx)
-                d.state["done"] = True  # produced == completed
-                h = self.mana._register(d, self.mana.backend.request_create(
-                    {"op": "prefetch", "index": idx}))
-                self._requests[idx] = h
+                # a generalized request (MPI_Grequest_start) through the
+                # generated wrapper: produced == completed, so the quiesce
+                # protocol accounts for it without waiting on it
+                self._requests[idx] = self.mana.grequest_start(
+                    "prefetch", index=idx, done=True)
             while not self._stop.is_set():
                 try:
                     self._q.put((idx, b), timeout=0.2)

@@ -35,7 +35,8 @@ from repro.sharding import ShardingCtx, rules_for
 class Trainer:
     def __init__(self, cfg, *, batch_size=8, seq_len=64, world_size=2,
                  backend="mpich", ckpt_dir=None, translation="fast",
-                 lr=3e-3, total_steps=1000, seed=0, mesh=None, ckpt_io=None):
+                 lr=3e-3, total_steps=1000, seed=0, mesh=None, ckpt_io=None,
+                 metrics_allreduce=True):
         self.cfg = cfg
         self.batch_size = batch_size
         self.seq_len = seq_len
@@ -49,6 +50,7 @@ class Trainer:
                                ckpt_dir=ckpt_dir, ckpt_io=ckpt_io)
         self.pipeline = DataPipeline(cfg, batch_size, seq_len,
                                      seed=seed + 1, mana=self.cluster.mana(0))
+        self.metrics_allreduce = metrics_allreduce
         self._build_step()
         self.seed = seed
         self.step = 0
@@ -87,12 +89,25 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def step_once(self):
-        """One training step: next batch -> jit'd SPMD update -> heartbeat
-        every rank.  The unit the supervisor drives; ``run`` loops over it."""
+        """One training step: next batch -> jit'd SPMD update -> world
+        allreduce of the step loss on the MANA plane -> heartbeat every
+        rank.  The unit the supervisor drives; ``run`` loops over it.
+
+        The metrics allreduce is the training step's MPI hot path: every
+        live rank enters ``allreduce`` over COMM_WORLD through the
+        generated interposition layer, so a dead lower half or a dangling
+        session token surfaces HERE (fail-fast, classified by the
+        supervisor) rather than only at the next checkpoint."""
         batch = self._device_batch(self.pipeline.next())
         self.params, self.opt_state, metrics = self.train_step(
             self.params, self.opt_state, batch, jnp.int32(self.step))
         self.step += 1
+        if self.metrics_allreduce:
+            world = max(len(self.cluster.manas), 1)
+            loss_sum = ST.host_allreduce(self.cluster,
+                                         float(metrics["loss"]))
+            metrics = dict(metrics)
+            metrics["world_loss"] = loss_sum / world
         for r in range(len(self.cluster.ranks)):
             self.cluster.heartbeat(r)
         return metrics

@@ -66,6 +66,22 @@ def _grad_with_aux(loss_fn, params):
     return grads, (total, aux)
 
 
+def host_allreduce(cluster, value, op: str = "MPI_SUM", *,
+                   timeout: float = 30.0):
+    """World allreduce of a host scalar over the MANA plane — the training
+    step's collective hot path (every live rank enters
+    ``allreduce(comm_world(), value, op)`` through the interposition
+    layer; capability-gated native vs derived per backend flavor).
+
+    ``value`` may be a plain scalar (same contribution everywhere) or a
+    callable ``rank -> scalar``.  Returns the rank-order fold, identical
+    on every rank (the rank-0 copy)."""
+    def one(m):
+        v = value(m.rank) if callable(value) else value
+        return m.allreduce(m.comm_world(), v, m.op_handles[op])
+    return cluster.run_collective(one, timeout=timeout)[0]
+
+
 def make_prefill_step(model: Model, ctx):
     def prefill_step(params, batch):
         return model.prefill(ctx, params, batch)

@@ -2,7 +2,9 @@
 supervised auto-recovery engine.
 
 Every cell trains a tiny model under the Supervisor with one scheduled
-fault plan, then asserts:
+fault plan — the training step itself drives a world ``allreduce`` over
+the MANA plane every step (the generated collective hot path), so faults
+also surface through collective calls — then asserts:
 
   * the supervisor detected AND recovered (>= 1 incident of the expected
     failure class, with the full {detect,classify,restore,resume}_ms
@@ -153,6 +155,13 @@ def run_cell(base: Path, kind: str, phase: str, backend: str,
             f"{name}: classified {inc.kind!r}, expected {EXPECT[kind]!r} " \
             f"({inc.error})"
         assert tr.step == STEPS, f"{name}: stopped at step {tr.step}"
+        # the training step's hot path runs a world allreduce through the
+        # generated interposition layer — recovery must leave it working
+        # on the post-incident world (possibly shrunken, possibly a fresh
+        # lower half), which the post-recovery steps just exercised
+        assert any(t[0] == "allreduce"
+                   for m in tr.cluster.manas for t in m.transcript), \
+            f"{name}: training step never drove allreduce after recovery"
         for key in ("detect_ms", "classify_ms", "restore_ms", "resume_ms"):
             assert key in inc.timings, f"{name}: missing telemetry {key}"
         if kind in FALLBACK_KINDS:

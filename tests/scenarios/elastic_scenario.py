@@ -35,6 +35,10 @@ def main():
     tr.run(5, log_every=5)                       # reference continuation
     ref_loss_15 = tr.history[-1]["loss"]
     tr.pipeline.stop()
+    # the step-10 checkpoint persists in the background: wait for its
+    # COMMIT before asking for the latest committed image (reading
+    # latest() mid-write is a race — the write usually, not always, wins)
+    tr.cluster.writer.wait_idle()
     ck = tr.cluster.writer.latest()
     assert ck is not None, "no checkpoint committed"
 

@@ -20,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.ckpt import CheckpointWriter, snapshot_shards
 from repro.core.ckpt_pipeline import plan_snapshot
-from repro.core.restart import load_arrays
+from repro.core.restore import load_arrays
 from repro.launch.mesh import make_host_mesh
 
 

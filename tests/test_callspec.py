@@ -1,0 +1,409 @@
+"""The declarative call-spec registry: generated-wrapper parity across
+translation modes and flavors, the complete collective surface
+(native AND derived), typed free errors, and the coverage gates.
+
+The load-bearing property: ONE workload driven through the generated
+wrappers produces IDENTICAL call transcripts and record-replay logs under
+``translation='fast'``, ``'slow'`` and ``'none'``, on every backend flavor
+— uniformity is structural, so the three translation mechanisms cannot
+drift behaviorally."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BACKENDS, Cluster, Kind
+from repro.core.callspec import (COLLECTIVE_CALLS, REGISTRY, HandleFreeError,
+                                 HandleKindError, NotInCommunicatorError,
+                                 Policy, ReduceOpError, spec_for)
+from repro.core.drain import drain_rank
+
+ALL = sorted(BACKENDS)
+MODES = ("fast", "slow", "none")
+WORLD = 4
+
+
+def run_coll(cluster, fn, ranks=None):
+    """Drive a collective: every (selected) rank enters fn on its own
+    thread, results in rank order."""
+    ranks = range(cluster.world_size) if ranks is None else ranks
+    out = {}
+    errs = []
+
+    def run(r):
+        try:
+            out[r] = fn(cluster.mana(r))
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=run, args=(r,)) for r in ranks]
+    [t.start() for t in ts]
+    [t.join(timeout=30) for t in ts]
+    if errs:
+        raise errs[0]
+    return [out[r] for r in ranks]
+
+
+def full_workload(cluster):
+    """Exercise EVERY generated wrapper once (the meta-test asserts the
+    transcript covers the whole registry)."""
+    m0 = cluster.mana(0)
+    w = m0.comm_world()
+    m0.comm_rank(w)
+    m0.comm_size(w)
+    subs = run_coll(cluster, lambda m: m.comm_split(m.comm_world(),
+                                                    m.rank % 2, m.rank))
+    cc = m0.comm_create([0, 1])
+    g = m0.comm_group(cc)
+    m0.group_ranks(g)
+    t = m0.type_contiguous(4, m0.dtype_handles["MPI_INT8_T"])
+    m0.type_vector(2, 3, 8, t)
+    m0.type_envelope(t)
+    op = m0.op_create("logsumexp", commutative=False)
+    assert op is not None
+    m0.comm_free(cc)
+    # p2p + requests
+    r1 = m0.isend(1, tag=7, payload={"k": 1})
+    r2 = m0.isend(1, tag=8, payload=[1, 2])
+    gr = m0.grequest_start("prefetch", index=3, done=True)
+    m0.test(r1)
+    m0.test_all([r1, r2])
+    m0.waitany([r1, r2])
+    m0.waitsome([r1, r2])
+    m0.wait_all([r1, r2])
+    m0.request_free(gr)
+    m1 = cluster.mana(1)
+    m1.iprobe()
+    m1.recv(0, 7)
+    m1.recv(0, 8)
+    # the full collective surface over world and a split comm
+    s = m0.op_handles["MPI_SUM"]
+    run_coll(cluster, lambda m: m.bcast(m.comm_world(), m.rank * 11,
+                                        root=1))
+    run_coll(cluster, lambda m: m.reduce(m.comm_world(), m.rank,
+                                         m.op_handles["MPI_SUM"], root=0))
+    run_coll(cluster, lambda m: m.allreduce(m.comm_world(), m.rank + 1,
+                                            m.op_handles["MPI_SUM"]))
+    run_coll(cluster, lambda m: m.scatter(
+        m.comm_world(), [f"c{q}" for q in range(WORLD)]
+        if m.rank == 2 else None, root=2))
+    run_coll(cluster, lambda m: m.gather(m.comm_world(), m.rank, root=3))
+    run_coll(cluster, lambda m: m.allgather(m.comm_world(), m.rank * 2))
+    run_coll(cluster, lambda m: m.reduce_scatter(
+        m.comm_world(), [m.rank] * WORLD, m.op_handles["MPI_SUM"]))
+    run_coll(cluster, lambda m: m.scan(m.comm_world(), 1,
+                                       m.op_handles["MPI_SUM"]))
+    run_coll(cluster, lambda m: m.alltoall(
+        m.comm_world(), [(m.rank, q) for q in range(WORLD)]))
+    # a collective on the SPLIT communicator (members {0, 2})
+    run_coll(cluster, lambda m: m.allreduce(subs[m.rank], m.rank, s),
+             ranks=[0, 2])
+    m0.barrier(expected=1)
+    return subs
+
+
+# ---------------------------------------------------------------------------
+# translation-mode parity: fast / slow / none — identical transcripts+logs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL)
+def test_translation_mode_parity(backend):
+    captures = {}
+    for mode in MODES:
+        c = Cluster(WORLD, backend, translation=mode)
+        full_workload(c)
+        captures[mode] = [(list(c.mana(r).transcript), list(c.mana(r).log))
+                          for r in range(WORLD)]
+    for mode in ("slow", "none"):
+        for r in range(WORLD):
+            assert captures[mode][r][0] == captures["fast"][r][0], \
+                f"{backend}/{mode}: rank {r} transcript diverged from fast"
+            assert captures[mode][r][1] == captures["fast"][r][1], \
+                f"{backend}/{mode}: rank {r} record-replay log diverged"
+
+
+def test_workload_covers_every_generated_wrapper():
+    """The parity workload must touch EVERY registry entry — a new
+    CallSpec without parity coverage fails here."""
+    c = Cluster(WORLD, "mpich")
+    full_workload(c)
+    called = set()
+    for r in range(WORLD):
+        called.update(name for name, _, _ in c.mana(r).transcript)
+    missing = {s.name for s in REGISTRY} - called
+    assert not missing, f"wrappers never exercised: {sorted(missing)}"
+
+
+def test_transcripts_identical_across_flavors():
+    """vids are deterministic (ggid + counters), so the SAME workload
+    yields the same canonical transcript under every flavor — physical
+    handles never leak into transcripts.  Envelope-returning calls are
+    excluded: ExaMPI's INT8/CHAR aliasing makes their RESULTS differ by
+    design (§4.3), which is exactly what the restore-side envelope
+    re-encode translates."""
+    aliasing_sensitive = {"type_envelope"}
+    base = None
+    for backend in ALL:
+        c = Cluster(WORLD, backend, translation="fast")
+        full_workload(c)
+        t0 = [e for e in c.mana(0).transcript
+              if e[0] not in aliasing_sensitive]
+        if base is None:
+            base = (backend, t0)
+        else:
+            assert t0 == base[1], f"{backend} transcript != {base[0]}"
+
+
+# ---------------------------------------------------------------------------
+# collective semantics, native and derived
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL)
+def test_collective_results(backend):
+    c = Cluster(WORLD, backend)
+    s = lambda m: m.op_handles["MPI_SUM"]  # noqa: E731
+    assert run_coll(c, lambda m: m.allreduce(m.comm_world(), m.rank + 1,
+                                             s(m))) == [10] * WORLD
+    assert run_coll(c, lambda m: m.bcast(m.comm_world(),
+                                         {"v": 7} if m.rank == 2 else None,
+                                         root=2)) == [{"v": 7}] * WORLD
+    red = run_coll(c, lambda m: m.reduce(m.comm_world(), m.rank,
+                                         m.op_handles["MPI_MAX"], root=1))
+    assert red == [None, 3, None, None]
+    assert run_coll(c, lambda m: m.gather(m.comm_world(), m.rank * 10,
+                                          root=0))[0] == [0, 10, 20, 30]
+    assert run_coll(c, lambda m: m.allgather(m.comm_world(), m.rank)) \
+        == [[0, 1, 2, 3]] * WORLD
+    assert run_coll(c, lambda m: m.scatter(
+        m.comm_world(), list("abcd") if m.rank == 0 else None, root=0)) \
+        == ["a", "b", "c", "d"]
+    assert run_coll(c, lambda m: m.reduce_scatter(
+        m.comm_world(), [m.rank] * WORLD, s(m))) == [6] * WORLD
+    assert run_coll(c, lambda m: m.scan(m.comm_world(), m.rank + 1,
+                                        s(m))) == [1, 3, 6, 10]
+    at = run_coll(c, lambda m: m.alltoall(
+        m.comm_world(), [(m.rank, q) for q in range(WORLD)]))
+    for q in range(WORLD):
+        assert at[q] == [(src, q) for src in range(WORLD)]
+
+
+def test_native_vs_derived_equivalence():
+    """mpich (full native caps) and fabric (zero collective caps — pure
+    derived) must be observationally identical, including array payload
+    folds."""
+    results = {}
+    for backend in ("mpich", "fabric"):
+        c = Cluster(WORLD, backend)
+        caps = c.mana(0).backend.capabilities()
+        assert ("allreduce" in caps) == (backend == "mpich")
+        arr = run_coll(c, lambda m: m.allreduce(
+            m.comm_world(), np.full(3, m.rank, np.int64),
+            m.op_handles["MPI_SUM"]))
+        scn = run_coll(c, lambda m: m.scan(m.comm_world(), m.rank + 1,
+                                           m.op_handles["MPI_PROD"]))
+        results[backend] = (arr, scn)
+    m_arr, m_scn = results["mpich"]
+    f_arr, f_scn = results["fabric"]
+    for a, b in zip(m_arr, f_arr):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, np.full(3, 6, np.int64))
+    assert m_scn == f_scn == [1, 2, 6, 24]
+
+
+def test_collective_on_split_comm_and_membership_errors():
+    c = Cluster(WORLD, "exampi")       # no native split AND partial colls
+    subs = run_coll(c, lambda m: m.comm_split(m.comm_world(), m.rank % 2,
+                                              m.rank))
+    got = run_coll(c, lambda m: m.allreduce(subs[m.rank], m.rank,
+                                            m.op_handles["MPI_SUM"]),
+                   ranks=[1, 3])
+    assert got == [4, 4]
+    # a non-member driving a collective on a comm it merely HOLDS is typed
+    # (vid tables are per-rank, so the handle must come from rank 1's own
+    # table: create the {0,2} communicator locally)
+    foreign = c.mana(1).comm_create([0, 2])
+    with pytest.raises(NotInCommunicatorError):
+        c.mana(1).bcast(foreign, 1, root=0)
+    with pytest.raises(ReduceOpError):
+        op = c.mana(0).op_create("median", commutative=False)
+        c.mana(0).allreduce(subs[0], 1, op)
+    with pytest.raises(ValueError):
+        c.mana(0).bcast(subs[0], 1, root=9)
+
+
+def test_collective_drain_redelivers_after_restart(tmp_path):
+    """A collective in flight at checkpoint time (root entered, peers not
+    yet) drains into the image and re-delivers through the buffered
+    receive after restart.  Scatter's fan-out is root->each-member under
+    EVERY flavor (no tree shapes), so the drained pattern completes under
+    ANY restart flavor of the matrix — here mpich -> fabric."""
+    c = Cluster(WORLD, "mpich", ckpt_dir=tmp_path / "ck")
+    m1 = c.mana(1)
+    m1.scatter(m1.comm_world(), [f"s{q}" for q in range(WORLD)], root=1)
+    req = c.checkpoint(3, {"x": np.arange(4.0)}, None)
+    req.wait()
+    # the drain buffered the in-flight fan-out (one message per peer)
+    from repro.core.restore import load_rank_state
+    drained = sum(load_rank_state(req.directory,
+                                  r)["drain"]["coll_messages_buffered"]
+                  for r in range(WORLD))
+    assert drained >= WORLD - 1
+    fresh = c.restart(req.directory, new_backend="fabric")
+    for r in (0, 2, 3):
+        m = fresh.mana(r)
+        assert m.scatter(m.comm_world(), None, root=1) == f"s{r}"
+    assert any(st["pending_collective"] >= 1 for st in fresh.rebind_stats)
+    fresh.writer.close()
+    c.writer.close()
+
+
+def test_tree_collective_resumes_within_family(tmp_path):
+    """MPICH's binomial-tree bcast forwards through intermediate ranks, so
+    a mid-flight tree bcast resumes when the restart flavor REPLAYS the
+    same message pattern — i.e. within the implementation family
+    (mpich -> craympi); peers complete concurrently, forwarding down the
+    drained tree."""
+    c = Cluster(WORLD, "mpich", ckpt_dir=tmp_path / "ck")
+    m1 = c.mana(1)
+    m1.bcast(m1.comm_world(), {"payload": 42}, root=1)   # root's half only
+    req = c.checkpoint(5, {"x": np.arange(4.0)}, None)
+    req.wait()
+    fresh = c.restart(req.directory, new_backend="craympi")
+    got = run_coll(fresh, lambda m: m.bcast(m.comm_world(), None, root=1),
+                   ranks=[0, 2, 3])
+    assert got == [{"payload": 42}] * 3
+    fresh.writer.close()
+    c.writer.close()
+
+
+def test_wildcard_iprobe_never_leaks_internal_tags(tmp_path):
+    """A wildcard iprobe must not surface drained (or live) collective
+    payloads as user messages: the leaked pseudo-tag could never be
+    recv()'d and would wedge probe-driven message loops."""
+    c = Cluster(WORLD, "mpich", ckpt_dir=tmp_path / "ck")
+    m1 = c.mana(1)
+    m1.scatter(m1.comm_world(), list("wxyz"), root=1)   # in flight
+    c.checkpoint(1, {"x": np.arange(2.0)}, None).wait()
+    m0 = c.mana(0)
+    assert m0.pending_messages                 # the drained scatter chunk
+    assert m0.iprobe() is None                 # drained internal: invisible
+    m1.isend(0, tag=4, payload="user")
+    assert m0.iprobe() == (1, 4 + 50000)       # user message still probes
+    # live internal traffic is equally invisible to the wildcard probe
+    m2 = c.mana(2)
+    c.mana(3).isend(2, tag=0, payload="u2")
+    m1.bcast(m1.comm_world(), "live", root=1)  # live coll msg ahead in queue
+    probe = m2.iprobe()
+    assert probe is None or probe == (3, 50000)
+    c.writer.close()
+
+
+def test_drain_counts_collective_traffic():
+    c = Cluster(2, "openmpi")
+    m0, m1 = c.mana(0), c.mana(1)
+    m0.isend(1, tag=1, payload="user")
+    m0.bcast(m0.comm_world(), "coll", root=0)
+    st = drain_rank(m1)
+    assert st["messages_buffered"] == 2
+    assert st["coll_messages_buffered"] == 1
+    assert m1.bcast(m1.comm_world(), None, root=0) == "coll"
+    assert m1.recv(0, 1) == "user"
+
+
+# ---------------------------------------------------------------------------
+# waitany / waitsome
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["mpich", "fabric"])
+def test_waitany_waitsome(backend):
+    c = Cluster(2, backend)
+    m0 = c.mana(0)
+    reqs = [m0.isend(1, tag=t, payload=t) for t in range(3)]
+    assert m0.waitany(reqs) == 0
+    assert m0.waitsome(reqs) == [0, 1, 2]
+    assert m0.waitsome([]) == []
+    with pytest.raises(ValueError):
+        m0.waitany([])
+    # completion mirrored into descriptors, so the drain sees them done
+    assert all(m0._desc(r).state["done"] for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# typed free errors (the request_free corruption fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("translation", ["fast", "slow"])
+def test_request_free_double_free_is_typed(translation):
+    c = Cluster(2, "mpich", translation=translation)
+    m = c.mana(0)
+    h = m.isend(1, tag=1, payload="p")
+    m.request_free(h)
+    with pytest.raises(HandleFreeError):
+        m.request_free(h)
+    # the table survived intact: new registrations still work
+    h2 = m.isend(1, tag=2, payload="q")
+    assert m.test(h2) is True
+
+
+def test_request_free_wrong_kind_and_unknown():
+    c = Cluster(2, "openmpi")
+    m = c.mana(0)
+    with pytest.raises(HandleFreeError):
+        m.request_free(m.comm_world())          # a COMM, not a REQUEST
+    from repro.core.callspec import make_handle
+    from repro.core.vid import pack_vid
+    with pytest.raises(HandleFreeError):
+        m.request_free(make_handle(pack_vid(Kind.REQUEST, 12345)))
+    with pytest.raises(HandleFreeError):
+        m.comm_free(m.isend(1, tag=1, payload="x"))  # REQUEST into comm_free
+
+
+def test_handle_kind_checked_on_entry():
+    c = Cluster(2, "mpich")
+    m = c.mana(0)
+    with pytest.raises(HandleKindError):
+        m.comm_size(m.dtype_handles["MPI_FLOAT"])
+    with pytest.raises(HandleKindError):
+        m.test(m.comm_world())
+
+
+# ---------------------------------------------------------------------------
+# registry/coverage gates double as tier-1 tests
+# ---------------------------------------------------------------------------
+
+def test_every_wrapper_is_generated():
+    from repro.core.interpose import Mana
+    for spec in REGISTRY:
+        fn = getattr(Mana, spec.name)
+        assert getattr(fn, "__callspec__", None) is spec, spec.name
+
+
+def test_registry_policies_and_gates():
+    assert spec_for("comm_split").policy is Policy.CREATES
+    assert spec_for("isend").drains and spec_for("grequest_start").drains
+    assert set(COLLECTIVE_CALLS) >= {"bcast", "reduce", "allreduce",
+                                     "scatter", "gather", "allgather",
+                                     "reduce_scatter", "scan", "alltoall"}
+    for name in COLLECTIVE_CALLS:
+        spec = spec_for(name)
+        if spec.capability is not None:
+            assert spec.fallback is not None, name
+
+
+def test_api_coverage_tool_passes():
+    import importlib.util
+    from pathlib import Path
+    p = Path(__file__).resolve().parent.parent / "tools" \
+        / "check_api_coverage.py"
+    sp = importlib.util.spec_from_file_location("check_api_coverage", p)
+    mod = importlib.util.module_from_spec(sp)
+    sp.loader.exec_module(mod)
+    assert mod.check() == []
+
+
+def test_restart_shim_deprecation_warning():
+    import importlib
+    import sys
+    sys.modules.pop("repro.core.restart", None)
+    with pytest.warns(DeprecationWarning, match="repro.core.restore"):
+        importlib.import_module("repro.core.restart")

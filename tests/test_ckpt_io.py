@@ -12,7 +12,7 @@ import pytest
 from repro.configs import CkptIOConfig
 from repro.core import Cluster, ckpt_io
 from repro.core.ckpt import CheckpointWriter
-from repro.core.restart import load_arrays, load_manifest
+from repro.core.restore import load_arrays, load_manifest
 
 
 # ---------------------------------------------------------------------------
@@ -358,7 +358,7 @@ def test_legacy_v1_npz_checkpoint_still_loads(tmp_path):
 
 
 def test_npz_cache_bounded_and_closed(tmp_path):
-    from repro.core.restart import _NpzCache
+    from repro.core.restore import _NpzCache
     paths = []
     for i in range(6):
         p = tmp_path / f"f{i}.npz"

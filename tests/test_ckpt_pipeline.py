@@ -19,7 +19,7 @@ from repro.core.ckpt import CheckpointWriter
 from repro.core.ckpt_pipeline import (HostArena, SnapshotPipeline, batch_plan,
                                       plan_snapshot)
 from repro.core.drain import drain_rank, drain_world
-from repro.core.restart import load_arrays, load_rank_state
+from repro.core.restore import load_arrays, load_rank_state
 
 
 # ---------------------------------------------------------------------------

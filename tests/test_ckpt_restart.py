@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import Cluster
-from repro.core.restart import load_arrays, load_manifest, load_rank_state
+from repro.core.restore import load_arrays, load_manifest, load_rank_state
 
 
 def split_all(cluster, color_fn):

@@ -39,6 +39,25 @@ def _split_all(cluster, color_fn):
     return out
 
 
+def _coll(cluster, fn, ranks=None):
+    """Drive a collective wrapper on each selected rank's own thread."""
+    ranks = list(range(cluster.world_size)) if ranks is None else ranks
+    out, errs = {}, []
+
+    def run(r):
+        try:
+            out[r] = fn(cluster.mana(r))
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=run, args=(r,)) for r in ranks]
+    [t.start() for t in ts]
+    [t.join(timeout=30) for t in ts]
+    if errs:
+        raise errs[0]
+    return [out[r] for r in ranks]
+
+
 class _SrcCkpt:
     """One source flavor's checkpoint plus the OLD handle values the
     restarted side must keep honoring."""
@@ -59,6 +78,18 @@ class _SrcCkpt:
         self.vec = m0.type_vector(3, 2, 8, m0.dtype_handles["MPI_INT8_T"])
         self.op = m0.op_create("logsumexp", commutative=False)
         self.cluster.mana(3).isend(0, tag=21, payload={"src": src})
+        # collective-using workload: a completed world allreduce (native or
+        # derived per flavor) plus a scatter left IN FLIGHT — root entered,
+        # peers not yet — whose fan-out the quiesce must drain into the
+        # image (scatter is root->each-member under every flavor, so the
+        # drained pattern completes under any restart flavor of the matrix)
+        self.allred = _coll(self.cluster,
+                            lambda m: m.allreduce(m.comm_world(), m.rank + 1,
+                                                  m.op_handles["MPI_SUM"]))
+        assert self.allred == [10] * WORLD
+        m2 = self.cluster.mana(2)
+        m2.scatter(m2.comm_world(),
+                   [{"src": src, "chunk": q} for q in range(WORLD)], root=2)
         self.cluster.checkpoint(5, self.arrays, None).wait()
         self.ck = self.cluster.writer.latest()
 
@@ -97,6 +128,20 @@ def test_backend_pair_restart(src_ckpts, src, dst):
     assert f0.recv(3, 21) == {"src": src}
     # nothing left, buffered or on the fabric (iprobe: non-blocking)
     assert f0.iprobe(3, 21) is None
+    # -- the in-flight scatter completes from the drained image ------------
+    for r in (0, 1, 3):
+        m = fresh.mana(r)
+        assert m.scatter(m.comm_world(), None, root=2) \
+            == {"src": src, "chunk": r}, f"{src}->{dst}: scatter replay"
+    # -- fresh collectives run under the NEW flavor over restored handles --
+    got = _coll(fresh, lambda m: m.allreduce(m.comm_world(), m.rank * 2,
+                                             m.op_handles["MPI_SUM"]))
+    assert got == [12] * WORLD
+    # ... including on a restored SPLIT communicator ({0, 2})
+    sub_sum = _coll(fresh, lambda m: m.allreduce(sc.subs[0], m.rank + 1,
+                                                 m.op_handles["MPI_SUM"]),
+                    ranks=[0, 2])
+    assert sub_sum == [4, 4]
     # -- drain-log replay stats rode the checkpoint image ------------------
     rs = load_rank_state(sc.ck, 0)
     assert rs["drain"]["messages_buffered"] >= 1 \

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""API-coverage gate: the call-spec registry and the backend flavors may
+never drift (CI docs job; exits non-zero listing every violation).
+
+Checks, in both directions:
+
+  1. every :class:`~repro.core.callspec.CallSpec` is installed as a
+     GENERATED method on ``Mana`` (carries ``__callspec__``) — no spec
+     silently shadowed by a hand-written wrapper;
+  2. every lower-half entry point a spec declares in ``uses`` exists and is
+     callable on EVERY backend flavor (a spec whose native path only some
+     flavor implements must be capability-gated with a derived fallback);
+  3. every capability-gated spec HAS a derived fallback, and at least one
+     flavor advertises the capability (dead gates rot);
+  4. every public method of the ``Backend`` contract is either referenced
+     by some spec's ``uses`` or on the explicit non-call allowlist
+     (lifecycle / constants-discipline / restore-side surface) — a new
+     backend method without a spec fails here, as does a stale allowlist
+     entry.
+
+  PYTHONPATH=src python tools/check_api_coverage.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.backends import BACKENDS, Backend  # noqa: E402
+from repro.core.backends.fabric import Fabric  # noqa: E402
+from repro.core.callspec import REGISTRY, Policy  # noqa: E402
+from repro.core.interpose import Mana  # noqa: E402
+
+#: Backend surface that is NOT an MPI call the interpose layer wraps:
+#: lifecycle, the §4.3 constants discipline, and restore-side decode.
+NON_CALL_SURFACE = {
+    "init_constants": "constants discipline (§4.3): per-flavor resolution",
+    "world_comm": "constant accessor (lazy-bound by the vid table)",
+    "predefined_dtype": "constant accessor (lazy-bound by the vid table)",
+    "predefined_op": "constant accessor (lazy-bound by the vid table)",
+    "capabilities": "capability advertisement (gates native collectives)",
+    "alias_dtype": "restore-side envelope re-encode hook",
+    "type_get_contents": "restore-side decode (§5 category 2)",
+    "shutdown": "lifecycle teardown",
+}
+
+
+def backend_instances() -> dict:
+    return {name: cls(Fabric(1), 0, 1) for name, cls in BACKENDS.items()}
+
+
+def public_backend_methods() -> set:
+    return {n for n in dir(Backend)
+            if not n.startswith("_") and callable(getattr(Backend, n))}
+
+
+def check() -> list:
+    problems: list[str] = []
+    flavors = backend_instances()
+
+    used: set[str] = set()
+    for spec in REGISTRY:
+        used.update(spec.uses)
+        # 1. generated method present on Mana
+        fn = getattr(Mana, spec.name, None)
+        if fn is None or getattr(fn, "__callspec__", None) is not spec:
+            problems.append(f"{spec.name}: no generated Mana wrapper "
+                            f"(hand-written shadow or missing install)")
+        # 2. declared lower-half surface exists on every flavor
+        for use in spec.uses:
+            for name, b in flavors.items():
+                if not callable(getattr(b, use, None)):
+                    problems.append(f"{spec.name}: uses {use!r} which "
+                                    f"backend {name!r} does not provide")
+        # 3. capability gating is coherent
+        if spec.capability is not None:
+            if spec.fallback is None:
+                problems.append(f"{spec.name}: capability-gated on "
+                                f"{spec.capability!r} but has no derived "
+                                f"fallback")
+            if not any(spec.capability in b.capabilities()
+                       for b in flavors.values()):
+                problems.append(f"{spec.name}: no flavor advertises "
+                                f"capability {spec.capability!r}")
+        if spec.policy is Policy.CREATES and spec.result != "handle":
+            problems.append(f"{spec.name}: object-creating spec must "
+                            f"return a handle")
+
+    # 4. backend surface <-> registry, both directions
+    surface = public_backend_methods()
+    for method in sorted(surface - used - set(NON_CALL_SURFACE)):
+        problems.append(f"backend method {method!r} is in the public "
+                        f"contract but no CallSpec declares it in `uses` "
+                        f"(add a spec or allowlist it)")
+    for method in sorted(set(NON_CALL_SURFACE) - surface):
+        problems.append(f"allowlist entry {method!r} is stale: no such "
+                        f"public Backend method")
+    for method in sorted(used - surface):
+        problems.append(f"`uses` entry {method!r} is not part of the "
+                        f"Backend base contract")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(f"API DRIFT: {p}")
+    n_specs, n_flavors = len(REGISTRY), len(BACKENDS)
+    print(f"checked {n_specs} call specs against {n_flavors} backend "
+          f"flavors: {'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
