@@ -1,17 +1,32 @@
-"""Recovery-path benchmark: MTTR breakdown for supervised auto-recovery.
+"""Recovery-path benchmark: MTTR breakdown for supervised auto-recovery,
+per checkpoint tier.
 
 The chaos matrix asserts every failure class RECOVERS; this bench measures
 how fast — per-incident ``{detect, classify, restore, resume}_ms`` as
-reported by the supervisor, across representative failure classes.  The
-restore leg rides the elastic restart engine, so this is also the restart
-benchmark under realistic (failure-driven, world-shrinking) conditions
-rather than the clean A/B in ``bench_restart``.
+reported by the supervisor, across representative failure classes and
+across the two checkpoint tiers the escalation ladder can serve from:
+
+  * **disk** — newest committed image, deep digest verification, pread
+    container reads (the only tier the seed supervisor had);
+  * **ram**  — the peer-replicated in-RAM tier (``ckpt_tiers.ReplicaTier``):
+    one flat checksum per container and zero disk I/O on restore.
+
+The restore leg rides the elastic restart engine, so this is also the
+restart benchmark under realistic (failure-driven, world-shrinking)
+conditions rather than the clean A/B in ``bench_restart``.
+
+``smoke()`` (wired into ``benchmarks/run.py --smoke``) measures a world-8
+rank-kill against both tiers and HARD-GATES ``median(ram MTTR) <
+median(disk MTTR)`` — the RAM tier's entire reason to exist — writing the
+comparison to ``BENCH_recovery.json`` for cross-PR drift tracking.
 
 Rows (full bench mode, ``benchmarks/run.py``):
     recovery_<kind>,<total_us>,detect=..;classify=..;restore=..;resume=..
+    recovery_tier_<tier>,<median_total_us>,restore_ms=..;trials=..
 """
 from __future__ import annotations
 
+import statistics
 import tempfile
 from dataclasses import replace
 from pathlib import Path
@@ -20,16 +35,29 @@ STEPS = 9
 CKPT_EVERY = 3
 KINDS = ("kill_rank", "snapshot_error", "drop_token")
 
+#: the tier comparison: a plain rank kill at world 8 — big enough that the
+#: per-rank container walk dominates restore, so the tier split is visible
+TIER_WORLD = 8
+TIER_STEPS = 6
+TIER_TRIALS = 3
 
-def _trainer(ckpt_dir):
+
+def _trainer(ckpt_dir, *, world=2, big=False, steps=STEPS):
     from repro.configs import CkptIOConfig, smoke_config
     from repro.launch.train import Trainer
-    cfg = replace(smoke_config("granite-3-2b"), n_layers=1, d_model=32,
-                  n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
-                  vocab_size=128, vocab_pad_multiple=64)
-    io = CkptIOConfig(codec="zlib", incremental=True, drain_timeout=1.0)
-    return Trainer(cfg, batch_size=4, seq_len=16, world_size=2,
-                   ckpt_dir=ckpt_dir, total_steps=STEPS, ckpt_io=io)
+    if big:
+        cfg = replace(smoke_config("granite-3-2b"), n_layers=2, d_model=256,
+                      n_heads=4, n_kv_heads=2, head_dim=64, d_ff=512,
+                      vocab_size=512, vocab_pad_multiple=64)
+        io = CkptIOConfig(codec="zlib", incremental=False,
+                          drain_timeout=2.0)
+    else:
+        cfg = replace(smoke_config("granite-3-2b"), n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab_size=128, vocab_pad_multiple=64)
+        io = CkptIOConfig(codec="zlib", incremental=True, drain_timeout=1.0)
+    return Trainer(cfg, batch_size=4, seq_len=16, world_size=world,
+                   ckpt_dir=ckpt_dir, total_steps=steps, ckpt_io=io)
 
 
 def measure(kind: str) -> dict:
@@ -60,6 +88,83 @@ def measure(kind: str) -> dict:
         tr.cluster.writer.close()
 
 
+def measure_tier(tier_name: str) -> dict:
+    """One world-8 supervised rank-kill recovered from ``tier_name``
+    ("ram" or "disk"); asserts the incident was actually SERVED by that
+    tier, so the numbers can't silently compare disk against disk."""
+    from repro.core.ckpt_tiers import ReplicaTier
+    from repro.core.faults import FaultInjector, FaultPlan, FaultSpec, \
+        disarm_all
+    from repro.core.supervisor import Supervisor, SupervisorConfig
+    disarm_all()
+    base = Path(tempfile.mkdtemp(prefix=f"bench_recovery_{tier_name}_"))
+    tr = _trainer(base / "ck", world=TIER_WORLD, big=True, steps=TIER_STEPS)
+    tr.init_state()
+    try:
+        plan = FaultPlan([FaultSpec("kill_rank", at_step=5)])
+        with FaultInjector(plan) as injector:
+            # backoff off: MTTR here is detect+classify+restore+resume,
+            # not retry spacing
+            sup = Supervisor(tr, injector=injector, lease_s=1.0,
+                             verbose=False,
+                             tier=ReplicaTier() if tier_name == "ram"
+                             else None,
+                             config=SupervisorConfig(backoff_floor_s=0.0))
+            incidents = sup.run(TIER_STEPS, ckpt_every=CKPT_EVERY)
+        assert incidents, f"{tier_name}: no incident recorded"
+        inc = incidents[0]
+        want = "ram" if tier_name == "ram" else "disk"
+        assert inc.tier == want, \
+            f"{tier_name} trial served by {inc.tier!r}, ladder {inc.ladder}"
+        assert tr.step == TIER_STEPS, f"{tier_name}: stalled at {tr.step}"
+        return dict(inc.timings)
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def tier_results(trials: int = TIER_TRIALS) -> dict:
+    """Median MTTR per tier over ``trials`` supervised recoveries each."""
+    out = {}
+    for tier_name in ("disk", "ram"):
+        ts = [measure_tier(tier_name) for _ in range(trials)]
+        out[tier_name] = {
+            "mttr_ms": round(statistics.median(t["total_ms"] for t in ts), 3),
+            "restore_ms": round(statistics.median(t["restore_ms"]
+                                                  for t in ts), 3),
+            "trials": trials,
+        }
+    return out
+
+
+def smoke(out_path: str) -> bool:
+    """The CI recovery gate: world-8 MTTR per tier -> ``out_path``;
+    returns False when the RAM tier fails to beat disk."""
+    import json
+    res = tier_results()
+    ram, disk = res["ram"], res["disk"]
+    speedup = disk["mttr_ms"] / max(ram["mttr_ms"], 1e-9)
+    payload = {"bench": "recovery_smoke",
+               "results": {"world": TIER_WORLD, "kind": "kill_rank",
+                           "mttr_disk_ms": disk["mttr_ms"],
+                           "mttr_ram_ms": ram["mttr_ms"],
+                           "restore_disk_ms": disk["restore_ms"],
+                           "restore_ram_ms": ram["restore_ms"],
+                           "ram_speedup": round(speedup, 3),
+                           "trials": TIER_TRIALS}}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"recovery_smoke: world={TIER_WORLD} "
+          f"mttr_disk={disk['mttr_ms']:.1f}ms mttr_ram={ram['mttr_ms']:.1f}ms "
+          f"({speedup:.2f}x) restore {disk['restore_ms']:.1f}->"
+          f"{ram['restore_ms']:.1f}ms", flush=True)
+    ok = ram["mttr_ms"] < disk["mttr_ms"]
+    if not ok:
+        print(f"GATE FAILED: RAM-tier MTTR {ram['mttr_ms']:.1f}ms did not "
+              f"beat disk {disk['mttr_ms']:.1f}ms", flush=True)
+    return ok
+
+
 def rows():
     for kind in KINDS:
         r = measure(kind)
@@ -68,3 +173,7 @@ def rows():
                f"detect_ms={r['detect_ms']:.1f};"
                f"restore_ms={r['restore_ms']:.1f};"
                f"resume_ms={r['resume_ms']:.1f}")
+    for tier_name, r in tier_results().items():
+        yield (f"recovery_tier_{tier_name}", r["mttr_ms"] * 1e3,
+               f"world={TIER_WORLD};restore_ms={r['restore_ms']:.1f};"
+               f"trials={r['trials']}")

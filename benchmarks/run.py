@@ -18,14 +18,16 @@ import sys
 import traceback
 
 
-def smoke(out_path: str) -> None:
+def smoke(out_path: str, recovery_out: str) -> None:
     """Tiny ckpt perf gates: seed-like serial writer vs parallel + zlib +
-    incremental engine (write path), and buffered vs pipelined snapshot
-    (stop-the-world path); writes the comparison to ``out_path``.
+    incremental engine (write path), buffered vs pipelined snapshot
+    (stop-the-world path), and the per-tier recovery MTTR gate (RAM tier
+    must beat disk); writes the comparisons to ``out_path`` /
+    ``recovery_out``.
 
     Exits non-zero on ANY gate failure so CI actually enforces the perf
     trajectory instead of just recording it."""
-    from benchmarks import bench_ckpt, bench_overhead
+    from benchmarks import bench_ckpt, bench_overhead, bench_recovery
     results = bench_ckpt.smoke()
     # collective wrapper rows (allreduce/bcast, fast vs slow translation,
     # native vs derived flavor): tracked, not hard-gated — collective
@@ -68,7 +70,10 @@ def smoke(out_path: str) -> None:
             print(f"GATE FAILED: pipelined shard digests diverge "
                   f"({r['arch']})", flush=True)
             ok = False
-    print(f"wrote {out_path}")
+    # multi-tier recovery gate: the peer-replicated RAM tier must restore
+    # faster than the newest committed disk image at world 8
+    ok &= bench_recovery.smoke(recovery_out)
+    print(f"wrote {out_path} and {recovery_out}")
     if not ok:
         sys.exit(1)
 
@@ -121,8 +126,10 @@ if __name__ == "__main__":
                     help="run only the ckpt_io before/after on tiny configs")
     ap.add_argument("--out", default="BENCH_ckpt.json",
                     help="smoke-mode output path")
+    ap.add_argument("--recovery-out", default="BENCH_recovery.json",
+                    help="smoke-mode per-tier recovery MTTR output path")
     args = ap.parse_args()
     if args.smoke:
-        smoke(args.out)
+        smoke(args.out, args.recovery_out)
     else:
         main()

@@ -69,6 +69,7 @@ TAG_BASES = {
     "allgather": 70600,
     "reduce_scatter": 70700,
     "scan": 70800,
+    "replica": 70900,   # RAM-tier checkpoint shard push (ckpt_tiers.py)
 }
 COLL_TAG_MIN = min(TAG_BASES.values()) << 32
 #: native multi-phase algorithms offset their second phase by this much

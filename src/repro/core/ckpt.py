@@ -159,6 +159,12 @@ class CheckpointWriter:
         # a failed write can never poison delta decisions.
         self._digest_table: dict[str, dict] = {}
         self._since_full = 0
+        #: optional hook ``cb(committed_step_dir)`` invoked right after an
+        #: image commits (rename + GC done) — the RAM replica tier latches
+        #: onto this to learn which dirs to push.  Runs on the finalize
+        #: thread; exceptions are swallowed (tier bookkeeping must never
+        #: fail a committed checkpoint).
+        self.on_commit = None
 
     def _get_pool(self) -> ckpt_io.IOPool:
         if self._pool is None:
@@ -446,6 +452,12 @@ class CheckpointWriter:
             write_s=round(persist_s, 4),
             per_rank_write_s=per_rank_s)
         self._gc()
+        cb = self.on_commit
+        if cb is not None:
+            try:
+                cb(fdir)
+            except Exception:  # noqa: BLE001
+                pass
 
     # -- directory scanning / GC -------------------------------------------
     def _completed_steps(self) -> list[Path]:

@@ -491,6 +491,41 @@ class RankShardReader:
         self.close()
 
 
+class MemoryShardReader:
+    """:class:`RankShardReader`-compatible reader over an IN-MEMORY shard
+    container (parsed ``index.json`` dict + raw ``shards.bin`` bytes) — the
+    read side of the peer-replicated RAM checkpoint tier.
+
+    The restore engine is oblivious to where a container lives: anything
+    with ``index`` / ``entry`` / ``read`` / ``close`` duck-types as a rank
+    reader, so the RAM tier plugs the SAME bytes a partner rank holds in
+    memory straight into the parallel restore path with zero disk I/O.
+    ``close()`` is a no-op — the tier owns the bytes' lifetime."""
+
+    def __init__(self, index: dict, data, codec: Codec | None = None):
+        self.index = index
+        self.codec = codec or get_codec(index["codec"])
+        self._data = memoryview(data)
+
+    def entry(self, key: str) -> dict:
+        return self.index["entries"][key]
+
+    def read(self, key: str) -> np.ndarray:
+        """Decode one entry (may return a read-only view — see
+        :func:`read_entry`)."""
+        return _decode_entry(lambda off, n: self._data[off:off + n],
+                             self.entry(key), self.codec)
+
+    def close(self):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
 def read_rank_entries(rank_dir, keys, codec: Codec | None = None) -> dict:
     """Read a subset of entries from one rank dir; opens and closes the bin
     file exactly once. ``codec=None`` -> the codec recorded in the index.

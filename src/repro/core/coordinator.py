@@ -237,13 +237,17 @@ class Cluster:
         return req
 
     # -- restart ------------------------------------------------------------
-    def restart(self, ckpt_dir, *, new_world_size: Optional[int] = None,
+    def restart(self, ckpt, *, new_world_size: Optional[int] = None,
                 new_backend: Optional[str] = None, shardings=None,
                 parallel: bool = True) -> "Cluster":
         """Build a NEW cluster (new lower halves) from a checkpoint. Elastic:
         the new world size and backend flavor may differ (paper §9), with
         per-pair capability translation resolving how each MPI object is
         rebuilt (``repro.core.restore``).
+
+        ``ckpt`` is a committed step dir or any checkpoint source
+        (``restore.as_source``) — the restart engine is storage-oblivious,
+        so the RAM tier's ``TierImage`` restores through the same path.
 
         ``shardings`` (a pytree matching the checkpointed arrays, leaves
         being the NEW shardings or ``None``) additionally restores the array
@@ -259,7 +263,8 @@ class Cluster:
         from repro.core import ckpt_io as ckpt_io_mod
         from repro.core import restore
         t0 = time.perf_counter()
-        manifest = restore.load_manifest(ckpt_dir)
+        source = restore.as_source(ckpt)
+        manifest = source.manifest()
         old_ws = manifest["world_size"]
         ws = new_world_size or old_ws
         backend = new_backend or self.backend_name
@@ -290,21 +295,16 @@ class Cluster:
             arrays_job = None
             if want_arrays:
                 arrays_job = restore.ArrayRestoreJob(
-                    ckpt_dir, manifest, shardings, io_pool)
+                    source, manifest, shardings, io_pool)
             # re-bind each new rank from an old rank image (elastic: wrap
-            # around) — one dependency-ordered DAG per rank.  Image text is
-            # read once per distinct SOURCE rank; each new rank gets a
-            # fresh parse (descriptor meta must never be shared between
-            # ranks — rebind mutates it in place)
+            # around) — one dependency-ordered DAG per rank.  The source
+            # caches image text; each new rank gets a fresh parse
+            # (descriptor meta must never be shared between ranks — rebind
+            # mutates it in place)
             t2 = time.perf_counter()
-            texts: dict[int, str] = {}
             pairs = []
             for r in range(ws):
-                src = r % old_ws
-                if src not in texts:
-                    texts[src] = (Path(ckpt_dir) / f"rank{src:05d}"
-                                  / "state.json").read_text()
-                snap = json.loads(texts[src])["mana"]
+                snap = source.rank_state(r % old_ws)["mana"]
                 m = Mana(backend, fresh.fabric, r, ws,
                          translation=snap["translation"])
                 pairs.append((m, snap))
@@ -319,7 +319,7 @@ class Cluster:
                 fresh.restored_arrays = arrays_job.result()
             elif shardings is not None:
                 fresh.restored_arrays = restore.load_arrays(
-                    ckpt_dir, shardings, parallel=False)
+                    source, shardings, parallel=False)
             timings["arrays_ms"] = round(
                 (time.perf_counter() - t3) * 1e3, 3)
         finally:

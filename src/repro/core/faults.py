@@ -42,6 +42,21 @@ scheduled step and simulates one production failure class:
                   ``comm_free``), detected by the supervisor's active probe
   snapshot_error  the ``ckpt.snapshot_batch`` failpoint raises mid-batch,
                   failing a checkpoint inside its blocking window
+  partner_death   the victim AND its ring replica partner die together
+                  before any pull: both RAM copies of the victim's newest
+                  container are gone, so the supervisor's ladder must
+                  escalate past the RAM tier to disk
+  corrupt_replica byte-flips BOTH in-memory copies of the victim's newest
+                  container (the push-time checksum is left alone), so the
+                  RAM tier's verification must reject the image
+  double_fault    kills the victim AND arms the supervisor's
+                  ``supervisor.pre_restore`` failpoint: a second rank dies
+                  while the restore is in flight — the incident must
+                  absorb it, never drop it
+  restore_error   kills the victim AND arms the ``restore.rebind_world``
+                  failpoint one-shot: the first restore attempt dies
+                  mid-rebind, exercising the ladder's bounded per-rung
+                  retry
   ==============  ========================================================
 
 Nothing here imports the checkpoint/restore stack — injection sites call in,
@@ -56,7 +71,8 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 FAULT_KINDS = ("kill_rank", "stall_drain", "corrupt_shard", "truncate_shard",
-               "drop_token", "snapshot_error")
+               "drop_token", "snapshot_error", "partner_death",
+               "corrupt_replica", "double_fault", "restore_error")
 
 #: fault -> the checkpoint-cycle phase where it lands (the chaos matrix
 #: sweeps (kind, phase, backend family); kill/drop can also fire at the
@@ -64,7 +80,9 @@ FAULT_KINDS = ("kill_rank", "stall_drain", "corrupt_shard", "truncate_shard",
 #: the lease detector)
 DEFAULT_PHASE = {"kill_rank": "compute", "stall_drain": "drain",
                  "corrupt_shard": "commit", "truncate_shard": "commit",
-                 "drop_token": "compute", "snapshot_error": "snapshot"}
+                 "drop_token": "compute", "snapshot_error": "snapshot",
+                 "partner_death": "compute", "corrupt_replica": "compute",
+                 "double_fault": "compute", "restore_error": "compute"}
 
 
 class InjectedFault(RuntimeError):
@@ -234,6 +252,7 @@ class FaultInjector:
         self.plan = plan
         self.fired: list = []
         self._armed: list = []      # (site, handler) pairs to disarm
+        self.tier = None            # supervisor-wired ReplicaTier, if any
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -400,6 +419,112 @@ class FaultInjector:
             raise InjectedFault(
                 f"injected snapshot fault at batch {ctx.get('batch')} "
                 f"(rank {ctx.get('rank')})")
+
+        arm(site, handler)
+        self._armed.append((site, handler))
+
+    # -- RAM-tier faults ----------------------------------------------------
+    def _tier(self):
+        """The supervisor wires its ReplicaTier onto the injector
+        (``injector.tier``); RAM-tier faults are meaningless without one."""
+        tier = getattr(self, "tier", None)
+        if tier is None:
+            raise RuntimeError("RAM-tier fault needs a supervisor replica "
+                               "tier (Supervisor(tier=ReplicaTier()))")
+        return tier
+
+    def _fire_partner_death(self, spec, step, cluster):
+        """The victim and its ring replica partner die TOGETHER before any
+        pull — the correlated-failure case partner replication cannot
+        cover: both RAM copies of the victim's newest container are lost,
+        and recovery must escalate past the RAM tier to disk.  Needs world
+        >= 3 for any rank to survive."""
+        from repro.core.ckpt_tiers import ring_partner
+        victim = spec.rank = self._victim(spec, cluster)
+        partner = ring_partner(victim, cluster.survivors())
+        cluster.halt_rank(victim)
+        if partner is not None:
+            cluster.halt_rank(partner)
+
+    def _fire_corrupt_replica(self, spec, step, cluster):
+        """Byte-flip EVERY in-memory copy of the victim's newest container,
+        leaving the push-time checksum alone, so the RAM tier's
+        verification pass must reject the image (TierVerifyError -> ladder
+        escalates to disk).  Waits for the in-flight commit and drains the
+        replication queue first, so there is deterministically a fresh
+        replicated step to poison.  Pair with a later ``kill_rank`` of the
+        same rank to force a recovery through the poisoned tier."""
+        tier = self._tier()
+        if cluster.writer is not None:
+            cluster.writer.wait_idle()
+        tier.drain_commits(cluster)
+        step_n = tier.newest_step
+        if step_n is None:
+            raise RuntimeError("no replicated step in the RAM tier "
+                               "to corrupt")
+        if spec.rank is None:
+            # the poison must hit a container that actually holds bytes
+            # (meshless runs put every shard in rank 0's container)
+            cands = sorted({r for st in tier.stores.values()
+                            for (s, r), c in st.items()
+                            if s == step_n and len(c.data)})
+            if not cands:
+                raise RuntimeError(f"no non-empty RAM container at step "
+                                   f"{step_n} to corrupt")
+            spec.rank = cands[0]
+        victim = spec.rank
+        flipped = 0
+        for store in tier.stores.values():
+            c = store.get((step_n, victim))
+            if c is not None and len(c.data):
+                buf = bytearray(c.data)
+                mid = len(buf) // 2
+                for i in range(mid, min(mid + 64, len(buf))):
+                    buf[i] ^= 0xFF
+                c.data = bytes(buf)
+                flipped += 1
+        if not flipped:
+            raise RuntimeError(f"rank {victim} holds no bytes in the RAM "
+                               f"tier at step {step_n}")
+
+    def _fire_double_fault(self, spec, step, cluster):
+        """Kill the victim, then arm a one-shot handler on the supervisor's
+        ``supervisor.pre_restore`` failpoint: while the FIRST recovery's
+        restore is in flight, a second rank (the highest survivor) dies too
+        — classic cascading failure.  The supervisor must absorb the new
+        death into the same incident (re-fence, recount, restart the
+        ladder), never drop it."""
+        victim = spec.rank = self._victim(spec, cluster)
+        cluster.halt_rank(victim)
+        site = "supervisor.pre_restore"
+
+        def handler(name, ctx):
+            disarm(site, handler)
+            cl = ctx.get("cluster", cluster)
+            alive = cl.survivors()
+            if not alive:
+                return
+            second = alive[-1]
+            cl.halt_rank(second)
+            raise RankDeadError(second, f"rank {second}: died mid-recovery "
+                                        f"(injected double fault)")
+
+        arm(site, handler)
+        self._armed.append((site, handler))
+
+    def _fire_restore_error(self, spec, step, cluster):
+        """Kill the victim and arm a one-shot fault INSIDE the restore path
+        (the ``restore.rebind_world`` failpoint): the first restore attempt
+        dies mid-rebind, and the ladder's bounded per-rung retry must land
+        the second attempt from the SAME tier."""
+        victim = spec.rank = self._victim(spec, cluster)
+        cluster.halt_rank(victim)
+        site = "restore.rebind_world"
+
+        def handler(name, ctx):
+            disarm(site, handler)
+            raise InjectedFault(f"injected restore fault mid-rebind "
+                                f"({ctx.get('ranks')} rank(s))")
 
         arm(site, handler)
         self._armed.append((site, handler))

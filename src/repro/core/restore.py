@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import ckpt_io
 from repro.core.backends import BACKENDS, backend_family
+from repro.core.faults import failpoint
 from repro.core.descriptors import Kind, Strategy
 from repro.core.vid import VidTable
 
@@ -388,6 +389,7 @@ def rebind_world(pairs, *, pool=None) -> list:
     """Rebind MANY ranks' snapshots concurrently over one pool (the restart
     path: every rank's DAG plus the leaf-restore reads share the workers).
     ``pairs`` is [(mana, snap), ...]; returns per-rank stats in order."""
+    failpoint("restore.rebind_world", ranks=len(pairs))
     plans = [_plan_rebind(m, s) for m, s in pairs]
     _execute_rebind(plans, pool)
     for rp in plans:
@@ -476,8 +478,8 @@ class ArrayRestoreJob:
     descriptor rebinding scheduled on the same pool; ``result()`` waits for
     the reads and performs the elastic reshape placement."""
 
-    def __init__(self, ckpt_dir, manifest: dict, shardings, pool):
-        self.ckpt_dir = Path(ckpt_dir)
+    def __init__(self, source, manifest: dict, shardings, pool):
+        self.source = as_source(source)
         self.manifest = manifest
         self._meta = manifest["leaves"]
         flat_sh, self._treedef = jax.tree.flatten(
@@ -490,22 +492,20 @@ class ArrayRestoreJob:
         # the leaf (zero staging copy); only partially-sharded leaves get a
         # preallocated destination buffer
         self._leaves: list = [None] * len(self._meta)
-        self._readers: dict[tuple, ckpt_io.RankShardReader] = {}
+        self._readers: dict[tuple, object] = {}
         self._rlock = threading.Lock()
         self._alloc_lock = threading.Lock()
-        root = self.ckpt_dir.parent
         self._futures = [
-            pool.submit(self._read_entry, root, step, rank, li, sh)
+            pool.submit(self._read_entry, step, rank, li, sh)
             for (step, rank), shards in plan_leaf_reads(manifest).items()
             for li, sh in shards]
 
-    def _reader(self, root, step, rank) -> ckpt_io.RankShardReader:
+    def _reader(self, step, rank):
         key = (step, rank)
         with self._rlock:
             r = self._readers.get(key)
             if r is None:
-                rdir = root / f"step_{step:08d}" / f"rank{rank:05d}"
-                r = self._readers[key] = ckpt_io.RankShardReader(rdir)
+                r = self._readers[key] = self.source.reader(step, rank)
             return r
 
     def _dest(self, li: int) -> np.ndarray:
@@ -520,8 +520,8 @@ class ArrayRestoreJob:
                         dtype=ckpt_io.resolve_dtype(meta["dtype"]))
         return arr
 
-    def _read_entry(self, root, step, rank, li, sh) -> None:
-        r = self._reader(root, step, rank)
+    def _read_entry(self, step, rank, li, sh) -> None:
+        r = self._reader(step, rank)
         if _full_cover(sh, self._meta[li]["shape"]):
             # a full-cover shard is by construction the leaf's ONLY shard
             self._leaves[li] = r.read(sh["key"])
@@ -572,17 +572,15 @@ def place_leaf(arr: np.ndarray, sharding):
         return jax.device_put(arr, sharding)
 
 
-def _load_leaves_v2_seq(ckpt_dir: Path, manifest: dict) -> list:
+def _load_leaves_v2_seq(source, manifest: dict) -> list:
     """Sequential v2 loader: same format, same group plan, same zero-copy
     full-cover path, ZERO threads — the measured baseline for the
     parallel-restore gate in benchmarks/bench_restart.py (and the fallback
     when a caller cannot afford a pool)."""
     leaves_meta = manifest["leaves"]
     leaves: list = [None] * len(leaves_meta)
-    root = Path(ckpt_dir).parent
     for (step, rank), shards in plan_leaf_reads(manifest).items():
-        rdir = root / f"step_{step:08d}" / f"rank{rank:05d}"
-        with ckpt_io.RankShardReader(rdir) as r:
+        with source.reader(step, rank) as r:
             for li, sh in shards:
                 meta = leaves_meta[li]
                 if _full_cover(sh, meta["shape"]):
@@ -597,18 +595,20 @@ def _load_leaves_v2_seq(ckpt_dir: Path, manifest: dict) -> list:
     return leaves
 
 
-def load_arrays(ckpt_dir, shardings, *, io_workers=None, parallel=True,
+def load_arrays(ckpt, shardings, *, io_workers=None, parallel=True,
                 pool=None):
-    """Reassemble every leaf from per-rank shard files and place it with the
-    NEW shardings (tree matching the manifest leaf order) — the new mesh /
-    device count may differ from checkpoint time (elastic reshape).
+    """Reassemble every leaf from per-rank shard containers and place it
+    with the NEW shardings (tree matching the manifest leaf order) — the new
+    mesh / device count may differ from checkpoint time (elastic reshape).
 
-    ``parallel=True`` fans shard-group reads out over ``pool`` (or a
-    transient pool of ``io_workers``); ``parallel=False`` is the sequential
-    baseline.  Handles both the v2 chunked/compressed/incremental format
-    and legacy v1 npz images."""
-    ckpt_dir = Path(ckpt_dir)
-    manifest = load_manifest(ckpt_dir)
+    ``ckpt`` is a committed step directory OR any checkpoint source (see
+    :func:`as_source` — e.g. a RAM-tier ``TierImage``).  ``parallel=True``
+    fans shard-group reads out over ``pool`` (or a transient pool of
+    ``io_workers``); ``parallel=False`` is the sequential baseline.  Handles
+    both the v2 chunked/compressed/incremental format and legacy v1 npz
+    images (v1 requires a directory source)."""
+    src = as_source(ckpt)
+    manifest = src.manifest()
     if manifest.get("format", 1) >= 2:
         if parallel:
             own = pool is None
@@ -617,14 +617,18 @@ def load_arrays(ckpt_dir, shardings, *, io_workers=None, parallel=True,
                     io_workers
                     or ckpt_io.default_workers(manifest["world_size"]))
             try:
-                return ArrayRestoreJob(ckpt_dir, manifest, shardings,
+                return ArrayRestoreJob(src, manifest, shardings,
                                        pool).result()
             finally:
                 if own:
                     pool.close()
-        leaves = _load_leaves_v2_seq(ckpt_dir, manifest)
+        leaves = _load_leaves_v2_seq(src, manifest)
     else:
-        leaves = _load_leaves_v1(ckpt_dir, manifest["leaves"])
+        step_dir = getattr(src, "path", None)
+        if step_dir is None:
+            raise ValueError("legacy format-1 images need a directory "
+                             "checkpoint source")
+        leaves = _load_leaves_v1(Path(step_dir), manifest["leaves"])
     flat_sh, treedef = jax.tree.flatten(shardings, is_leaf=lambda x: x is None)
     if len(flat_sh) != len(leaves):
         raise ValueError(f"checkpoint has {len(leaves)} leaves, "
@@ -644,6 +648,57 @@ def load_manifest(ckpt_dir) -> dict:
 def load_rank_state(ckpt_dir, rank: int) -> dict:
     p = Path(ckpt_dir) / f"rank{rank:05d}" / "state.json"
     return json.loads(p.read_text())
+
+
+# ---------------------------------------------------------------------------
+# checkpoint sources: where an image's bytes live (disk dir, RAM tier, ...)
+# ---------------------------------------------------------------------------
+
+class DirCheckpointSource:
+    """The canonical checkpoint source: one committed ``step_XXXXXXXX``
+    directory on disk.
+
+    A checkpoint *source* is the restore engine's storage abstraction —
+    anything exposing ``name`` / ``manifest()`` / ``rank_state(rank)`` /
+    ``reader(step, rank)`` can serve a restore: this class for the disk
+    tier, ``ckpt_tiers.TierImage`` for the peer-replicated RAM tier.
+    ``reader`` takes an explicit step because delta manifests point clean
+    shards at PRIOR steps' containers (``plan_leaf_reads``), which for a
+    directory source live under sibling step dirs of the same base."""
+
+    def __init__(self, step_dir):
+        self.path = Path(step_dir)
+        self._root = self.path.parent
+        self._state_texts: dict[int, str] = {}
+
+    @property
+    def name(self) -> str:
+        return self.path.name
+
+    def manifest(self) -> dict:
+        return load_manifest(self.path)
+
+    def rank_state(self, rank: int) -> dict:
+        # cache the TEXT, parse per call: rebinding mutates descriptor meta
+        # in place, so parsed state must never be shared between ranks
+        text = self._state_texts.get(rank)
+        if text is None:
+            p = self.path / f"rank{rank:05d}" / "state.json"
+            text = self._state_texts[rank] = p.read_text()
+        return json.loads(text)
+
+    def reader(self, step: int, rank: int) -> ckpt_io.RankShardReader:
+        return ckpt_io.RankShardReader(
+            self._root / f"step_{step:08d}" / f"rank{rank:05d}")
+
+
+def as_source(ckpt):
+    """Coerce ``ckpt`` (a step-dir path, or any object already satisfying
+    the checkpoint-source protocol) into a source."""
+    if callable(getattr(ckpt, "reader", None)) \
+            and callable(getattr(ckpt, "manifest", None)):
+        return ckpt
+    return DirCheckpointSource(ckpt)
 
 
 def completed_steps(base_dir) -> list:

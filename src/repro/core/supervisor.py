@@ -14,16 +14,34 @@ NERSC production deployment of MANA grew around the mechanism:
 
   * :class:`Supervisor` — drives a workload (``Trainer`` / ``Server``: any
     object with ``step``, ``step_once()``, ``checkpoint()``,
-    ``recover(ckpt_dir, new_world_size=)``) one step at a time.  Any failure
+    ``recover(ckpt, new_world_size=)``) one step at a time.  Any failure
     — a detector verdict, a ``DrainStallError`` escalated out of the
     checkpoint's quiesce, a ``RankDeadError`` from a lower-half call, an
-    error mid-``snapshot_batch`` — is caught, CLASSIFIED, and recovered:
-    fence the faulty rank if the failure class implies a dead node, pick the
-    newest checkpoint that digest-verifies end-to-end
-    (``restore.find_resumable(verify=True)`` — torn or corrupted images are
-    skipped, recovery lands on the previous good one), and relaunch through
-    the elastic restore path on the surviving world size.  Retries are
-    bounded; every incident records ``{detect,classify,restore,resume}_ms``.
+    error mid-``snapshot_batch`` — is caught, CLASSIFIED, and recovered
+    through a policy-driven **escalation ladder** (multi-level C/R): fence
+    the faulty rank if the failure class implies a dead node, then walk the
+    tiers newest-first —
+
+      1. ``ram``        the peer-replicated in-memory image
+                        (``ckpt_tiers.ReplicaTier``), checksum-verified,
+                        only when it is at least as new as the newest
+                        committed disk image;
+      2. ``disk``       the newest committed disk image, accepted only if
+                        its manifest parses, its delta chain resolves, and
+                        every shard digest re-verifies end-to-end;
+      3. ``disk_chain`` each older committed image in turn, same
+                        acceptance test (the ``find_resumable`` walk
+                        unrolled into explicit ladder rungs).
+
+    Each rung gets bounded retries with exponential backoff + jitter and a
+    per-level timeout; deterministic verification verdicts (a corrupt RAM
+    replica, a torn disk image) skip straight to the next rung.  A SECOND
+    rank death surfacing while a restore is in flight is ABSORBED into the
+    same incident — the new victim is fenced, the surviving world recount
+    happens again, and the ladder restarts from the top — never dropped.
+    Retries are bounded; every incident records which tier served the
+    restore, the full ladder transcript, any absorbed mid-recovery faults,
+    and ``{detect,classify,restore,resume}_ms``.
 
 Failure classes and their recovery policy:
 
@@ -43,12 +61,15 @@ Failure classes and their recovery policy:
 """
 from __future__ import annotations
 
+import random
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
+from repro.core.ckpt_tiers import TierVerifyError
 from repro.core.drain import DrainStallError
-from repro.core.faults import InjectedFault, RankDeadError
-from repro.core.restore import find_resumable
+from repro.core.faults import InjectedFault, RankDeadError, failpoint
+from repro.core.restore import (completed_steps, load_manifest,
+                                verify_checkpoint)
 
 FAILURE_CLASSES = ("rank_dead", "drain_stall", "lost_token",
                    "snapshot_error", "ckpt_corrupt", "unknown")
@@ -56,6 +77,32 @@ FAILURE_CLASSES = ("rank_dead", "drain_stall", "lost_token",
 #: failure classes whose victim rank is fenced (treated as a dead node), so
 #: recovery relaunches on the shrunken surviving world
 _FENCING = {"rank_dead", "drain_stall"}
+
+
+@dataclass(frozen=True)
+class SupervisorConfig:
+    """Recovery policy knobs (CLI-threadable: ``--backoff-floor`` /
+    ``--backoff-ceiling`` on ``train.py``/``serve.py --supervise``).
+
+    Backoff applies in two places with the same curve — between consecutive
+    recovery ATTEMPTS of the run loop, and between retries of one ladder
+    rung: ``min(ceiling, floor * 2**(n-1)) * (1 + jitter*U[0,1))``.  A
+    floor of 0 disables sleeping entirely (test/bench mode)."""
+    lease_s: float = 2.0
+    probe: bool = True
+    max_retries: int = 3
+    backoff_floor_s: float = 0.05
+    backoff_ceiling_s: float = 2.0
+    backoff_jitter: float = 0.25
+    level_retries: int = 2          # restore attempts per ladder rung
+    level_timeout_s: float = 30.0   # wall budget per rung before escalating
+    absorb_budget: int = 4          # mid-recovery faults absorbed per incident
+
+
+class TierRejected(RuntimeError):
+    """A ladder rung failed its acceptance test (unresolved delta chain,
+    digest mismatch) — deterministic verdicts that retrying cannot fix, so
+    the ladder escalates immediately instead of burning rung retries."""
 
 
 class WorldFailure(RuntimeError):
@@ -110,20 +157,28 @@ class Incident:
     rank: int | None
     step: int                    # workload step when the failure surfaced
     resumed_step: int            # step recovered to (checkpoint step)
-    ckpt: str | None             # checkpoint dir name restored from
+    ckpt: str | None             # source name restored from
+                                 # ("ram:step_..." or "step_...")
     error: str
     attempt: int
     world_before: int
     world_after: int
     timings: dict = field(default_factory=dict)   # {detect,classify,
                                                   #  restore,resume,total}_ms
+    tier: str | None = None      # ladder rung that served the restore
+                                 # ("ram" | "disk" | "disk_chain")
+    ladder: list = field(default_factory=list)    # per-rung transcript
+    absorbed: list = field(default_factory=list)  # faults folded in
+                                                  # mid-recovery
 
     def to_dict(self) -> dict:
         return {"kind": self.kind, "rank": self.rank, "step": self.step,
                 "resumed_step": self.resumed_step, "ckpt": self.ckpt,
                 "error": self.error, "attempt": self.attempt,
                 "world_before": self.world_before,
-                "world_after": self.world_after, "timings": self.timings}
+                "world_after": self.world_after, "timings": self.timings,
+                "tier": self.tier, "ladder": self.ladder,
+                "absorbed": self.absorbed}
 
 
 class LeaseDetector:
@@ -182,22 +237,63 @@ class Supervisor:
     and only consulted at the two scheduling points — before each step
     (compute/commit-phase faults) and immediately before each checkpoint
     (drain/snapshot-phase faults) — so production supervision and chaos
-    testing run the identical loop."""
+    testing run the identical loop.
 
-    def __init__(self, workload, *, injector=None, lease_s: float = 2.0,
-                 probe: bool = True, max_retries: int = 3, verbose: bool = True):
+    ``tier`` (a :class:`~repro.core.ckpt_tiers.ReplicaTier`) enables the
+    in-RAM checkpoint level: the supervisor hooks the writer's commit
+    callback, ring-pushes every committed image between the loop's steps,
+    and tries the RAM image first when recovering.  ``config`` carries the
+    full recovery policy; the legacy ``lease_s``/``probe``/``max_retries``
+    kwargs override it when given (back-compat)."""
+
+    def __init__(self, workload, *, injector=None, lease_s: float | None = None,
+                 probe: bool | None = None, max_retries: int | None = None,
+                 verbose: bool = True, tier=None,
+                 config: SupervisorConfig | None = None):
+        cfg = config or SupervisorConfig()
+        overrides = {k: v for k, v in (("lease_s", lease_s), ("probe", probe),
+                                       ("max_retries", max_retries))
+                     if v is not None}
+        if overrides:
+            cfg = replace(cfg, **overrides)
+        self.config = cfg
         self.workload = workload
         self.injector = injector
-        self.max_retries = max_retries
+        self.tier = tier
+        if injector is not None:
+            # fault kinds that sabotage the RAM tier (corrupt_replica) need
+            # a handle on it
+            injector.tier = tier
+        self.max_retries = cfg.max_retries
         self.verbose = verbose
         self.incidents: list[Incident] = []
-        self.detector = LeaseDetector(workload.cluster, lease_s=lease_s,
-                                      probe=probe)
+        self.backoff_s = 0.0          # total jittered backoff slept
+        self.detector = LeaseDetector(workload.cluster, lease_s=cfg.lease_s,
+                                      probe=cfg.probe)
         self._last_ok = time.perf_counter()
+        self._hook_writer()
 
     @property
     def cluster(self):
         return self.workload.cluster
+
+    def _hook_writer(self) -> None:
+        if self.tier is not None:
+            self.tier.attach(self.cluster)
+            if self.cluster.writer is not None:
+                self.cluster.writer.on_commit = self.tier.note_commit
+
+    def _sleep_backoff(self, n: int) -> float:
+        """Sleep the nth (1-based) exponential-backoff delay; returns the
+        jittered delay actually slept."""
+        cfg = self.config
+        if cfg.backoff_floor_s <= 0:
+            return 0.0
+        delay = min(cfg.backoff_ceiling_s,
+                    cfg.backoff_floor_s * (2 ** (n - 1)))
+        delay *= 1.0 + cfg.backoff_jitter * random.random()
+        time.sleep(delay)
+        return delay
 
     # ------------------------------------------------------------------
     def run(self, n_steps: int, *, ckpt_every: int = 0) -> list:
@@ -216,6 +312,11 @@ class Supervisor:
         self._last_ok = time.perf_counter()
         while w.step < target:
             try:
+                if self.tier is not None:
+                    # push freshly committed images to partner ranks BEFORE
+                    # this step's faults can fire — replication always runs
+                    # on the supervisor thread, between steps
+                    self.tier.drain_commits(self.cluster)
                 if self.injector is not None:
                     self.injector.on_step(w.step, self.cluster)
                 dead = self.detector.poll()
@@ -230,6 +331,17 @@ class Supervisor:
                     if self.injector is not None:
                         self.injector.on_checkpoint(w.step, self.cluster)
                     w.checkpoint()
+                    if self.tier is not None \
+                            and self.cluster.writer is not None:
+                        # level-1 sync point: replication rides the commit
+                        # (``note_commit`` on the finalize thread), so wait
+                        # for it — when this returns, the RAM tier is
+                        # exactly as new as the newest disk image and every
+                        # rank's replica is pushed.  The pipelined overlap
+                        # is traded for that determinism; a background
+                        # write failure surfaces here and is supervised
+                        # like any other checkpoint fault
+                        self.cluster.writer.wait_idle()
                     # the blocking window (drain + batched D2H) is
                     # legitimate synchronous time: a checkpoint slower than
                     # lease_s must not read as an all-rank lease expiry
@@ -251,12 +363,71 @@ class Supervisor:
                         f"giving up after {self.max_retries} recovery "
                         f"attempts (last failure: {e})",
                         self.incidents) from e
+                if attempt > 1:
+                    # consecutive incidents: back off before touching the
+                    # cluster again (deterministically recurring failures
+                    # must not hot-loop the restore path)
+                    self.backoff_s += self._sleep_backoff(attempt - 1)
                 self._recover(e, attempt)
         return self.incidents
 
     # ------------------------------------------------------------------
+    def _ladder(self) -> list:
+        """Build the escalation ladder for THIS recovery, newest-first:
+        ``[(rung_name, candidate_fn), ...]`` where ``candidate_fn`` returns
+        a checkpoint source (or ``None`` = rung unavailable) and raises when
+        its acceptance test fails.  The RAM rung only appears when its image
+        is at least as new as the newest committed disk image — a stale RAM
+        copy must never beat a newer disk commit."""
+        levels = []
+        steps = list(reversed(completed_steps(self.cluster.writer.base)))
+        newest_disk = None
+        if steps:
+            try:
+                newest_disk = int(steps[0].name[len("step_"):])
+            except ValueError:
+                pass
+        tier = self.tier
+        if tier is not None and tier.newest_step is not None \
+                and (newest_disk is None or tier.newest_step >= newest_disk):
+            levels.append(("ram", lambda: tier.image(self.cluster)))
+        for i, d in enumerate(steps):
+            levels.append(("disk" if i == 0 else "disk_chain",
+                           lambda d=d: self._verified_dir(d)))
+        return levels
+
+    def _verified_dir(self, d):
+        """``find_resumable``'s acceptance test scoped to ONE candidate:
+        manifest parses, the delta chain resolves against committed
+        siblings, and every dir in the chain digest-verifies end-to-end.
+        Raises :class:`TierRejected` (non-retryable) on any verdict."""
+        try:
+            man = load_manifest(d)
+        except Exception as e:  # noqa: BLE001
+            raise TierRejected(f"{d.name}: unreadable manifest: {e}") from e
+        have = {}
+        for p in completed_steps(self.cluster.writer.base):
+            try:
+                have[int(p.name[len("step_"):])] = p
+            except ValueError:
+                continue
+        chain = [d]
+        for b in man.get("base_steps", []):
+            if b not in have:
+                raise TierRejected(f"{d.name}: delta base step_{b:08d} "
+                                   f"missing — chain unresolved")
+            chain.append(have[b])
+        for x in chain:
+            problems = verify_checkpoint(x)
+            if problems:
+                more = f" (+{len(problems) - 1} more)" \
+                    if len(problems) > 1 else ""
+                raise TierRejected(f"{x.name}: {problems[0]}{more}")
+        return d
+
     def _recover(self, exc: BaseException, attempt: int) -> Incident:
         w = self.workload
+        cfg = self.config
         t_fail = time.perf_counter()
         detect_ms = max(0.0, (t_fail - self._last_ok) * 1e3)
         if isinstance(exc, WorldFailure):
@@ -272,11 +443,6 @@ class Supervisor:
         if kind in _FENCING and rank is not None \
                 and not self.cluster.ranks[rank].halted:
             self.cluster.halt_rank(rank)
-        new_ws = len(self.cluster.survivors()) if kind in _FENCING \
-            else world_before
-        if new_ws == 0:
-            raise RecoveryFailed("no surviving rank to recover on",
-                                 self.incidents) from exc
         if self.cluster.writer is None:
             raise RecoveryFailed("cannot recover without a ckpt_dir",
                                  self.incidents) from exc
@@ -284,9 +450,6 @@ class Supervisor:
         if self.verbose:
             print(f"!! incident: {kind} (rank={rank}) at step "
                   f"{step_at_failure}: {exc}", flush=True)
-        # pick the newest checkpoint that VERIFIES — a torn/corrupt image
-        # (the chaos harness's corrupt_shard/truncate_shard faults) is
-        # skipped here, which is the ckpt_corrupt class resolving itself
         try:
             self.cluster.writer.wait_idle()
         except Exception as drain_err:  # noqa: BLE001
@@ -298,19 +461,99 @@ class Supervisor:
                 print(f"!! abandoned in-flight checkpoint had failed: "
                       f"{drain_err}", flush=True)
         t1 = time.perf_counter()
-        ck = find_resumable(self.cluster.writer.base, verify=True)
-        if ck is None:
-            raise RecoveryFailed("no digest-valid resumable checkpoint",
-                                 self.incidents) from exc
-        w.recover(ck, new_world_size=new_ws)
+        ladder_log: list[dict] = []
+        absorbed: list[dict] = []
+        fenced = {rank} if rank is not None else set()
+        budget = cfg.absorb_budget
+        served = None                 # (rung_name, source_name)
+        while served is None:
+            # recount AFTER any fencing (including faults absorbed below):
+            # every ladder pass restores onto the CURRENT surviving world
+            new_ws = len(self.cluster.survivors()) \
+                if (kind in _FENCING or absorbed) else world_before
+            if new_ws == 0:
+                raise RecoveryFailed("no surviving rank to recover on",
+                                     self.incidents) from exc
+            refault = None
+            for level, candidate in self._ladder():
+                level_t0 = time.perf_counter()
+                for level_try in range(1, cfg.level_retries + 1):
+                    try:
+                        failpoint("supervisor.pre_restore",
+                                  cluster=self.cluster, level=level,
+                                  attempt=level_try)
+                        src = candidate()
+                        if src is None:
+                            ladder_log.append({"level": level,
+                                               "skipped": "unavailable"})
+                            break
+                        w.recover(src, new_world_size=new_ws)
+                        served = (level, getattr(src, "name", str(src)))
+                        break
+                    except (KeyboardInterrupt, SystemExit):
+                        raise
+                    except RecoveryFailed:
+                        raise
+                    except BaseException as le:  # noqa: BLE001
+                        retryable = not isinstance(
+                            le, (TierRejected, TierVerifyError))
+                        ladder_log.append({
+                            "level": level, "attempt": level_try,
+                            "error": f"{type(le).__name__}: {le}",
+                            "retryable": retryable})
+                        k2, r2 = classify_failure(le)
+                        if k2 in _FENCING and r2 is not None \
+                                and 0 <= r2 < len(self.cluster.ranks) \
+                                and r2 not in fenced:
+                            # a SECOND rank died while this restore was in
+                            # flight: absorb it into the same incident —
+                            # fence, recount, restart the ladder — never
+                            # drop it
+                            fenced.add(r2)
+                            if not self.cluster.ranks[r2].halted:
+                                self.cluster.halt_rank(r2)
+                            absorbed.append({"kind": k2, "rank": r2,
+                                             "during": level})
+                            refault = le
+                            break
+                        if not retryable:
+                            break     # deterministic verdict: next rung
+                        if time.perf_counter() - level_t0 \
+                                > cfg.level_timeout_s:
+                            ladder_log.append({"level": level,
+                                               "skipped": "level_timeout"})
+                            break
+                        if level_try < cfg.level_retries:
+                            self.backoff_s += self._sleep_backoff(level_try)
+                if served is not None or refault is not None:
+                    break
+            if served is not None:
+                break
+            if refault is not None:
+                budget -= 1
+                if budget < 0:
+                    raise RecoveryFailed(
+                        f"absorbed-fault budget exhausted mid-recovery "
+                        f"(last: {refault})", self.incidents) from refault
+                if self.verbose:
+                    print(f"!! absorbed mid-recovery fault: "
+                          f"{absorbed[-1]['kind']} "
+                          f"(rank={absorbed[-1]['rank']}) — restarting "
+                          f"ladder on the shrunken world", flush=True)
+                continue
+            raise RecoveryFailed(
+                "every tier exhausted: RAM image unavailable and no "
+                "digest-valid resumable checkpoint", self.incidents) from exc
+        tier_name, src_name = served
         recover_wall_ms = (time.perf_counter() - t1) * 1e3
         restart_ms = w.cluster.restart_timings.get("total_ms",
                                                    recover_wall_ms)
         incident = Incident(
             kind=kind, rank=rank, step=step_at_failure,
-            resumed_step=w.step, ckpt=ck.name, error=str(exc),
+            resumed_step=w.step, ckpt=src_name, error=str(exc),
             attempt=attempt, world_before=world_before,
             world_after=len(w.cluster.ranks),
+            tier=tier_name, ladder=ladder_log, absorbed=absorbed,
             timings={"detect_ms": round(detect_ms, 3),
                      "classify_ms": round(classify_ms, 3),
                      "restore_ms": round(restart_ms, 3),
@@ -319,15 +562,21 @@ class Supervisor:
                      "total_ms": round(
                          detect_ms + classify_ms + recover_wall_ms, 3)})
         self.incidents.append(incident)
-        # the workload owns a FRESH cluster now: re-aim the detector and
-        # start everyone's lease from the recovery point
+        # the workload owns a FRESH cluster now: drop every stale RAM copy
+        # (rank numbering changed), re-hook the new writer's commit
+        # callback, re-aim the detector, and start everyone's lease from
+        # the recovery point
+        if self.tier is not None:
+            self.tier.reset()
+        self._hook_writer()
         self.detector.cluster = w.cluster
         self.detector.beat()
         w.cluster.events.append(("incident", kind, rank, step_at_failure))
         self._last_ok = time.perf_counter()
         if self.verbose:
             t = incident.timings
-            print(f"!! recovered from {ck.name} -> step {w.step} "
+            print(f"!! recovered from {src_name} (tier={tier_name}) -> "
+                  f"step {w.step} "
                   f"(world {world_before}->{incident.world_after}; "
                   f"detect {t['detect_ms']:.1f}ms restore "
                   f"{t['restore_ms']:.1f}ms resume {t['resume_ms']:.1f}ms)",

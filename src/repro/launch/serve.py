@@ -17,7 +17,7 @@ import numpy as np
 from repro import steps as ST
 from repro.configs import get_config, smoke_config
 from repro.core import Cluster
-from repro.core.restore import load_arrays, load_manifest, load_rank_state
+from repro.core.restore import as_source, load_arrays
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
 from repro.sharding import ShardingCtx, rules_for
@@ -109,29 +109,31 @@ class Server:
                                       extra_rank_state=lambda r: dict(extra))
         return req
 
-    def restore(self, ckpt_dir, *, new_backend=None, new_world_size=None,
+    def restore(self, ckpt, *, new_backend=None, new_world_size=None,
                 rebuild=False):
-        """Resume mid-sequence from a serving snapshot.  ``new_backend`` /
+        """Resume mid-sequence from a serving snapshot — a committed step
+        dir or an in-RAM ``TierImage``.  ``new_backend`` /
         ``new_world_size`` / ``rebuild`` go through ``Cluster.restart``:
         fresh lower halves (possibly a different flavor or a shrunken
         world) with cache-leaf reads overlapping the descriptor re-bind;
         restart phase timings land in ``self.cluster.restart_timings``."""
         # shardings: reuse current cache structure if present, else None tree
-        manifest = load_manifest(ckpt_dir)
+        src = as_source(ckpt)
+        manifest = src.manifest()
         if self.caches is not None:
             sh = {"caches": jax.tree.map(lambda _: None, self.caches)}
         else:
             sh = {"caches": [None] * len(manifest["leaves"])}
         if new_backend is not None or new_world_size is not None or rebuild:
-            self.cluster = self.cluster.restart(ckpt_dir,
+            self.cluster = self.cluster.restart(src,
                                                 new_backend=new_backend,
                                                 new_world_size=new_world_size,
                                                 shardings=sh)
             arrays = self.cluster.restored_arrays
         else:
-            arrays = load_arrays(ckpt_dir, sh)
+            arrays = load_arrays(src, sh)
         self.caches = arrays["caches"]
-        rs = load_rank_state(ckpt_dir, 0)
+        rs = src.rank_state(0)
         # rewinding pos must also rewind the generated stream, or the
         # tokens decoded between snapshot and failure appear TWICE after
         # the supervisor replays them
@@ -191,6 +193,15 @@ def main():
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="supervised mode: snapshot every N decode steps "
                          "(default gen/2)")
+    ap.add_argument("--backoff-floor", type=float, default=0.05,
+                    help="supervisor backoff floor in seconds (0 disables)")
+    ap.add_argument("--backoff-ceiling", type=float, default=2.0,
+                    help="supervisor backoff ceiling in seconds")
+    ap.add_argument("--ram-tier", action="store_true", default=True,
+                    help="peer-replicate snapshots to partner RAM and try "
+                         "that tier first on recovery (default)")
+    ap.add_argument("--no-ram-tier", dest="ram_tier", action="store_false",
+                    help="disk-only recovery (skip peer replication)")
     args = ap.parse_args()
     cfg = smoke_config(args.arch)
     srv = Server(cfg, backend=args.backend, ckpt_dir=args.ckpt_dir)
@@ -232,14 +243,18 @@ def main():
     if supervised:
         if not args.ckpt_dir:
             raise SystemExit("--supervise requires --ckpt-dir")
+        from repro.core.ckpt_tiers import ReplicaTier
         from repro.core.faults import FaultInjector, FaultPlan
-        from repro.core.supervisor import Supervisor
+        from repro.core.supervisor import Supervisor, SupervisorConfig
         plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
             else FaultPlan()
         srv.start_decode(first)
         t0 = time.time()
+        sup_cfg = SupervisorConfig(backoff_floor_s=args.backoff_floor,
+                                   backoff_ceiling_s=args.backoff_ceiling)
         with FaultInjector(plan) as injector:
-            sup = Supervisor(srv, injector=injector)
+            sup = Supervisor(srv, injector=injector, config=sup_cfg,
+                             tier=ReplicaTier() if args.ram_tier else None)
             incidents = sup.run(gen,
                                 ckpt_every=args.snapshot_every
                                 or max(gen // 2, 1))
@@ -247,7 +262,8 @@ def main():
         for inc in incidents:
             t = inc.timings
             print(f"incident: {inc.kind} rank={inc.rank} "
-                  f"pos={inc.step}->{inc.resumed_step} ckpt={inc.ckpt} "
+                  f"pos={inc.step}->{inc.resumed_step} tier={inc.tier} "
+                  f"ckpt={inc.ckpt} "
                   f"restore={t['restore_ms']:.1f}ms", flush=True)
         print(f"supervised decode: {gen} tokens x batch {args.batch} in "
               f"{dt:.2f}s, {len(incidents)} incident(s)")

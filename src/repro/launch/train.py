@@ -24,7 +24,7 @@ import numpy as np
 from repro import steps as ST
 from repro.configs import CkptIOConfig, get_config, smoke_config
 from repro.core import Cluster
-from repro.core.restore import load_manifest, load_rank_state
+from repro.core.restore import as_source
 from repro.data import DataPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
@@ -171,22 +171,25 @@ class Trainer:
               f"(world={len(self.cluster.ranks)}, backend="
               f"{self.cluster.backend_name})", flush=True)
 
-    def restore(self, ckpt_dir, *, new_world_size=None, new_backend=None):
-        """Elastic restart from a checkpoint dir: array-leaf reads overlap
-        descriptor re-binding on one pool (``Cluster.restart``), and the
-        phase timings land in ``self.restart_timings`` (mirroring
-        ``checkpoint``'s ``req.timings``)."""
-        manifest = load_manifest(ckpt_dir)
+    def restore(self, ckpt, *, new_world_size=None, new_backend=None):
+        """Elastic restart from a checkpoint source — a committed step dir
+        or an in-RAM ``TierImage`` (any object speaking the checkpoint-source
+        protocol): array-leaf reads overlap descriptor re-binding on one
+        pool (``Cluster.restart``), and the phase timings land in
+        ``self.restart_timings`` (mirroring ``checkpoint``'s
+        ``req.timings``)."""
+        src = as_source(ckpt)
+        manifest = src.manifest()
         self.pipeline.stop()
         shardings = {"params": self.param_sh, "opt": self.opt_sh}
-        self.cluster = self.cluster.restart(ckpt_dir,
+        self.cluster = self.cluster.restart(src,
                                             new_world_size=new_world_size,
                                             new_backend=new_backend,
                                             shardings=shardings)
         arrays = self.cluster.restored_arrays
         self.restart_timings = self.cluster.restart_timings
         self.params, self.opt_state = arrays["params"], arrays["opt"]
-        rs = load_rank_state(ckpt_dir, 0)
+        rs = src.rank_state(0)
         self.step = rs["train_step"]
         self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],
                                             mana=self.cluster.mana(0))
@@ -273,12 +276,26 @@ def main():
                          "fault plan, e.g. "
                          '\'[{"kind": "kill_rank", "at_step": 12}]\' '
                          "(kinds: kill_rank stall_drain corrupt_shard "
-                         "truncate_shard drop_token snapshot_error); "
-                         "implies --supervise")
+                         "truncate_shard drop_token snapshot_error "
+                         "partner_death corrupt_replica double_fault "
+                         "restore_error); implies --supervise")
     ap.add_argument("--lease-s", type=float, default=2.0,
                     help="supervisor heartbeat lease (s)")
     ap.add_argument("--max-retries", type=int, default=3,
                     help="supervisor recovery attempts per failure")
+    ap.add_argument("--backoff-floor", type=float, default=0.05,
+                    help="supervisor backoff floor in seconds: the first "
+                         "retry delay, doubled per attempt (0 disables "
+                         "backoff entirely)")
+    ap.add_argument("--backoff-ceiling", type=float, default=2.0,
+                    help="supervisor backoff ceiling in seconds: the cap "
+                         "the exponential delay saturates at")
+    ap.add_argument("--ram-tier", action="store_true", default=True,
+                    help="replicate each committed snapshot to partner "
+                         "ranks' RAM; recovery tries this tier before disk "
+                         "(default)")
+    ap.add_argument("--no-ram-tier", dest="ram_tier", action="store_false",
+                    help="disk-only recovery (skip peer replication)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -316,19 +333,25 @@ def main():
     injector = None
     try:
         if args.supervise or args.fault_plan:
+            from repro.core.ckpt_tiers import ReplicaTier
             from repro.core.faults import FaultInjector, FaultPlan
-            from repro.core.supervisor import Supervisor
+            from repro.core.supervisor import Supervisor, SupervisorConfig
             plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
                 else FaultPlan()
             injector = FaultInjector(plan)
-            sup = Supervisor(tr, injector=injector, lease_s=args.lease_s,
-                             max_retries=args.max_retries)
+            sup_cfg = SupervisorConfig(lease_s=args.lease_s,
+                                       max_retries=args.max_retries,
+                                       backoff_floor_s=args.backoff_floor,
+                                       backoff_ceiling_s=args.backoff_ceiling)
+            sup = Supervisor(tr, injector=injector, config=sup_cfg,
+                             tier=ReplicaTier() if args.ram_tier else None)
             incidents = sup.run(n_steps, ckpt_every=args.ckpt_every)
             for inc in incidents:
                 t = inc.timings
                 print(f"incident: {inc.kind} rank={inc.rank} "
                       f"step={inc.step}->{inc.resumed_step} "
-                      f"ckpt={inc.ckpt} detect={t['detect_ms']:.1f}ms "
+                      f"tier={inc.tier} ckpt={inc.ckpt} "
+                      f"detect={t['detect_ms']:.1f}ms "
                       f"restore={t['restore_ms']:.1f}ms "
                       f"resume={t['resume_ms']:.1f}ms", flush=True)
             print(f"supervised run done: {len(incidents)} incident(s), "

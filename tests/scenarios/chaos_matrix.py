@@ -1,5 +1,5 @@
-"""Chaos matrix: sweep (fault kind x phase x backend family) through the
-supervised auto-recovery engine.
+"""Chaos matrix: sweep (fault kind x phase x backend family x checkpoint
+tier) through the supervised auto-recovery engine.
 
 Every cell trains a tiny model under the Supervisor with one scheduled
 fault plan — the training step itself drives a world ``allreduce`` over
@@ -14,14 +14,19 @@ also surface through collective calls — then asserts:
     fault-free reference run at the same step (digest comparison over every
     leaf) — recovery must be transparent, not merely survivable;
   * corrupt/truncate cells additionally recovered from the checkpoint
-    BEFORE the poisoned one (digest-verified fallback).
+    BEFORE the poisoned one (digest-verified fallback);
+  * RAM-tier cells additionally assert WHICH tier served the restore
+    (``Incident.tier``): a plain rank kill must be served from peer RAM,
+    partner double-death and in-memory rot must escalate down the ladder
+    to disk, and a second fault mid-recovery must be absorbed into the
+    incident — byte-identical in every case.
 
 Modes:
-  --full    every valid (kind, phase) combo x every backend family
-  --smoke   one cell per fault kind, rotating backend families (the CI
-            chaos job: every PR exercises at least one injected fault per
-            fault type)
-  --quick   two cells (tier-1 wrapper: exercises the harness itself)
+  --full    every valid (kind, phase, tier) combo x every backend family
+  --smoke   one cell per (fault kind, tier), rotating backend families
+            (the CI chaos job: every PR exercises at least one injected
+            fault per fault type on each checkpoint tier it targets)
+  --quick   three cells (tier-1 wrapper: exercises the harness itself)
 
 Usage:  PYTHONPATH=src python tests/scenarios/chaos_matrix.py --smoke
 """
@@ -43,36 +48,58 @@ from repro.core import ckpt_io  # noqa: E402
 from repro.core.backends import BACKENDS, backend_family  # noqa: E402
 from repro.core.faults import (FaultPlan, FaultSpec,  # noqa: E402
                                FaultInjector, disarm_all)
-from repro.core.supervisor import Supervisor  # noqa: E402
+from repro.core.ckpt_tiers import ReplicaTier  # noqa: E402
+from repro.core.supervisor import Supervisor, SupervisorConfig  # noqa: E402
 from repro.launch.train import Trainer  # noqa: E402
 
 WORLD = 2
 STEPS = 12
 CKPT_EVERY = 3
 
-#: valid (fault kind, phase) combos — the phase is WHERE the fault lands in
-#: the step/checkpoint cycle, which selects the detection path (lease/probe
-#: detector for compute-phase faults, the drain or the snapshot engine for
-#: stop-the-world-phase faults, the digest-verified resumable walk for
-#: commit-phase torn writes)
+#: valid (fault kind, phase, tier) combos — the phase is WHERE the fault
+#: lands in the step/checkpoint cycle, which selects the detection path
+#: (lease/probe detector for compute-phase faults, the drain or the
+#: snapshot engine for stop-the-world-phase faults, the digest-verified
+#: resumable walk for commit-phase torn writes); the tier is WHICH
+#: checkpoint level recovery starts from ("ram" = peer-replicated in-RAM
+#: shards first, "disk" = disk-only supervisor, no replication)
 KIND_PHASES = [
-    ("kill_rank", "compute"),
-    ("kill_rank", "drain"),          # death discovered BY the quiesce
-    ("stall_drain", "drain"),
-    ("snapshot_error", "snapshot"),
-    ("corrupt_shard", "commit"),
-    ("truncate_shard", "commit"),
-    ("drop_token", "compute"),
+    ("kill_rank", "compute", "disk"),
+    ("kill_rank", "drain", "disk"),  # death discovered BY the quiesce
+    ("stall_drain", "drain", "disk"),
+    ("snapshot_error", "snapshot", "disk"),
+    ("corrupt_shard", "commit", "disk"),
+    ("truncate_shard", "commit", "disk"),
+    ("drop_token", "compute", "disk"),
+    # RAM-tier cells: the four new failure classes target the replicated
+    # tier itself, plus the plain kill that the tier must serve from RAM
+    ("kill_rank", "compute", "ram"),
+    ("partner_death", "compute", "ram"),
+    ("corrupt_replica", "compute", "ram"),
+    ("double_fault", "compute", "ram"),
+    ("restore_error", "compute", "ram"),
 ]
 
 #: failure class each cell's first incident must be classified as
 EXPECT = {"kill_rank": "rank_dead", "stall_drain": "drain_stall",
           "snapshot_error": "snapshot_error", "corrupt_shard": "rank_dead",
-          "truncate_shard": "rank_dead", "drop_token": "lost_token"}
+          "truncate_shard": "rank_dead", "drop_token": "lost_token",
+          "partner_death": "rank_dead", "corrupt_replica": "rank_dead",
+          "double_fault": "rank_dead", "restore_error": "rank_dead"}
 
 #: fault kinds whose recovery must land on the checkpoint BEFORE the newest
 #: (the newest was poisoned; digest verification must reject it)
 FALLBACK_KINDS = {"corrupt_shard", "truncate_shard"}
+
+#: which tier must have SERVED the restore in a RAM-tier cell (None =
+#: don't pin it — double_fault's absorbed second death makes the serving
+#: tier depend on which rank died mid-recovery)
+TIER_EXPECT = {"kill_rank": "ram", "partner_death": "disk",
+               "corrupt_replica": "disk", "restore_error": "ram",
+               "double_fault": None}
+
+#: kinds that kill two ranks need a world big enough to leave a quorum
+WORLD_FOR = {"partner_death": 4, "double_fault": 4}
 
 
 def family_reps() -> dict:
@@ -89,6 +116,11 @@ def build_plan(kind: str, phase: str) -> FaultPlan:
         # kill a rank at step 8: recovery must skip the poisoned image and
         # fall back to step 3
         return FaultPlan([FaultSpec(kind, at_step=7),
+                          FaultSpec("kill_rank", at_step=8, rank=0)])
+    if kind == "corrupt_replica":
+        # rot the RAM replica at step 7, kill its owner at step 8: the RAM
+        # rung must fail checksum verification and escalate to disk
+        return FaultPlan([FaultSpec(kind, at_step=7, rank=0),
                           FaultSpec("kill_rank", at_step=8, rank=0)])
     if phase in ("drain", "snapshot"):
         # stop-the-world faults fire at a checkpoint boundary
@@ -109,8 +141,8 @@ def io_config():
                         drain_timeout=1.0)
 
 
-def make_trainer(ckpt_dir, backend: str) -> Trainer:
-    return Trainer(tiny_config(), batch_size=4, seq_len=16, world_size=WORLD,
+def make_trainer(ckpt_dir, backend: str, world: int = WORLD) -> Trainer:
+    return Trainer(tiny_config(), batch_size=4, seq_len=16, world_size=world,
                    backend=backend, ckpt_dir=ckpt_dir, total_steps=STEPS,
                    ckpt_io=io_config())
 
@@ -121,9 +153,10 @@ def param_digests(tr: Trainer) -> list:
 
 
 def run_reference(base: Path) -> list:
-    """Fault-free trajectory digest at the target step (backend-independent:
-    the training math is pure JAX over the mesh — the MPI plane never
-    touches it)."""
+    """Fault-free trajectory digest at the target step (backend- AND
+    world-independent: the training math is pure JAX over a single-device
+    mesh — neither the MPI plane nor the logical world size touches it, so
+    one reference serves the world-2 and world-4 cells alike)."""
     tr = make_trainer(base / "ref", "mpich")
     tr.init_state()
     tr.run(STEPS, ckpt_every=CKPT_EVERY, log_every=10 * STEPS)
@@ -133,12 +166,13 @@ def run_reference(base: Path) -> list:
     return ref
 
 
-def run_cell(base: Path, kind: str, phase: str, backend: str,
+def run_cell(base: Path, kind: str, phase: str, backend: str, tier: str,
              ref: list) -> dict:
     disarm_all()
-    name = f"{kind}:{phase}:{backend}"
+    name = f"{kind}:{phase}:{backend}:{tier}"
     t0 = time.time()
-    tr = make_trainer(base / name.replace(":", "_"), backend)
+    world = WORLD_FOR.get(kind, WORLD)
+    tr = make_trainer(base / name.replace(":", "_"), backend, world)
     tr.init_state()
     try:
         # inside the try: a cell whose supervisor raises (RecoveryFailed)
@@ -146,7 +180,10 @@ def run_cell(base: Path, kind: str, phase: str, backend: str,
         # failed cell leaks into every later one in the sweep
         with FaultInjector(build_plan(kind, phase)) as injector:
             sup = Supervisor(tr, injector=injector, lease_s=1.0,
-                             verbose=False)
+                             verbose=False,
+                             tier=ReplicaTier() if tier == "ram" else None,
+                             config=SupervisorConfig(backoff_floor_s=0.01,
+                                                     backoff_ceiling_s=0.05))
             incidents = sup.run(STEPS, ckpt_every=CKPT_EVERY)
         assert injector.fired, f"{name}: fault never fired"
         assert incidents, f"{name}: supervisor recorded no incident"
@@ -168,6 +205,22 @@ def run_cell(base: Path, kind: str, phase: str, backend: str,
             assert inc.resumed_step < 2 * CKPT_EVERY, \
                 f"{name}: resumed from {inc.resumed_step}, not the " \
                 f"pre-poison checkpoint"
+        if tier == "ram":
+            want = TIER_EXPECT[kind]
+            if want == "disk":
+                assert inc.tier in ("disk", "disk_chain"), \
+                    f"{name}: served by {inc.tier!r}, expected escalation " \
+                    f"to the disk tier"
+                assert any(e.get("level") == "ram" for e in inc.ladder), \
+                    f"{name}: ladder never attempted the RAM rung: " \
+                    f"{inc.ladder}"
+            elif want is not None:
+                assert inc.tier == want, \
+                    f"{name}: served by {inc.tier!r}, expected {want!r}"
+            if kind == "double_fault":
+                assert inc.absorbed, \
+                    f"{name}: mid-recovery second fault was dropped, not " \
+                    f"absorbed into the incident"
         assert param_digests(tr) == ref, \
             f"{name}: post-recovery params NOT byte-identical to the " \
             f"fault-free run"
@@ -179,6 +232,7 @@ def run_cell(base: Path, kind: str, phase: str, backend: str,
             pass
     return {"cell": name, "kind": inc.kind, "rank": inc.rank,
             "resumed_step": inc.resumed_step, "ckpt": inc.ckpt,
+            "tier": inc.tier, "ladder": inc.ladder, "absorbed": inc.absorbed,
             "world": f"{inc.world_before}->{inc.world_after}",
             "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
 
@@ -186,21 +240,23 @@ def run_cell(base: Path, kind: str, phase: str, backend: str,
 def select_cells(mode: str) -> list:
     families = sorted(family_reps().values())
     if mode == "full":
-        return [(k, p, b) for (k, p), b in
+        return [(k, p, b, t) for (k, p, t), b in
                 itertools.product(KIND_PHASES, families)]
     if mode == "smoke":
-        # one cell per fault KIND (the CI gate: every fault type injected on
-        # every PR), rotating the backend family for cross-family coverage
-        kinds, cells = set(), []
-        for i, (k, p) in enumerate(KIND_PHASES):
-            if k in kinds:
+        # one cell per (fault KIND, tier) — the CI gate: every fault type
+        # injected on every PR, on each checkpoint tier it targets —
+        # rotating the backend family for cross-family coverage
+        seen, cells = set(), []
+        for i, (k, p, t) in enumerate(KIND_PHASES):
+            if (k, t) in seen:
                 continue
-            kinds.add(k)
-            cells.append((k, p, families[i % len(families)]))
+            seen.add((k, t))
+            cells.append((k, p, families[i % len(families)], t))
         return cells
     # quick: exercises the harness itself from tier-1 without the sweep cost
-    return [("kill_rank", "compute", "mpich"),
-            ("snapshot_error", "snapshot", families[-1])]
+    return [("kill_rank", "compute", "mpich", "disk"),
+            ("snapshot_error", "snapshot", families[-1], "disk"),
+            ("kill_rank", "compute", "mpich", "ram")]
 
 
 def main() -> int:
@@ -222,19 +278,19 @@ def main() -> int:
           f"world={WORLD}, steps={STEPS}", flush=True)
     ref = run_reference(base)
     results, failures = [], []
-    for kind, phase, backend in cells:
+    for kind, phase, backend, tier in cells:
         try:
-            r = run_cell(base, kind, phase, backend, ref)
+            r = run_cell(base, kind, phase, backend, tier, ref)
             results.append(r)
             t = r["timings"]
-            print(f"  ok {r['cell']:<34} -> {r['kind']:<14} "
-                  f"resumed={r['resumed_step']} world={r['world']} "
-                  f"detect={t['detect_ms']:.0f}ms "
+            print(f"  ok {r['cell']:<40} -> {r['kind']:<14} "
+                  f"tier={r['tier']} resumed={r['resumed_step']} "
+                  f"world={r['world']} detect={t['detect_ms']:.0f}ms "
                   f"restore={t['restore_ms']:.0f}ms [{r['wall_s']}s]",
                   flush=True)
         except Exception as e:  # noqa: BLE001 — report every failed cell
-            failures.append(f"{kind}:{phase}:{backend}: {e}")
-            print(f"  FAIL {kind}:{phase}:{backend}: {e}", flush=True)
+            failures.append(f"{kind}:{phase}:{backend}:{tier}: {e}")
+            print(f"  FAIL {kind}:{phase}:{backend}:{tier}: {e}", flush=True)
     if args.out:
         Path(args.out).write_text(json.dumps(
             {"bench": "chaos_matrix", "mode": args.mode,

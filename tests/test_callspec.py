@@ -401,9 +401,12 @@ def test_api_coverage_tool_passes():
     assert mod.check() == []
 
 
-def test_restart_shim_deprecation_warning():
+def test_restart_shim_removed():
+    # the deprecated repro.core.restart alias is gone — the restart engine
+    # is importable only as repro.core.restore
     import importlib
     import sys
     sys.modules.pop("repro.core.restart", None)
-    with pytest.warns(DeprecationWarning, match="repro.core.restore"):
+    with pytest.raises(ModuleNotFoundError):
         importlib.import_module("repro.core.restart")
+    importlib.import_module("repro.core.restore")

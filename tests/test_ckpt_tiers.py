@@ -1,0 +1,213 @@
+"""The peer-replicated in-RAM checkpoint tier: ring pairing, commit-riding
+replication over the interposed p2p plane, checksum-verified ``TierImage``
+assembly (survivor copies only), delta-chain retention, and the
+checkpoint-source protocol both tiers speak (``DirCheckpointSource`` /
+``TierImage`` interchangeable under ``load_arrays``)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CkptIOConfig
+from repro.core import Cluster, ckpt_io
+from repro.core.ckpt_tiers import (Container, ReplicaTier, TierImage,
+                                   TierVerifyError, container_sha,
+                                   ring_partner)
+from repro.core.restore import (DirCheckpointSource, as_source, load_arrays,
+                                load_manifest, load_rank_state)
+
+
+def _io(**kw):
+    kw.setdefault("codec", "zlib")
+    kw.setdefault("incremental", True)
+    kw.setdefault("drain_timeout", 1.0)
+    return CkptIOConfig(**kw)
+
+
+def _arrays(seed=3):
+    rng = np.random.default_rng(seed)
+    return {"w": jax.numpy.asarray(rng.normal(size=(64, 16))
+                                   .astype(np.float32)),
+            "m": jax.numpy.asarray(rng.normal(size=(64, 16))
+                                   .astype(np.float32))}
+
+
+def _cluster(tmp_path, world=2):
+    return Cluster(world, "mpich", ckpt_dir=tmp_path / "ck", ckpt_io=_io())
+
+
+def _commit(c, step, arrays=None):
+    c.checkpoint(step, arrays or _arrays(), None).wait()
+    c.writer.wait_idle()
+    return c.writer.latest()
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def test_ring_partner_pairing():
+    alive = [0, 1, 2, 3]
+    assert [ring_partner(r, alive) for r in alive] == [1, 2, 3, 0]
+    assert ring_partner(1, [1, 3]) == 3        # skips dead ranks
+    assert ring_partner(3, [1, 3]) == 1        # wraps
+    assert ring_partner(0, [0]) is None        # alone: nobody to push to
+
+
+def test_memory_shard_reader_matches_disk_reader(tmp_path):
+    c = _cluster(tmp_path)
+    step_dir = _commit(c, 1)
+    rdir = step_dir / "rank00000"
+    index = ckpt_io.read_rank_index(rdir)
+    data = (rdir / ckpt_io.BIN_NAME).read_bytes()
+    mem = ckpt_io.MemoryShardReader(index, data)
+    with ckpt_io.RankShardReader(rdir) as disk:
+        for key in index["entries"]:
+            np.testing.assert_array_equal(np.asarray(mem.read(key)),
+                                          np.asarray(disk.read(key)))
+            assert mem.entry(key) == index["entries"][key]
+    mem.close()
+    c.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# replication + image assembly
+# ---------------------------------------------------------------------------
+
+def test_replicate_stores_primary_and_partner_copies(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    step_dir = _commit(c, 1)
+    tier = ReplicaTier()
+    tier.replicate(c, step_dir)
+    # each rank holds its own container plus its ring predecessor's
+    assert set(tier.stores[0]) == {(1, 0), (1, 1)}
+    assert set(tier.stores[1]) == {(1, 1), (1, 0)}
+    assert tier.newest_step == 1
+    assert tier.stats["replicated_steps"] == 1
+    assert tier.stats["pushed_bytes"] > 0
+    # the replica crossed the interposed p2p plane as real payload bytes
+    primary = tier.stores[0][(1, 0)]
+    replica = tier.stores[1][(1, 0)]
+    assert primary is not replica
+    assert replica.sha == container_sha(replica.data)
+    c.writer.close()
+
+
+def test_image_serves_newest_step_from_survivors(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    step_dir = _commit(c, 1)
+    tier = ReplicaTier()
+    tier.replicate(c, step_dir)
+    c.halt_rank(1)                     # rank 1's memory is gone...
+    img = tier.image(c)
+    assert isinstance(img, TierImage)  # ...but rank 0 holds its replica
+    assert img.step == 1 and img.name == "ram:step_00000001"
+    assert img.manifest() == load_manifest(step_dir)
+    assert img.rank_state(0) == load_rank_state(step_dir, 0)
+    assert img.nbytes > 0
+    c.writer.close()
+
+
+def test_image_none_when_tier_empty_or_copies_lost(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    tier = ReplicaTier()
+    assert tier.image(c) is None       # nothing replicated yet
+    step_dir = _commit(c, 1)
+    tier.replicate(c, step_dir)
+    # both holders of every copy die -> the needed containers are gone
+    c.halt_rank(0)
+    c.halt_rank(1)
+    assert tier.image(c) is None
+    c.writer.close()
+
+
+def test_image_checksum_mismatch_raises(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    # rot every surviving copy of rank 0's container in place
+    for store in tier.stores.values():
+        if (1, 0) in store:
+            old = store[(1, 0)]
+            bad = bytearray(old.data)
+            bad[len(bad) // 2] ^= 0xFF
+            store[(1, 0)] = Container(old.step, old.rank, old.index,
+                                      bytes(bad), old.state, old.sha)
+    with pytest.raises(TierVerifyError, match="rank 0"):
+        tier.image(c)
+    c.writer.close()
+
+
+def test_delta_chain_retention_and_reset(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    tier = ReplicaTier()
+    a1 = _arrays()
+    tier.replicate(c, _commit(c, 1, a1))
+    a2 = {"w": a1["w"] + 1, "m": a1["m"]}      # m stays clean -> delta
+    d2 = _commit(c, 2, a2)
+    tier.replicate(c, d2)
+    m2 = json.loads((d2 / "manifest.json").read_text())
+    if m2.get("base_steps"):
+        # delta image: base-step containers must survive retention, and
+        # the assembled image must be able to read across the chain
+        assert set(tier.manifests) == {1, 2}
+        assert any(k[0] == 1 for k in tier.stores[0])
+    img = tier.image(c)
+    assert img is not None and img.step == 2
+    tier.replicate(c, _commit(c, 3, {"w": a2["w"] + 1, "m": a2["m"] + 1}))
+    tier.reset()
+    assert tier.image(c) is None and tier.stores == {} and \
+        tier.newest_step is None
+    c.writer.close()
+
+
+def test_note_commit_attached_vs_detached(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    tier = ReplicaTier()
+    d1 = _commit(c, 1)
+    tier.note_commit(d1)               # detached: queued, not replicated
+    assert tier.newest_step is None
+    assert tier.drain_commits(c) == 1
+    assert tier.newest_step == 1
+    tier.attach(c)
+    tier.note_commit(_commit(c, 2))    # attached: replicates inline
+    assert tier.newest_step == 2
+    assert tier.drain_commits(c) == 0  # nothing left queued
+    c.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-source protocol
+# ---------------------------------------------------------------------------
+
+def test_as_source_coerces_paths_and_passes_sources(tmp_path):
+    c = _cluster(tmp_path)
+    step_dir = _commit(c, 1)
+    src = as_source(step_dir)
+    assert isinstance(src, DirCheckpointSource)
+    assert src.name == step_dir.name
+    assert as_source(src) is src               # idempotent
+    tier = ReplicaTier()
+    tier.replicate(c, step_dir)
+    img = tier.image(c)
+    assert as_source(img) is img               # TierImage speaks the protocol
+    c.writer.close()
+
+
+def test_load_arrays_from_ram_image_matches_disk(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    arrays = _arrays(7)
+    step_dir = _commit(c, 1, arrays)
+    tier = ReplicaTier()
+    tier.replicate(c, step_dir)
+    img = tier.image(c)
+    sh = {"w": None, "m": None}
+    from_disk = load_arrays(step_dir, sh, parallel=False)
+    from_ram = load_arrays(img, sh, parallel=False)
+    for k in arrays:
+        np.testing.assert_array_equal(np.asarray(from_disk[k]),
+                                      np.asarray(from_ram[k]))
+        np.testing.assert_array_equal(np.asarray(from_ram[k]),
+                                      np.asarray(arrays[k]))
+    c.writer.close()

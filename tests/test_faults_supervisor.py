@@ -402,3 +402,180 @@ def test_supervisor_refuses_without_valid_checkpoint(tmp_path):
             sup.run(EVERY - 1)          # fails before the first checkpoint
     tr.pipeline.stop()
     tr.cluster.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# RAM tier + escalation ladder (supervised, byte-identical)
+# ---------------------------------------------------------------------------
+
+def _supervised_tier(tmp_path, specs, world=2, **cfg_kw):
+    from repro.core.ckpt_tiers import ReplicaTier
+    from repro.core.supervisor import SupervisorConfig
+    cfg_kw.setdefault("backoff_floor_s", 0.01)
+    cfg_kw.setdefault("backoff_ceiling_s", 0.05)
+    tr = Trainer(_tiny_cfg(), batch_size=4, seq_len=16, world_size=world,
+                 ckpt_dir=tmp_path / "ck", total_steps=STEPS, ckpt_io=_io())
+    tr.init_state()
+    with FaultInjector(FaultPlan(specs)) as inj:
+        sup = Supervisor(tr, injector=inj, lease_s=1.0, verbose=False,
+                         tier=ReplicaTier(),
+                         config=SupervisorConfig(**cfg_kw))
+        incidents = sup.run(STEPS, ckpt_every=EVERY)
+    return tr, incidents
+
+
+def test_supervised_ram_tier_serves_byte_identical(tmp_path, ref_digests):
+    # a plain rank kill leaves a complete replicated image in surviving
+    # RAM: recovery must be served by the RAM tier with zero ladder noise
+    # and reproduce the fault-free trajectory exactly
+    tr, incidents = _supervised_tier(
+        tmp_path, [FaultSpec("kill_rank", at_step=5)])
+    try:
+        inc = incidents[0]
+        assert inc.kind == "rank_dead" and inc.tier == "ram"
+        assert inc.ckpt.startswith("ram:")
+        assert inc.ladder == []         # first rung, first try
+        assert tr.step == STEPS and _digests(tr) == ref_digests
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_partner_death_escalates_to_disk(tmp_path, ref_digests):
+    # victim AND its ring partner die together: every RAM copy of the
+    # victim's container is lost, so the ladder must fall through to the
+    # newest committed disk image — and still be byte-identical
+    tr, incidents = _supervised_tier(
+        tmp_path, [FaultSpec("partner_death", at_step=5)], world=4)
+    try:
+        inc = incidents[0]
+        assert inc.tier in ("disk", "disk_chain")
+        assert any(e.get("level") == "ram" for e in inc.ladder)
+        assert inc.world_after == 2
+        assert tr.step == STEPS and _digests(tr) == ref_digests
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_corrupt_replica_fails_verification_escalates(tmp_path, ref_digests):
+    # in-memory rot: the RAM rung raises TierVerifyError (non-retryable)
+    # and the ladder escalates to disk without burning rung retries
+    tr, incidents = _supervised_tier(
+        tmp_path, [FaultSpec("corrupt_replica", at_step=4, rank=0),
+                   FaultSpec("kill_rank", at_step=5, rank=0)])
+    try:
+        inc = incidents[0]
+        assert inc.tier in ("disk", "disk_chain")
+        ram_rungs = [e for e in inc.ladder if e.get("level") == "ram"]
+        assert len(ram_rungs) == 1      # non-retryable: exactly one attempt
+        assert "TierVerifyError" in ram_rungs[0]["error"]
+        assert ram_rungs[0]["retryable"] is False
+        assert tr.step == STEPS and _digests(tr) == ref_digests
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_double_fault_mid_recovery_absorbed_not_dropped(tmp_path,
+                                                        ref_digests):
+    # a second rank dies WHILE the first recovery is restoring: the
+    # supervisor must fence it, restart the ladder against the shrunken
+    # world, and record the absorbed fault on the incident — one incident,
+    # two deaths, nothing dropped
+    tr, incidents = _supervised_tier(
+        tmp_path, [FaultSpec("double_fault", at_step=5)], world=4)
+    try:
+        assert len(incidents) == 1
+        inc = incidents[0]
+        assert inc.absorbed and inc.absorbed[0]["kind"] == "rank_dead"
+        assert inc.world_before == 4 and inc.world_after == 2
+        assert tr.step == STEPS and _digests(tr) == ref_digests
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_restore_error_retried_on_same_rung(tmp_path, ref_digests):
+    # a transient fault inside rebind_world: retryable, so the SAME rung
+    # retries (bounded by level_retries) and the RAM tier still serves
+    tr, incidents = _supervised_tier(
+        tmp_path, [FaultSpec("restore_error", at_step=5)])
+    try:
+        inc = incidents[0]
+        assert inc.tier == "ram"
+        assert len(inc.ladder) == 1     # one failed try, then success
+        assert inc.ladder[0]["retryable"] is True
+        assert tr.step == STEPS and _digests(tr) == ref_digests
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_backoff_knobs_scale_recovery_spacing(tmp_path):
+    from repro.core.supervisor import SupervisorConfig
+
+    class FlakyTwice:
+        """Fails the same step until three recoveries have happened —
+        forces attempts 2 and 3, i.e. two backoff sleeps between
+        attempts (floor, then doubled floor)."""
+
+        def __init__(self, cluster):
+            self.cluster = cluster
+            self.step = 0
+            self.recoveries = 0
+
+        def step_once(self):
+            if self.step + 1 == 2 and self.recoveries < 3:
+                raise ValueError("transient failure at step 2")
+            self.step += 1
+
+        def checkpoint(self):
+            pass
+
+        def recover(self, ck, *, new_world_size=None):
+            self.recoveries += 1
+            self.step = 0
+
+    def run_with(floor):
+        c = Cluster(1, "mpich", ckpt_dir=tmp_path / f"f{floor}",
+                    ckpt_io=_io())
+        c.checkpoint(1, _arrays(), None).wait()
+        w = FlakyTwice(c)
+        sup = Supervisor(w, verbose=False,
+                         config=SupervisorConfig(
+                             max_retries=3, backoff_floor_s=floor,
+                             backoff_ceiling_s=0.2, backoff_jitter=0.0))
+        sup.run(4)
+        c.writer.close()
+        return sup.backoff_s
+
+    assert run_with(0.0) == 0.0         # floor 0 disables backoff entirely
+    # floor + doubled floor, jitter off: exactly 3x the floor accumulated
+    assert run_with(0.04) == pytest.approx(0.12, rel=0.2)
+
+
+def test_supervisor_config_legacy_kwargs_override(tmp_path):
+    from repro.core.supervisor import SupervisorConfig
+
+    class Idle:
+        def __init__(self, cluster):
+            self.cluster = cluster
+            self.step = 0
+
+        def step_once(self):
+            self.step += 1
+
+        def checkpoint(self):
+            pass
+
+        def recover(self, ck, *, new_world_size=None):
+            pass
+
+    c = Cluster(1, "mpich", ckpt_dir=tmp_path, ckpt_io=_io())
+    sup = Supervisor(Idle(c), verbose=False, max_retries=7,
+                     config=SupervisorConfig(max_retries=2, lease_s=9.0))
+    assert sup.config.max_retries == 7     # explicit kwarg wins over config
+    assert sup.config.lease_s == 9.0       # config fields otherwise respected
+    assert sup.max_retries == 7         # legacy attribute mirrors stay live
+    c.writer.close()

@@ -5,7 +5,8 @@ CI runs the checkpoint/restart smoke benches on every PR and already FAILS
 on hard gate regressions (benchmarks/run.py and bench_restart exit non-zero
 when a gate trips).  This tool adds the TREND layer on top: it compares the
 fresh numbers against the repo's committed ``BENCH_ckpt.json`` /
-``BENCH_restart.json`` within a tolerance band and
+``BENCH_restart.json`` / ``BENCH_recovery.json`` within a tolerance band
+and
 
   * **warns** (exit 0) when a tracked metric drifted outside the band —
     noisy CI runners make drift-as-failure a flake factory, but the drift
@@ -20,7 +21,9 @@ Usage:
   python tools/bench_compare.py \
       --ckpt-fresh BENCH_ckpt.fresh.json --ckpt-base BENCH_ckpt.json \
       --restart-fresh BENCH_restart.fresh.json \
-      --restart-base BENCH_restart.json [--tolerance 0.25]
+      --restart-base BENCH_restart.json \
+      --recovery-fresh BENCH_recovery.fresh.json \
+      --recovery-base BENCH_recovery.json [--tolerance 0.25]
 """
 from __future__ import annotations
 
@@ -43,6 +46,12 @@ RESTART_METRICS = [
      True, 1.3),
     ("parallel_s", lambda r: r["restore_ab"]["parallel_s"], False, None),
 ]
+RECOVERY_METRICS = [
+    # RAM tier slower than disk would defeat its purpose: hard gate >1x
+    ("ram_speedup", lambda r: r["ram_speedup"], True, 1.0),
+    ("mttr_ram_ms", lambda r: r["mttr_ram_ms"], False, None),
+    ("mttr_disk_ms", lambda r: r["mttr_disk_ms"], False, None),
+]
 
 
 def _load(path):
@@ -58,6 +67,10 @@ def _ckpt_result(payload):
 
 
 def _restart_result(payload):
+    return payload.get("results") if payload else None
+
+
+def _recovery_result(payload):
     return payload.get("results") if payload else None
 
 
@@ -110,6 +123,8 @@ def main() -> int:
     ap.add_argument("--ckpt-base", default="BENCH_ckpt.json")
     ap.add_argument("--restart-fresh", default="BENCH_restart.fresh.json")
     ap.add_argument("--restart-base", default="BENCH_restart.json")
+    ap.add_argument("--recovery-fresh", default="BENCH_recovery.fresh.json")
+    ap.add_argument("--recovery-base", default="BENCH_recovery.json")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="relative drift band before a warning (default 25%%)")
     args = ap.parse_args()
@@ -119,7 +134,9 @@ def main() -> int:
             ("Checkpoint smoke (BENCH_ckpt)", args.ckpt_fresh,
              args.ckpt_base, CKPT_METRICS, _ckpt_result),
             ("Restart smoke (BENCH_restart)", args.restart_fresh,
-             args.restart_base, RESTART_METRICS, _restart_result)]:
+             args.restart_base, RESTART_METRICS, _restart_result),
+            ("Recovery smoke (BENCH_recovery)", args.recovery_fresh,
+             args.recovery_base, RECOVERY_METRICS, _recovery_result)]:
         fresh = extract(_load(fresh_path))
         if fresh is None:
             all_fail.append(f"{title}: no fresh results at {fresh_path}")
