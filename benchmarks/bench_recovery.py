@@ -20,9 +20,17 @@ rank-kill against both tiers and HARD-GATES ``median(ram MTTR) <
 median(disk MTTR)`` — the RAM tier's entire reason to exist — writing the
 comparison to ``BENCH_recovery.json`` for cross-PR drift tracking.
 
+The smoke also measures the LIVE rescale path at world 8 (a preemption
+notice served by the supervisor's rescale rung — shrink 8->7 with no
+rewind — then a live join back to 8) and HARD-GATES ``median(shrink
+downtime) < median(ram MTTR)``: if shrinking around a preempted rank is
+not strictly cheaper than the best restore, the rescale rung has no
+reason to sit above the RAM rung on the ladder.
+
 Rows (full bench mode, ``benchmarks/run.py``):
     recovery_<kind>,<total_us>,detect=..;classify=..;restore=..;resume=..
     recovery_tier_<tier>,<median_total_us>,restore_ms=..;trials=..
+    recovery_rescale_<shrink|join>,<median_downtime_us>,world=..;trials=..
 """
 from __future__ import annotations
 
@@ -123,6 +131,53 @@ def measure_tier(tier_name: str) -> dict:
         tr.cluster.writer.close()
 
 
+def measure_rescale() -> dict:
+    """One world-8 supervised preemption notice served LIVE by the rescale
+    rung (shrink 8->7, no rewind), then a live join back to world 8 with a
+    digest-verified slice; returns the downtime of both membership
+    changes."""
+    from repro.core import elastic
+    from repro.core.ckpt_tiers import ReplicaTier
+    from repro.core.faults import FaultInjector, FaultPlan, FaultSpec, \
+        disarm_all
+    from repro.core.supervisor import Supervisor, SupervisorConfig
+    disarm_all()
+    base = Path(tempfile.mkdtemp(prefix="bench_recovery_rescale_"))
+    tr = _trainer(base / "ck", world=TIER_WORLD, big=True, steps=TIER_STEPS)
+    tr.init_state()
+    try:
+        plan = FaultPlan([FaultSpec("preempt_notice", at_step=5,
+                                    rank=TIER_WORLD - 1, grace_s=2.0)])
+        with FaultInjector(plan) as injector:
+            sup = Supervisor(tr, injector=injector, lease_s=1.0,
+                             verbose=False, tier=ReplicaTier(),
+                             config=SupervisorConfig(backoff_floor_s=0.0))
+            incidents = sup.run(TIER_STEPS, ckpt_every=CKPT_EVERY)
+        assert incidents, "rescale: no incident recorded"
+        inc = incidents[0]
+        assert inc.tier == "rescale", \
+            f"rescale trial served by {inc.tier!r}, ladder {inc.ladder}"
+        assert inc.resumed_step == inc.step, "rescale trial rewound"
+        assert tr.step == TIER_STEPS, f"rescale: stalled at {tr.step}"
+        rep = elastic.join(tr.cluster, tier=sup.tier, timeout=10.0)
+        assert rep.slice_verified, "joined slice not digest-verified"
+        return {"shrink_downtime_ms": inc.timings["restore_ms"],
+                "join_downtime_ms": rep.downtime_ms}
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def rescale_results(trials: int = TIER_TRIALS) -> dict:
+    """Median shrink/join downtime over ``trials`` live rescales."""
+    ts = [measure_rescale() for _ in range(trials)]
+    return {"shrink_downtime_ms": round(statistics.median(
+                t["shrink_downtime_ms"] for t in ts), 3),
+            "join_downtime_ms": round(statistics.median(
+                t["join_downtime_ms"] for t in ts), 3),
+            "trials": trials}
+
+
 def tier_results(trials: int = TIER_TRIALS) -> dict:
     """Median MTTR per tier over ``trials`` supervised recoveries each."""
     out = {}
@@ -138,12 +193,16 @@ def tier_results(trials: int = TIER_TRIALS) -> dict:
 
 
 def smoke(out_path: str) -> bool:
-    """The CI recovery gate: world-8 MTTR per tier -> ``out_path``;
-    returns False when the RAM tier fails to beat disk."""
+    """The CI recovery gate: world-8 MTTR per tier plus world-8 live
+    shrink/join downtime -> ``out_path``; returns False when the RAM tier
+    fails to beat disk OR the live shrink fails to beat the RAM-tier
+    MTTR."""
     import json
     res = tier_results()
     ram, disk = res["ram"], res["disk"]
     speedup = disk["mttr_ms"] / max(ram["mttr_ms"], 1e-9)
+    resc = rescale_results()
+    rescale_speedup = ram["mttr_ms"] / max(resc["shrink_downtime_ms"], 1e-9)
     payload = {"bench": "recovery_smoke",
                "results": {"world": TIER_WORLD, "kind": "kill_rank",
                            "mttr_disk_ms": disk["mttr_ms"],
@@ -151,17 +210,29 @@ def smoke(out_path: str) -> bool:
                            "restore_disk_ms": disk["restore_ms"],
                            "restore_ram_ms": ram["restore_ms"],
                            "ram_speedup": round(speedup, 3),
+                           "shrink_downtime_ms":
+                               resc["shrink_downtime_ms"],
+                           "join_downtime_ms": resc["join_downtime_ms"],
+                           "rescale_speedup": round(rescale_speedup, 3),
                            "trials": TIER_TRIALS}}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"recovery_smoke: world={TIER_WORLD} "
           f"mttr_disk={disk['mttr_ms']:.1f}ms mttr_ram={ram['mttr_ms']:.1f}ms "
           f"({speedup:.2f}x) restore {disk['restore_ms']:.1f}->"
-          f"{ram['restore_ms']:.1f}ms", flush=True)
+          f"{ram['restore_ms']:.1f}ms | rescale shrink="
+          f"{resc['shrink_downtime_ms']:.2f}ms join="
+          f"{resc['join_downtime_ms']:.2f}ms ({rescale_speedup:.1f}x vs "
+          f"ram MTTR)", flush=True)
     ok = ram["mttr_ms"] < disk["mttr_ms"]
     if not ok:
         print(f"GATE FAILED: RAM-tier MTTR {ram['mttr_ms']:.1f}ms did not "
               f"beat disk {disk['mttr_ms']:.1f}ms", flush=True)
+    if resc["shrink_downtime_ms"] >= ram["mttr_ms"]:
+        print(f"GATE FAILED: live shrink downtime "
+              f"{resc['shrink_downtime_ms']:.2f}ms did not beat RAM-tier "
+              f"MTTR {ram['mttr_ms']:.1f}ms", flush=True)
+        ok = False
     return ok
 
 
@@ -177,3 +248,7 @@ def rows():
         yield (f"recovery_tier_{tier_name}", r["mttr_ms"] * 1e3,
                f"world={TIER_WORLD};restore_ms={r['restore_ms']:.1f};"
                f"trials={r['trials']}")
+    r = rescale_results()
+    for leg in ("shrink", "join"):
+        yield (f"recovery_rescale_{leg}", r[f"{leg}_downtime_ms"] * 1e3,
+               f"world={TIER_WORLD};trials={r['trials']}")

@@ -132,6 +132,21 @@ class Backend(abc.ABC):
     def comm_ranks(self, comm) -> list:
         """Decode a communicator's member ranks (for reconstruction)."""
 
+    def resize_world(self, members) -> Any:
+        """Live membership change: rebuild the world communicator over
+        ``members`` (a possibly-sparse, ordered rank-id list) and return its
+        new physical handle.  Rank ids are STABLE across a resize — a
+        survivor keeps its id; only the member list changes.  Works for
+        every flavor because each one stores its world comm in ``_world``
+        and implements :meth:`comm_create`."""
+        members = list(members)
+        if self.rank not in members:
+            raise ValueError(
+                f"{self.name}: rank {self.rank} not in new world {members}")
+        self.world_size = len(members)
+        self._world = self.comm_create(members)
+        return self._world
+
     # -- messaging (host metadata) ------------------------------------------
     def send(self, dst: int, tag: int, payload) -> None:
         self.fabric.send(self.rank, dst, tag, payload)

@@ -16,6 +16,19 @@ import time as _time
 from collections import deque
 
 
+class DepartedRankError(RuntimeError):
+    """Send addressed to a rank that has LEFT the world (live shrink).
+
+    Distinct from the plain ``ValueError`` raised for a rank id that never
+    existed: a departed rank is a *membership* condition the elastic layer
+    can handle (redeliver to the state inheritor, or surface a typed
+    cancellation to the caller) — never a programming error."""
+
+    def __init__(self, dst: int):
+        self.dst = dst
+        super().__init__(f"rank {dst} has departed the world")
+
+
 class Fabric:
     def __init__(self, world_size: int):
         self.world_size = world_size
@@ -27,14 +40,47 @@ class Fabric:
         self._barrier_count = 0
         self._barrier_cv = threading.Condition(self._lock)
         self.delivered = 0
+        self._retired: set[int] = set()
 
     def send(self, src: int, dst: int, tag: int, payload):
         if not (0 <= dst < self.world_size):
             raise ValueError(f"bad destination rank {dst}")
         with self._cv:
+            if dst in self._retired:
+                raise DepartedRankError(dst)
             self._queues.setdefault((dst, src, tag), deque()).append(payload)
             self.delivered += 1
             self._cv.notify_all()
+
+    def resize(self, new_world_size: int):
+        """Grow the addressable rank-id space (live join).  Shrinking is
+        expressed by :meth:`retire`, never by lowering ``world_size`` —
+        survivor rank ids are stable across membership changes."""
+        with self._cv:
+            if new_world_size < self.world_size:
+                raise ValueError("fabric never shrinks; retire ranks instead")
+            self.world_size = new_world_size
+            self._cv.notify_all()
+
+    def retire(self, rank: int):
+        """Mark ``rank`` departed: subsequent sends to it raise the typed
+        :class:`DepartedRankError`.  Its already-queued inbox is left in
+        place for the elastic layer to scavenge (redeliver or cancel)."""
+        with self._cv:
+            self._retired.add(rank)
+            self._cv.notify_all()
+
+    def scavenge(self, rank: int) -> list[tuple[int, int, object]]:
+        """Drain and return every queued message addressed to ``rank`` as
+        ``(src, tag, payload)`` triples, in per-queue FIFO order."""
+        out: list[tuple[int, int, object]] = []
+        with self._lock:
+            for (dst, s, t), q in list(self._queues.items()):
+                if dst != rank:
+                    continue
+                while q:
+                    out.append((s, t, q.popleft()))
+        return out
 
     def iprobe(self, rank: int, src: int = -1, tag: int = -1):
         """Any pending message for `rank` (src/tag = -1 wildcards)?

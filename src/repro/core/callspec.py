@@ -70,6 +70,7 @@ TAG_BASES = {
     "reduce_scatter": 70700,
     "scan": 70800,
     "replica": 70900,   # RAM-tier checkpoint shard push (ckpt_tiers.py)
+    "rescale": 71000,   # live membership change: handoff / join (elastic.py)
 }
 COLL_TAG_MIN = min(TAG_BASES.values()) << 32
 #: native multi-phase algorithms offset their second phase by this much

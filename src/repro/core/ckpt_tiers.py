@@ -120,6 +120,13 @@ class ReplicaTier:
         partner-replication outcome."""
         with self._lock:
             self._cluster = cluster
+        # membership may have changed since the held copies were pushed: a
+        # survivor whose ring partner died would otherwise keep exactly one
+        # alive copy of its container until the next commit
+        try:
+            self.repair(cluster)
+        except Exception:  # noqa: BLE001 — repair is best-effort redundancy
+            pass
 
     def note_commit(self, step_dir) -> None:
         """``CheckpointWriter.on_commit`` hook.  Attached: replicate now,
@@ -185,6 +192,23 @@ class ReplicaTier:
             owned[r] = Container(step, r, ckpt_io.read_rank_index(rdir),
                                  data, (rdir / "state.json").read_text(),
                                  container_sha(data))
+        # dead-slot inheritance: after a live shrink the slot space still
+        # contains departed ranks whose committed containers nobody's RAM
+        # would otherwise hold — their ring successor reads them off the
+        # fresh commit so the RAM image stays complete over range(ws)
+        inherited: dict[int, list[Container]] = {}
+        for r in range(ws):
+            if r in alive:
+                continue
+            h = ring_partner(r, alive)
+            rdir = step_dir / f"rank{r:05d}"
+            if h is None or not rdir.is_dir():
+                continue
+            data = (rdir / ckpt_io.BIN_NAME).read_bytes()
+            inherited.setdefault(h, []).append(
+                Container(step, r, ckpt_io.read_rank_index(rdir), data,
+                          (rdir / "state.json").read_text(),
+                          container_sha(data)))
         # send first, then receive: fabric sends enqueue without blocking,
         # and consuming each push before returning keeps replica traffic
         # out of any later drain's in-flight accounting
@@ -212,6 +236,9 @@ class ReplicaTier:
                 self.stores.setdefault(r, {})[(step, r)] = c
             for p, c in received.items():
                 self.stores.setdefault(p, {})[(step, c.rank)] = c
+            for h, cs in inherited.items():
+                for c in cs:
+                    self.stores.setdefault(h, {})[(step, c.rank)] = c
             self.manifests[step] = manifest
             self.newest_step = step
             # retention: the newest step plus every base step its delta
@@ -265,6 +292,54 @@ class ReplicaTier:
                     f"RAM replica step {cstep} rank {crank}: checksum "
                     f"mismatch (in-memory copy corrupt)")
         return TierImage(step, manifest, picked)
+
+    def repair(self, cluster) -> dict:
+        """Re-pair the replica ring after a MEMBERSHIP CHANGE (satellite of
+        the live-rescale engine): any held container that survives in only
+        ONE alive rank's memory — because its old ring partner died or
+        departed — is re-pushed to the holder's CURRENT ring partner over
+        the interposed p2p plane, so every container is again redundant
+        without waiting for the next commit.  Containers with zero alive
+        copies are unrecoverable here (that is the disk tier's job).
+        Returns ``{"repushed": n, "single_copy": m}``."""
+        t0 = time.perf_counter()
+        with self._lock:
+            steps = sorted(self.manifests)
+            alive = sorted(cluster.survivors())
+            holders = {r: dict(self.stores.get(r, {})) for r in alive}
+        repushed = single = 0
+        if len(alive) < 2:
+            return {"repushed": 0,
+                    "single_copy": sum(len(s) for s in holders.values())}
+        for step in steps:
+            keys = sorted({k for st in holders.values()
+                           for k in st if k[0] == step})
+            for key in keys:
+                copies = [h for h in alive if key in holders[h]]
+                if len(copies) >= 2:
+                    continue
+                single += 1
+                src = copies[0]
+                dst = ring_partner(src, alive)
+                c = holders[src][key]
+                m, pm = cluster.mana(src), cluster.mana(dst)
+                m.backend.send(dst, coll_tag("replica",
+                                             handle_vid(m.comm_world())),
+                               {"step": c.step, "rank": c.rank,
+                                "index": c.index, "data": c.data,
+                                "state": c.state, "sha": c.sha})
+                msg = pm._recv_any(src, coll_tag("replica",
+                                                 handle_vid(pm.comm_world())))
+                rc = Container(msg["step"], msg["rank"], msg["index"],
+                               msg["data"], msg["state"], msg["sha"])
+                holders[dst][key] = rc
+                with self._lock:
+                    self.stores.setdefault(dst, {})[key] = rc
+                self.stats["pushed_bytes"] += len(rc.data)
+                repushed += 1
+        self.stats["push_ms_total"] += round(
+            (time.perf_counter() - t0) * 1e3, 3)
+        return {"repushed": repushed, "single_copy": single}
 
     def reset(self) -> None:
         """Drop everything — called after a recovery: the restored world's

@@ -193,6 +193,57 @@ class Cluster:
         return [i for i, r in enumerate(self.ranks)
                 if r.alive and not r.halted]
 
+    # -- live membership change (no restart; see repro.core.elastic) -------
+    def resize(self, new_world) -> dict:
+        """Re-point every member's COMM_WORLD at ``new_world`` — a
+        possibly-sparse ordered rank-id list — WITHOUT a restart.  Survivor
+        rank ids are stable; departed slots simply leave the member list
+        (they stay in ``self.ranks`` as dead slots so stats/images keyed by
+        rank id never re-attach to the wrong rank).  Returns per-rank
+        repoint stats keyed by rank id.
+
+        This is the coordinator half of the live-rescale protocol: the
+        drain/handoff choreography around it lives in
+        :mod:`repro.core.elastic`."""
+        from repro.core import restore
+        members = list(new_world)
+        stats = {}
+        for i, r in enumerate(self.ranks):
+            if i in members:
+                if not (r.alive and not r.halted):
+                    raise ValueError(f"rank {i} is dead but listed in the "
+                                     f"new world {members}")
+                stats[i] = restore.repoint_world(r.mana, members)
+            elif r.alive and not r.halted:
+                # leaving gracefully: slot becomes a dead slot
+                r.alive = False
+        self.events.append(("resized", tuple(members), time.time()))
+        return stats
+
+    def add_rank(self) -> Mana:
+        """Grow the world by one slot: extend the fabric's address space,
+        build a fresh ``Mana`` on the new rank id, and append its slot.
+        The new rank is NOT yet a world member — membership changes only
+        via :meth:`resize` (after the join handshake completes), so a
+        joiner that stalls mid-handshake never poisons the running world."""
+        new_rank = len(self.ranks)
+        self.fabric.resize(new_rank + 1)
+        self.world_size = new_rank + 1
+        if self.writer is not None:
+            self.writer.world_size = new_rank + 1
+        m = Mana(self.backend_name, self.fabric, new_rank, new_rank + 1,
+                 translation=self.translation)
+        self.ranks.append(RankState(m))
+        self.events.append(("rank_added", new_rank, time.time()))
+        return m
+
+    def remove_rank(self, rank: int):
+        """Graceful departure: the slot is marked dead and its fabric inbox
+        retired (later sends to it raise the typed ``DepartedRankError``)."""
+        self.ranks[rank].alive = False
+        self.fabric.retire(rank)
+        self.events.append(("departed", rank, time.time()))
+
     # -- transparent checkpoint --------------------------------------------
     def checkpoint(self, step: int, arrays, mesh, extra_rank_state=None):
         """Drain -> barrier -> pipelined snapshot -> async write.  Returns
@@ -223,7 +274,8 @@ class Cluster:
                 st.update(extra_rank_state(i))
             rank_states[i] = st
         req = self.writer.checkpoint(step, arrays, mesh, rank_states,
-                                     extra_meta={"backend": self.backend_name},
+                                     extra_meta={"backend": self.backend_name,
+                                                 "members": self.survivors()},
                                      defer_release=True)
         try:
             req.timings["drain_ms"] = round(drain_ms, 3)
@@ -303,8 +355,12 @@ class Cluster:
             # mutates it in place)
             t2 = time.perf_counter()
             pairs = []
+            # post-rescale manifests carry the (possibly sparse) member
+            # list: only member slots hold real images, so the wrap-around
+            # maps into members, not range(world_size)
+            members = manifest.get("members") or list(range(old_ws))
             for r in range(ws):
-                snap = source.rank_state(r % old_ws)["mana"]
+                snap = source.rank_state(members[r % len(members)])["mana"]
                 m = Mana(backend, fresh.fabric, r, ws,
                          translation=snap["translation"])
                 pairs.append((m, snap))

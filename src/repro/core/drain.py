@@ -144,6 +144,82 @@ def drain_rank(mana, timeout: float = DEFAULT_TIMEOUT, *,
     return stats
 
 
+def drain_peer(mana, peer: int, timeout: float = DEFAULT_TIMEOUT, *,
+               backoff: float = DEFAULT_BACKOFF,
+               deadline: float | None = None) -> dict:
+    """SCOPED quiesce: drain only the traffic between ``mana`` and one
+    ``peer`` — the per-rank drain a live membership change needs.  A full
+    ``drain_world`` stops every rank; a graceful leave must only guarantee
+    that nothing is in flight TO OR FROM the leaving rank, so survivors
+    keep computing while the departing edge quiesces.
+
+    Phase 1 completes this rank's outstanding requests addressed to
+    ``peer`` (batched test + backoff, same discipline as the global drain);
+    phase 2 probes and buffers every in-flight message FROM ``peer`` into
+    ``pending_messages`` (redelivery via the buffered receive, exactly as
+    at checkpoint time).  Raises the same typed :class:`DrainStallError`
+    on a blown deadline so supervisors escalate identically."""
+    t0 = time.time()
+    if deadline is None:
+        deadline = t0 + timeout
+    failpoint("drain.peer", rank=mana.rank, peer=peer)
+    stats = {"rank": mana.rank, "peer": peer, "messages_buffered": 0,
+             "coll_messages_buffered": 0,
+             "requests_completed": 0, "test_rounds": 0, "waited_s": 0.0}
+
+    def _to_peer(d) -> bool:
+        m = d.meta
+        return peer in (m.get("peer"), m.get("dst"), m.get("src"))
+
+    p1_deadline = t0 + (deadline - t0) / 2
+    pending = [d for d in mana.vids.iter_kind(Kind.REQUEST)
+               if not d.state.get("done") and _to_peer(d)]
+    delay = backoff
+    while pending:
+        flags = mana.backend.test_all([d.phys for d in pending])
+        stats["test_rounds"] += 1
+        still = []
+        for d, done in zip(pending, flags):
+            if done:
+                d.state["done"] = True
+                stats["requests_completed"] += 1
+            else:
+                still.append(d)
+        pending = still
+        if not pending:
+            break
+        if time.time() >= p1_deadline:
+            stats["waited_s"] = round(time.time() - t0, 6)
+            raise DrainStallError(
+                mana.rank, stats,
+                f"rank {mana.rank}: {len(pending)} request(s) to peer "
+                f"{peer} refused to complete within the "
+                f"{p1_deadline - t0:.3f}s budget; partial drain: {stats}")
+        time.sleep(delay)
+        delay = min(delay * 2, _BACKOFF_CAP)
+
+    while True:
+        probe = mana.backend.iprobe(src=peer)
+        if probe is None:
+            break
+        src, tag = probe
+        payload = mana.backend.recv(src, tag)
+        mana.pending_messages.append((src, tag, payload))
+        stats["messages_buffered"] += 1
+        if tag >= COLL_TAG_MIN:
+            stats["coll_messages_buffered"] += 1
+        if time.time() >= deadline:
+            stats["waited_s"] = round(time.time() - t0, 6)
+            raise DrainStallError(
+                mana.rank, stats,
+                f"rank {mana.rank}: peer {peer} traffic refused to drain "
+                f"within the {deadline - t0:.3f}s budget; "
+                f"partial drain: {stats}")
+
+    stats["waited_s"] = round(time.time() - t0, 6)
+    return stats
+
+
 def _drain_rank_once(mana) -> tuple:
     """One nonblocking quiesce sweep over a rank: a single batched test of
     its outstanding requests plus a full (never-waiting) message drain.

@@ -57,6 +57,15 @@ scheduled step and simulates one production failure class:
                   failpoint one-shot: the first restore attempt dies
                   mid-rebind, exercising the ladder's bounded per-rung
                   retry
+  preempt_notice  SIGTERM-style preemption notice with a grace deadline:
+                  the victim is still ALIVE and must leave gracefully —
+                  the supervisor's rescale rung drains its edge, hands
+                  its state to survivors, and the world shrinks without
+                  any restore
+  join_timeout    arms the ``elastic.join.ready`` failpoint one-shot: the
+                  next joining rank stalls mid-handshake and must be
+                  FENCED without poisoning the running world (membership
+                  only changes after the handshake completes)
   ==============  ========================================================
 
 Nothing here imports the checkpoint/restore stack — injection sites call in,
@@ -72,7 +81,8 @@ from pathlib import Path
 
 FAULT_KINDS = ("kill_rank", "stall_drain", "corrupt_shard", "truncate_shard",
                "drop_token", "snapshot_error", "partner_death",
-               "corrupt_replica", "double_fault", "restore_error")
+               "corrupt_replica", "double_fault", "restore_error",
+               "preempt_notice", "join_timeout")
 
 #: fault -> the checkpoint-cycle phase where it lands (the chaos matrix
 #: sweeps (kind, phase, backend family); kill/drop can also fire at the
@@ -82,12 +92,27 @@ DEFAULT_PHASE = {"kill_rank": "compute", "stall_drain": "drain",
                  "corrupt_shard": "commit", "truncate_shard": "commit",
                  "drop_token": "compute", "snapshot_error": "snapshot",
                  "partner_death": "compute", "corrupt_replica": "compute",
-                 "double_fault": "compute", "restore_error": "compute"}
+                 "double_fault": "compute", "restore_error": "compute",
+                 "preempt_notice": "compute", "join_timeout": "compute"}
 
 
 class InjectedFault(RuntimeError):
     """Raised by failpoint handlers that inject an error (distinguishable
     from organic failures in logs; the supervisor treats both the same)."""
+
+
+class PreemptNotice(Exception):
+    """A rank received a preemption notice (SIGTERM from the scheduler, a
+    spot-instance reclaim, a drain decision): the lower half is STILL ALIVE
+    and has ``grace_s`` seconds to leave gracefully.  The supervisor's
+    rescale rung handles this class without fencing first — the victim
+    participates in its own departure (scoped drain + state handoff)."""
+
+    def __init__(self, rank: int, grace_s: float = 5.0):
+        self.rank = rank
+        self.grace_s = grace_s
+        super().__init__(f"rank {rank}: preemption notice "
+                         f"(grace {grace_s:.1f}s)")
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +174,7 @@ class FaultSpec:
     rank: int | None = None      # victim rank (None -> highest alive rank)
     phase: str | None = None     # compute | drain | snapshot | commit
     target: str = "shards"       # corrupt/truncate target: shards | index
+    grace_s: float = 5.0         # preempt_notice grace deadline (seconds)
     fired: bool = False
 
     _PHASES = ("compute", "commit", "drain", "snapshot", "checkpoint")
@@ -169,7 +195,7 @@ class FaultSpec:
     def to_dict(self) -> dict:
         return {"kind": self.kind, "at_step": self.at_step,
                 "rank": self.rank, "phase": self.phase,
-                "target": self.target}
+                "target": self.target, "grace_s": self.grace_s}
 
 
 @dataclass
@@ -277,9 +303,11 @@ class FaultInjector:
             if spec.fired or step < spec.at_step or spec.phase not in phases:
                 continue
             spec.fired = True
-            self._fire(spec, step, cluster)
+            # record BEFORE firing: some kinds (preempt_notice) fire by
+            # raising, and the record must survive the propagating fault
             self.fired.append((step, spec))
             out.append(spec)
+            self._fire(spec, step, cluster)
         return out
 
     def on_step(self, step: int, cluster) -> list:
@@ -508,6 +536,32 @@ class FaultInjector:
             cl.halt_rank(second)
             raise RankDeadError(second, f"rank {second}: died mid-recovery "
                                         f"(injected double fault)")
+
+        arm(site, handler)
+        self._armed.append((site, handler))
+
+    def _fire_preempt_notice(self, spec, step, cluster):
+        """Deliver a preemption notice for the victim: the victim stays
+        ALIVE (this is the whole point — graceful leave needs a live lower
+        half to drain and hand off through) and the notice propagates as a
+        :class:`PreemptNotice` out of the injector, which the supervisor
+        classifies and routes to its rescale rung."""
+        victim = spec.rank = self._victim(spec, cluster)
+        cluster.events.append(("fault_injected", spec.kind, victim, step))
+        raise PreemptNotice(victim, spec.grace_s)
+
+    def _fire_join_timeout(self, spec, step, cluster):
+        """Arm the ``elastic.join.ready`` failpoint one-shot: the NEXT
+        joining rank stalls mid-handshake.  ``elastic.join`` must fence the
+        stalled joiner (its slot never becomes a member) and surface a
+        typed ``JoinTimeoutError`` — the running world continues
+        untouched."""
+        site = "elastic.join.ready"
+
+        def handler(name, ctx):
+            disarm(site, handler)
+            raise InjectedFault(f"injected join stall: rank "
+                                f"{ctx.get('rank')} wedged mid-handshake")
 
         arm(site, handler)
         self._armed.append((site, handler))

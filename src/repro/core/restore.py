@@ -249,6 +249,55 @@ def _repoint_constants(mana, table: VidTable) -> None:
             mana.op_handles[d.meta["name"]] = make_handle(d.vid)
 
 
+def repoint_world(mana, members) -> dict:
+    """LIVE membership change (no restart): re-aim one rank's COMM_WORLD at
+    ``members`` — a possibly-sparse, ordered rank-id list (survivors keep
+    their ids; the world is a membership list, not a dense range).
+
+    Three moves, all upper-half except the middle one:
+
+      1. free the old world COMM descriptor (its ggid hashes the OLD member
+         list, so it can never be confused with the new one);
+      2. rebuild the lower half's world communicator over ``members``
+         (``Backend.resize_world`` — works for every flavor);
+      3. register a fresh world-axis COMM descriptor bound to the new
+         physical handle and re-aim the constant accessors through the
+         existing :func:`_repoint_constants`.
+
+    Because the new vid is a ggid of the identical member list, every
+    member computes the SAME world vid without coordination — the property
+    live collectives rely on.  Buffered internal messages whose tag embeds
+    the old world vid are purged (their collective round died with the old
+    membership); buffered USER p2p traffic is untouched — redelivery of a
+    departed rank's user traffic is the elastic layer's job, not this one's.
+    """
+    from repro.core.callspec import COLL_TAG_MIN, handle_vid
+    from repro.core.descriptors import comm_desc
+    members = list(members)
+    old_vid = handle_vid(mana.world_handle)
+    mana.vids.free(old_vid)
+    # vid coherence across DIFFERENT insert histories: a joiner's init
+    # world may already be this exact member tuple (bumping its probe
+    # counter), so reset the counter and let slot-occupancy probing alone
+    # pick the seq — a pure function of live table content, which is
+    # symmetric across ranks under MPI's collective-creation discipline
+    mana.vids._ggid_seq.pop((Kind.COMM, tuple(sorted(members))), None)
+    phys = mana.backend.resize_world(members)
+    mana.world_size = len(members)
+    d = comm_desc(members, axis_name="world", strategy=Strategy.SERIALIZE)
+    new_vid = mana._register(d, phys)
+    _repoint_constants(mana, mana.vids)
+    kept, purged = [], 0
+    for s, t, payload in mana.pending_messages:
+        if t >= COLL_TAG_MIN and (t & 0xFFFFFFFF) == old_vid:
+            purged += 1
+            continue
+        kept.append((s, t, payload))
+    mana.pending_messages = kept
+    return {"old_vid": old_vid, "new_vid": new_vid,
+            "members": members, "purged_internal": purged}
+
+
 def _bind_one(rp: _RebindPlan, vid: int) -> None:
     """Bind one descriptor's physical handle.  Creation calls serialize on
     the rank's lock — lower halves are not thread-safe — but run

@@ -22,6 +22,14 @@ NERSC production deployment of MANA grew around the mechanism:
     the faulty rank if the failure class implies a dead node, then walk the
     tiers newest-first —
 
+      0. ``rescale``    live shrink (``elastic.shrink``): drain just the
+                        victim's traffic, hand its RAM-tier shards and
+                        pipeline cursor to its ring successor, re-point
+                        ``COMM_WORLD`` on the survivors, and CONTINUE at
+                        the same step — no rewind, no image read.  Tried
+                        BEFORE fencing (a preempted rank must stay alive
+                        for its own graceful handoff); falls through to
+                        the restore ladder when the world cannot shrink;
       1. ``ram``        the peer-replicated in-memory image
                         (``ckpt_tiers.ReplicaTier``), checksum-verified,
                         only when it is at least as new as the newest
@@ -48,8 +56,13 @@ Failure classes and their recovery policy:
   ==============  =========================  ============================
   class           typical cause              world after recovery
   ==============  =========================  ============================
-  rank_dead       node crash / kill_rank     survivors (shrinks)
+  rank_dead       node crash / kill_rank     survivors (live shrink if the
+                                             rescale rung serves, else
+                                             fence + restore)
   drain_stall     wedged lower half          survivors (stall rank fenced)
+  preempt_notice  SIGTERM / scheduler        survivors (graceful leave:
+                  eviction warning           drain + handoff + shrink
+                                             within the grace window)
   lost_token      dropped session token      unchanged (lower halves
                                              rebuilt, tokens re-minted)
   snapshot_error  fault inside the blocking  unchanged
@@ -67,16 +80,25 @@ from dataclasses import dataclass, field, replace
 
 from repro.core.ckpt_tiers import TierVerifyError
 from repro.core.drain import DrainStallError
-from repro.core.faults import InjectedFault, RankDeadError, failpoint
+from repro.core.faults import (InjectedFault, PreemptNotice, RankDeadError,
+                               failpoint)
 from repro.core.restore import (completed_steps, load_manifest,
                                 verify_checkpoint)
 
 FAILURE_CLASSES = ("rank_dead", "drain_stall", "lost_token",
-                   "snapshot_error", "ckpt_corrupt", "unknown")
+                   "snapshot_error", "ckpt_corrupt", "preempt_notice",
+                   "unknown")
 
 #: failure classes whose victim rank is fenced (treated as a dead node), so
-#: recovery relaunches on the shrunken surviving world
-_FENCING = {"rank_dead", "drain_stall"}
+#: recovery relaunches on the shrunken surviving world.  preempt_notice is
+#: fenced ONLY after the rescale rung fails — a preempted rank is still
+#: alive and must stay usable for its own graceful departure
+_FENCING = {"rank_dead", "drain_stall", "preempt_notice"}
+
+#: failure classes the rescale rung (live shrink, no restore) may serve
+#: before the restore ladder is consulted — a membership problem is cheaper
+#: to RESIZE AROUND than to restore from
+_RESCALABLE = {"preempt_notice", "rank_dead", "drain_stall"}
 
 
 @dataclass(frozen=True)
@@ -97,6 +119,16 @@ class SupervisorConfig:
     level_retries: int = 2          # restore attempts per ladder rung
     level_timeout_s: float = 30.0   # wall budget per rung before escalating
     absorb_budget: int = 4          # mid-recovery faults absorbed per incident
+    rescale: str = "preempt"        # rescale-rung policy: "off" (never),
+                                    # "preempt" (graceful leaves only —
+                                    # rank_dead keeps restore semantics),
+                                    # "all" (shrink-and-continue on any
+                                    # membership failure)
+
+    def rescale_classes(self) -> set:
+        """Failure classes the rescale rung may serve under this policy."""
+        return {"off": set(), "preempt": {"preempt_notice"},
+                "all": set(_RESCALABLE)}[self.rescale]
 
 
 class TierRejected(RuntimeError):
@@ -127,6 +159,8 @@ class RecoveryFailed(RuntimeError):
 
 def classify_failure(exc: BaseException) -> tuple:
     """Map a caught failure to ``(failure_class, victim_rank | None)``."""
+    if isinstance(exc, PreemptNotice):
+        return "preempt_notice", exc.rank
     if isinstance(exc, DrainStallError):
         return "drain_stall", exc.rank
     if isinstance(exc, RankDeadError):
@@ -165,8 +199,8 @@ class Incident:
     world_after: int
     timings: dict = field(default_factory=dict)   # {detect,classify,
                                                   #  restore,resume,total}_ms
-    tier: str | None = None      # ladder rung that served the restore
-                                 # ("ram" | "disk" | "disk_chain")
+    tier: str | None = None      # ladder rung that served the recovery
+                                 # ("rescale" | "ram" | "disk" | "disk_chain")
     ladder: list = field(default_factory=list)    # per-rung transcript
     absorbed: list = field(default_factory=list)  # faults folded in
                                                   # mid-recovery
@@ -425,6 +459,95 @@ class Supervisor:
                 raise TierRejected(f"{x.name}: {problems[0]}{more}")
         return d
 
+    def _try_rescale(self, exc, kind, rank, attempt, detect_ms, classify_ms,
+                     world_before) -> tuple:
+        """The ladder's TOP rung: shrink the live world around the victim
+        instead of restoring.  No rewind, no image read — downtime is one
+        scoped drain plus one COMM_WORLD re-point, so it beats every
+        restore tier whenever the surviving world can continue.  Same
+        per-rung policy as the other rungs (``level_retries`` /
+        ``level_timeout_s`` / backoff).  Returns ``(incident, log)``;
+        ``incident=None`` means fall through to the restore ladder, whose
+        incident inherits ``log`` so the rescale attempts are never lost
+        from the transcript."""
+        from repro.core import elastic
+        w = self.workload
+        cfg = self.config
+        survivors_after = [r for r in self.cluster.survivors() if r != rank]
+        if not survivors_after:
+            return None, [{"level": "rescale", "skipped": "last_member"}]
+        # a preemption notice carries its grace window; dead-rank shrinks
+        # get a tight budget — a wedged drain must fall through quickly
+        grace = getattr(exc, "grace_s", None)
+        drain_timeout = min(grace, 5.0) if grace else 2.0
+        cursor = None
+        prep = getattr(w, "prepare_leave", None)
+        if prep is not None:
+            try:
+                cursor = prep(rank)
+            except Exception:  # noqa: BLE001 — cursor handoff is best-effort
+                cursor = None
+        t1 = time.perf_counter()
+        log: list[dict] = []
+        report = None
+        for level_try in range(1, cfg.level_retries + 1):
+            try:
+                failpoint("supervisor.pre_rescale", cluster=self.cluster,
+                          rank=rank, attempt=level_try)
+                report = elastic.shrink(self.cluster, rank, tier=self.tier,
+                                        cursor=cursor,
+                                        timeout=drain_timeout)
+                break
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except BaseException as le:  # noqa: BLE001
+                retryable = not isinstance(le, elastic.RescaleError)
+                log.append({"level": "rescale", "attempt": level_try,
+                            "error": f"{type(le).__name__}: {le}",
+                            "retryable": retryable})
+                if not retryable:
+                    break         # deterministic: the world cannot shrink
+                if time.perf_counter() - t1 > cfg.level_timeout_s:
+                    log.append({"level": "rescale",
+                                "skipped": "level_timeout"})
+                    break
+                if level_try < cfg.level_retries:
+                    self.backoff_s += self._sleep_backoff(level_try)
+        if report is None:
+            return None, log
+        hook = getattr(w, "rescale", None)
+        if hook is not None:
+            hook(report)
+        rescale_ms = (time.perf_counter() - t1) * 1e3
+        log.append({"level": "rescale", "served": True,
+                    "downtime_ms": report.downtime_ms,
+                    "members": list(report.members)})
+        incident = Incident(
+            kind=kind, rank=rank, step=w.step, resumed_step=w.step,
+            ckpt=None, error=str(exc), attempt=attempt,
+            world_before=world_before, world_after=len(report.members),
+            tier="rescale", ladder=log,
+            timings={"detect_ms": round(detect_ms, 3),
+                     "classify_ms": round(classify_ms, 3),
+                     "restore_ms": round(report.downtime_ms, 3),
+                     "resume_ms": round(
+                         max(0.0, rescale_ms - report.downtime_ms), 3),
+                     "total_ms": round(
+                         detect_ms + classify_ms + rescale_ms, 3)})
+        self.incidents.append(incident)
+        # the SAME cluster lives on (that is the whole point): no tier
+        # reset — the ring re-paired inside shrink — no writer re-hook,
+        # just fresh leases from the rescale point
+        self.detector.beat()
+        w.cluster.events.append(("incident", kind, rank, incident.step))
+        self._last_ok = time.perf_counter()
+        if self.verbose:
+            print(f"!! rescaled around rank {rank} (tier=rescale, "
+                  f"world {world_before}->{len(report.members)}) in "
+                  f"{report.downtime_ms:.1f}ms — no rewind, step {w.step} "
+                  f"continues", flush=True)
+        return incident, log
+
     def _recover(self, exc: BaseException, attempt: int) -> Incident:
         w = self.workload
         cfg = self.config
@@ -440,6 +563,20 @@ class Supervisor:
         kind, rank = classify_failure(exc)
         classify_ms = (time.perf_counter() - t0) * 1e3
         world_before = len(self.cluster.ranks)
+        # rescale rung: ABOVE the whole restore ladder.  A membership
+        # failure is cheaper to resize around — live shrink, no rewind, no
+        # image read — than to restore from any tier.  It runs BEFORE
+        # fencing because a preempted rank is still alive and must stay
+        # usable for its own graceful departure; only when the rung fails
+        # does the victim get fenced and the restore ladder walked.
+        rescale_log: list = []
+        if kind in self.config.rescale_classes() and rank is not None \
+                and 0 <= rank < len(self.cluster.ranks):
+            inc, rescale_log = self._try_rescale(
+                exc, kind, rank, attempt, detect_ms, classify_ms,
+                world_before)
+            if inc is not None:
+                return inc
         if kind in _FENCING and rank is not None \
                 and not self.cluster.ranks[rank].halted:
             self.cluster.halt_rank(rank)
@@ -461,7 +598,7 @@ class Supervisor:
                 print(f"!! abandoned in-flight checkpoint had failed: "
                       f"{drain_err}", flush=True)
         t1 = time.perf_counter()
-        ladder_log: list[dict] = []
+        ladder_log: list[dict] = list(rescale_log)
         absorbed: list[dict] = []
         fenced = {rank} if rank is not None else set()
         budget = cfg.absorb_budget

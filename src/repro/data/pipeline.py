@@ -98,6 +98,24 @@ class DataPipeline:
                    seed=state["seed"], prefetch=prefetch, mana=mana,
                    start_index=state["next_index"])
 
+    def reattach(self, mana) -> dict:
+        """Online reshard: move the pipeline onto another rank's Mana after a
+        live membership change (the owning rank departed, or a joiner takes
+        over a slice).  Stops the producer, drops prefetched-but-unconsumed
+        batches (pure functions of the counter — nothing is lost), and
+        restarts production from ``_next_consume`` on the new Mana, so the
+        determinism contract (batch #i from (seed, i)) survives the move."""
+        self.stop()
+        cursor = self._next_consume
+        self.mana = mana
+        self._next_produce = cursor
+        self._requests = {}
+        self._q = queue.Queue(maxsize=max(self.prefetch, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+        return {"next_index": cursor}
+
     def stop(self):
         self._stop.set()
         try:

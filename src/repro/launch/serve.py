@@ -153,6 +153,19 @@ class Server:
         world and rewind decode to the snapshot position."""
         self.restore(ckpt_dir, new_world_size=new_world_size, rebuild=True)
 
+    # -- live rescale (zero-downtime elasticity) -----------------------
+    def prepare_leave(self, rank):  # noqa: ARG002 — workload hook shape
+        """Supervisor hook before ``elastic.shrink``: a server has no data
+        pipeline cursor — decode state (caches, pos, seed token) lives in
+        the upper half and is untouched by a live shrink."""
+        return None
+
+    def rescale(self, report):  # noqa: ARG002 — workload hook shape
+        """Supervisor hook after a live rescale: decode continues at the
+        SAME position with the SAME caches — the membership change never
+        touches arrays, so no token is re-minted and none is lost."""
+        return None
+
     def resume_latest(self, *, new_backend=None):
         """Resume-from-latest with delta-chain resolution; returns the
         checkpoint dir or ``None`` when nothing restorable exists."""
@@ -197,6 +210,9 @@ def main():
                     help="supervisor backoff floor in seconds (0 disables)")
     ap.add_argument("--backoff-ceiling", type=float, default=2.0,
                     help="supervisor backoff ceiling in seconds")
+    ap.add_argument("--rescale", default="preempt",
+                    choices=["off", "preempt", "all"],
+                    help="rescale-rung policy (see train.py --rescale)")
     ap.add_argument("--ram-tier", action="store_true", default=True,
                     help="peer-replicate snapshots to partner RAM and try "
                          "that tier first on recovery (default)")
@@ -205,6 +221,8 @@ def main():
     args = ap.parse_args()
     cfg = smoke_config(args.arch)
     srv = Server(cfg, backend=args.backend, ckpt_dir=args.ckpt_dir)
+    from repro.launch.train import install_preempt_handler
+    install_preempt_handler(srv)
     rng = np.random.default_rng(0)
     shape = (args.batch, cfg.n_codebooks, args.prompt_len) \
         if cfg.n_codebooks > 1 else (args.batch, args.prompt_len)
@@ -251,7 +269,8 @@ def main():
         srv.start_decode(first)
         t0 = time.time()
         sup_cfg = SupervisorConfig(backoff_floor_s=args.backoff_floor,
-                                   backoff_ceiling_s=args.backoff_ceiling)
+                                   backoff_ceiling_s=args.backoff_ceiling,
+                                   rescale=args.rescale)
         with FaultInjector(plan) as injector:
             sup = Supervisor(srv, injector=injector, config=sup_cfg,
                              tier=ReplicaTier() if args.ram_tier else None)

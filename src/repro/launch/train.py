@@ -195,6 +195,34 @@ class Trainer:
                                             mana=self.cluster.mana(0))
         return manifest
 
+    # -- live rescale (zero-downtime elasticity) -----------------------
+    def prepare_leave(self, rank):
+        """Supervisor hook, called BEFORE ``elastic.shrink``: if the
+        departing rank owns the data pipeline, freeze it and return its
+        cursor so the shrink protocol hands it to the inheritor.  The
+        producer must stop FIRST — it mints prefetch requests on the
+        leaving Mana continuously, which would keep the scoped drain from
+        ever reaching quiesce."""
+        if self.pipeline.mana is not None \
+                and self.pipeline.mana.rank == rank:
+            cursor = self.pipeline.state()
+            self.pipeline.stop()
+            return cursor
+        return None
+
+    def rescale(self, report):
+        """Supervisor hook, called AFTER a successful live rescale: re-home
+        the data pipeline if its owning rank departed (online reshard — the
+        cursor moves, no data files reposition), nothing else.  Params and
+        optimizer state are untouched by design: a live shrink never
+        restores arrays, which is what makes survivor parameters
+        byte-identical across the membership change."""
+        owner = self.pipeline.mana.rank if self.pipeline.mana is not None \
+            else None
+        members = list(report.members)
+        if owner is None or owner not in members:
+            self.pipeline.reattach(self.cluster.mana(members[0]))
+
     def recover(self, ckpt_dir, *, new_world_size=None):
         """Supervisor entry point: elastic restore onto the (possibly
         shrunken) surviving world.  Same-size recovery keeps the mesh and
@@ -215,6 +243,29 @@ class Trainer:
         self.restore(ck, new_world_size=new_world_size,
                      new_backend=new_backend)
         return ck
+
+
+def install_preempt_handler(workload):
+    """SIGTERM = scheduler preemption warning (SLURM ``--signal``, k8s
+    ``preStop``): convert it into a :class:`PreemptNotice` raised in the
+    main thread, so the supervisor's rescale rung performs a GRACEFUL
+    leave — scoped drain, state handoff, live shrink — inside the grace
+    window instead of the process dying mid-step."""
+    import signal
+
+    from repro.core.faults import PreemptNotice
+
+    def on_sigterm(signum, frame):  # noqa: ARG001 — signal API shape
+        alive = workload.cluster.survivors()
+        # evict the highest surviving rank; rank 0 (pipeline/lease owner)
+        # leaves only when it is the last one standing
+        victim = alive[-1] if len(alive) > 1 else alive[0]
+        raise PreemptNotice(victim, grace_s=5.0)
+
+    try:
+        signal.signal(signal.SIGTERM, on_sigterm)
+    except ValueError:
+        pass  # not the main thread (embedded/test use) — handler skipped
 
 
 def main():
@@ -290,6 +341,11 @@ def main():
     ap.add_argument("--backoff-ceiling", type=float, default=2.0,
                     help="supervisor backoff ceiling in seconds: the cap "
                          "the exponential delay saturates at")
+    ap.add_argument("--rescale", default="preempt",
+                    choices=["off", "preempt", "all"],
+                    help="rescale-rung policy: live shrink-and-continue on "
+                         "preemption notices only (default), on any "
+                         "membership failure (all), or never (off)")
     ap.add_argument("--ram-tier", action="store_true", default=True,
                     help="replicate each committed snapshot to partner "
                          "ranks' RAM; recovery tries this tier before disk "
@@ -330,6 +386,7 @@ def main():
             n_steps = max(args.steps - tr.step, 0)
         else:
             print("no resumable checkpoint found — cold start", flush=True)
+    install_preempt_handler(tr)
     injector = None
     try:
         if args.supervise or args.fault_plan:
@@ -342,7 +399,8 @@ def main():
             sup_cfg = SupervisorConfig(lease_s=args.lease_s,
                                        max_retries=args.max_retries,
                                        backoff_floor_s=args.backoff_floor,
-                                       backoff_ceiling_s=args.backoff_ceiling)
+                                       backoff_ceiling_s=args.backoff_ceiling,
+                                       rescale=args.rescale)
             sup = Supervisor(tr, injector=injector, config=sup_cfg,
                              tier=ReplicaTier() if args.ram_tier else None)
             incidents = sup.run(n_steps, ckpt_every=args.ckpt_every)
@@ -355,12 +413,32 @@ def main():
                       f"restore={t['restore_ms']:.1f}ms "
                       f"resume={t['resume_ms']:.1f}ms", flush=True)
             print(f"supervised run done: {len(incidents)} incident(s), "
-                  f"world={len(tr.cluster.ranks)}", flush=True)
+                  f"world={len(tr.cluster.survivors())}", flush=True)
         else:
-            tr.run(n_steps, ckpt_every=args.ckpt_every,
-                   kill_rank_at=args.kill_rank_at,
-                   new_world_size_on_restart=args.restart_world_size,
-                   new_backend_on_restart=args.restart_backend)
+            from repro.core.faults import PreemptNotice
+            target = tr.step + n_steps
+            kill_at = args.kill_rank_at
+            while tr.step < target:
+                try:
+                    tr.run(target - tr.step, ckpt_every=args.ckpt_every,
+                           kill_rank_at=kill_at,
+                           new_world_size_on_restart=args.restart_world_size,
+                           new_backend_on_restart=args.restart_backend)
+                except PreemptNotice as pn:
+                    # unsupervised graceful leave: shrink live and keep
+                    # training on the survivors — no restart, no rewind
+                    from repro.core import elastic
+                    rep = elastic.shrink(tr.cluster, pn.rank,
+                                         cursor=tr.prepare_leave(pn.rank),
+                                         timeout=pn.grace_s)
+                    tr.rescale(rep)
+                    print(f"!! preempted rank {pn.rank}: live shrink to "
+                          f"world {len(rep.members)} in "
+                          f"{rep.downtime_ms:.1f}ms — continuing at step "
+                          f"{tr.step}", flush=True)
+                    kill_at = None
+                else:
+                    break
     finally:
         if injector is not None:
             injector.close()

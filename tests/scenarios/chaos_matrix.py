@@ -19,7 +19,14 @@ also surface through collective calls — then asserts:
     (``Incident.tier``): a plain rank kill must be served from peer RAM,
     partner double-death and in-memory rot must escalate down the ladder
     to disk, and a second fault mid-recovery must be absorbed into the
-    incident — byte-identical in every case.
+    incident — byte-identical in every case;
+  * rescale cells (``preempt_notice``) assert the LIVE path: the rescale
+    rung served the incident (no checkpoint read, no step rewound), the
+    world shrank N->N-1 with params still byte-identical, and a spare then
+    joins the shrunken world back to N — digest-verified slice on the RAM
+    tier — and the grown world takes a step.  A serve-workload variant
+    asserts the decode stream stays gap- and duplicate-free across both
+    membership changes.
 
 Modes:
   --full    every valid (kind, phase, tier) combo x every backend family
@@ -78,6 +85,11 @@ KIND_PHASES = [
     ("corrupt_replica", "compute", "ram"),
     ("double_fault", "compute", "ram"),
     ("restore_error", "compute", "ram"),
+    # rescale cells: a preemption notice routes to the supervisor's
+    # rescale rung (live shrink N->N-1, no rewind) on both tiers; the
+    # cell then grows the world back to N via a live join
+    ("preempt_notice", "compute", "ram"),
+    ("preempt_notice", "compute", "disk"),
 ]
 
 #: failure class each cell's first incident must be classified as
@@ -85,7 +97,8 @@ EXPECT = {"kill_rank": "rank_dead", "stall_drain": "drain_stall",
           "snapshot_error": "snapshot_error", "corrupt_shard": "rank_dead",
           "truncate_shard": "rank_dead", "drop_token": "lost_token",
           "partner_death": "rank_dead", "corrupt_replica": "rank_dead",
-          "double_fault": "rank_dead", "restore_error": "rank_dead"}
+          "double_fault": "rank_dead", "restore_error": "rank_dead",
+          "preempt_notice": "preempt_notice"}
 
 #: fault kinds whose recovery must land on the checkpoint BEFORE the newest
 #: (the newest was poisoned; digest verification must reject it)
@@ -96,10 +109,11 @@ FALLBACK_KINDS = {"corrupt_shard", "truncate_shard"}
 #: tier depend on which rank died mid-recovery)
 TIER_EXPECT = {"kill_rank": "ram", "partner_death": "disk",
                "corrupt_replica": "disk", "restore_error": "ram",
-               "double_fault": None}
+               "double_fault": None, "preempt_notice": "rescale"}
 
-#: kinds that kill two ranks need a world big enough to leave a quorum
-WORLD_FOR = {"partner_death": 4, "double_fault": 4}
+#: kinds that kill two ranks need a world big enough to leave a quorum;
+#: rescale cells shrink AND grow, so they start from a 4-wide world too
+WORLD_FOR = {"partner_death": 4, "double_fault": 4, "preempt_notice": 4}
 
 
 def family_reps() -> dict:
@@ -122,6 +136,10 @@ def build_plan(kind: str, phase: str) -> FaultPlan:
         # rung must fail checksum verification and escalate to disk
         return FaultPlan([FaultSpec(kind, at_step=7, rank=0),
                           FaultSpec("kill_rank", at_step=8, rank=0)])
+    if kind == "preempt_notice":
+        # graceful leave mid-compute: the victim stays alive so the
+        # rescale rung can drain and hand off through its lower half
+        return FaultPlan([FaultSpec(kind, at_step=7, rank=3, grace_s=2.0)])
     if phase in ("drain", "snapshot"):
         # stop-the-world faults fire at a checkpoint boundary
         return FaultPlan([FaultSpec(kind, at_step=6, phase=phase)])
@@ -205,6 +223,15 @@ def run_cell(base: Path, kind: str, phase: str, backend: str, tier: str,
             assert inc.resumed_step < 2 * CKPT_EVERY, \
                 f"{name}: resumed from {inc.resumed_step}, not the " \
                 f"pre-poison checkpoint"
+        if kind == "preempt_notice":
+            # served LIVE by the rescale rung: no checkpoint was read, no
+            # step was rewound, and the world shrank by exactly one
+            assert inc.tier == "rescale", \
+                f"{name}: served by {inc.tier!r}, expected the rescale rung"
+            assert inc.resumed_step == inc.step and inc.ckpt is None, \
+                f"{name}: rescale rewound ({inc.resumed_step}, {inc.ckpt})"
+            assert inc.world_after == inc.world_before - 1, \
+                f"{name}: world {inc.world_before}->{inc.world_after}"
         if tier == "ram":
             want = TIER_EXPECT[kind]
             if want == "disk":
@@ -224,10 +251,90 @@ def run_cell(base: Path, kind: str, phase: str, backend: str, tier: str,
         assert param_digests(tr) == ref, \
             f"{name}: post-recovery params NOT byte-identical to the " \
             f"fault-free run"
+        if kind == "preempt_notice":
+            # grow half of the cell: a spare joins the shrunken world back
+            # to N through the streamed handshake — digest-verified slice
+            # when the RAM tier holds one — and the grown world steps
+            from repro.core import elastic
+            rep = elastic.join(tr.cluster, tier=sup.tier, timeout=5.0)
+            assert len(tr.cluster.survivors()) == world, \
+                f"{name}: join left world at {len(tr.cluster.survivors())}"
+            if tier == "ram":
+                assert rep.slice_verified, \
+                    f"{name}: joined slice not digest-verified"
+            tr.run(1, ckpt_every=CKPT_EVERY, log_every=10 * STEPS)
+            assert tr.step == STEPS + 1, \
+                f"{name}: grown world failed to take a step"
     finally:
         tr.pipeline.stop()
         try:
             tr.cluster.writer.close()
+        except Exception:  # noqa: BLE001 — never mask the cell's verdict
+            pass
+    return {"cell": name, "kind": inc.kind, "rank": inc.rank,
+            "resumed_step": inc.resumed_step, "ckpt": inc.ckpt,
+            "tier": inc.tier, "ladder": inc.ladder, "absorbed": inc.absorbed,
+            "world": f"{inc.world_before}->{inc.world_after}",
+            "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
+
+
+def run_serve_cell(base: Path, tier: str) -> dict:
+    """Rescale cell on the DECODE loop: a preemption notice mid-decode is
+    served by the rescale rung at the SAME position with the SAME caches —
+    no token re-minted, none lost — then a spare joins the world back to N
+    and decode continues on the grown membership."""
+    disarm_all()
+    import numpy as np
+
+    from repro.core import elastic
+    from repro.launch.serve import Server
+
+    name = f"preempt_notice:serve:mpich:{tier}"
+    t0 = time.time()
+    world, prompt, gen = 4, 8, 8
+    srv = Server(tiny_config(), world_size=world, backend="mpich",
+                 ckpt_dir=base / name.replace(":", "_"))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, srv.cfg.vocab_size, (2, prompt),
+                           dtype=np.int32)
+    logits = srv.prefill(prompts, None, pad_to=prompt + gen + 1)
+    first = np.argmax(np.asarray(logits)[..., : srv.cfg.vocab_size],
+                      axis=-1).astype(np.int32)
+    srv.start_decode(first)
+    try:
+        plan = FaultPlan([FaultSpec("preempt_notice", at_step=prompt + 3,
+                                    rank=world - 1, grace_s=2.0)])
+        with FaultInjector(plan) as injector:
+            sup = Supervisor(srv, injector=injector, lease_s=1.0,
+                             verbose=False,
+                             tier=ReplicaTier() if tier == "ram" else None,
+                             config=SupervisorConfig(backoff_floor_s=0.01,
+                                                     backoff_ceiling_s=0.05))
+            incidents = sup.run(gen, ckpt_every=CKPT_EVERY)
+        assert injector.fired and incidents, f"{name}: no incident"
+        inc = incidents[0]
+        assert inc.kind == "preempt_notice" and inc.tier == "rescale", \
+            f"{name}: {inc.kind!r} served by {inc.tier!r} ({inc.error})"
+        assert inc.resumed_step == inc.step and inc.ckpt is None, \
+            f"{name}: decode rewound — tokens would be re-minted"
+        assert inc.world_after == inc.world_before - 1, \
+            f"{name}: world {inc.world_before}->{inc.world_after}"
+        assert srv.pos == prompt + gen, f"{name}: stopped at pos {srv.pos}"
+        # the stream is gap- and duplicate-free across the shrink
+        assert len(srv.generated) == gen, \
+            f"{name}: {len(srv.generated)} tokens for {gen} decode steps"
+        rep = elastic.join(srv.cluster, tier=sup.tier, timeout=5.0)
+        assert len(srv.cluster.survivors()) == world, \
+            f"{name}: join left world at {len(srv.cluster.survivors())}"
+        if tier == "ram":
+            assert rep.slice_verified, f"{name}: join slice unverified"
+        srv.step_once()
+        assert srv.pos == prompt + gen + 1 and \
+            len(srv.generated) == gen + 1, \
+            f"{name}: grown world failed to decode"
+    finally:
+        try:
+            srv.cluster.writer.close()
         except Exception:  # noqa: BLE001 — never mask the cell's verdict
             pass
     return {"cell": name, "kind": inc.kind, "rank": inc.rank,
@@ -291,6 +398,24 @@ def main() -> int:
         except Exception as e:  # noqa: BLE001 — report every failed cell
             failures.append(f"{kind}:{phase}:{backend}:{tier}: {e}")
             print(f"  FAIL {kind}:{phase}:{backend}:{tier}: {e}", flush=True)
+    # rescale cells on the serve workload (decode loop instead of the
+    # training step) — part of the smoke/full sweeps, skipped by --quick
+    if args.mode in ("smoke", "full"):
+        for tier in ("ram", "disk"):
+            cells.append(("preempt_notice", "serve", "mpich", tier))
+            try:
+                r = run_serve_cell(base, tier)
+                results.append(r)
+                t = r["timings"]
+                print(f"  ok {r['cell']:<40} -> {r['kind']:<14} "
+                      f"tier={r['tier']} resumed={r['resumed_step']} "
+                      f"world={r['world']} detect={t['detect_ms']:.0f}ms "
+                      f"restore={t['restore_ms']:.0f}ms [{r['wall_s']}s]",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report every failed cell
+                failures.append(f"preempt_notice:serve:mpich:{tier}: {e}")
+                print(f"  FAIL preempt_notice:serve:mpich:{tier}: {e}",
+                      flush=True)
     if args.out:
         Path(args.out).write_text(json.dumps(
             {"bench": "chaos_matrix", "mode": args.mode,

@@ -298,6 +298,40 @@ def test_wildcard_iprobe_never_leaks_internal_tags(tmp_path):
     c.writer.close()
 
 
+def test_membership_change_redelivers_or_cancels_never_drops(tmp_path):
+    """Drain under membership change (staggered scatter): in-flight traffic
+    addressed to a departing rank is either REDELIVERED through its state
+    inheritor's buffered receive (user p2p) or CANCELLED with a typed
+    record (internal collective chunks — their round dies with the old
+    membership) — never silently dropped.  New sends to the departed rank
+    fail with a typed transport error."""
+    from repro.core import elastic
+    from repro.core.backends.fabric import DepartedRankError
+    c = Cluster(WORLD, "mpich", ckpt_dir=tmp_path / "ck")
+    m1 = c.mana(1)
+    # staggered: root entered the scatter, peers have not — one chunk per
+    # peer is in flight, including one addressed to the leaver
+    m1.scatter(m1.comm_world(), [f"s{q}" for q in range(WORLD)], root=1)
+    c.mana(0).isend(3, tag=6, payload="user-for-leaver")
+    rep = elastic.shrink(c, 3, timeout=5.0)
+    # the leaver's scatter chunk: typed cancellation + a cluster event
+    assert any(t >= 1 << 32 for (_, t) in rep.cancelled)
+    assert any(e[0] == "rescale_cancelled_msgs" and e[1] == 3
+               for e in c.events)
+    # the user message re-delivers at the inheritor with original metadata
+    assert rep.redelivered >= 1
+    assert c.mana(rep.inheritor).recv(0, 6) == "user-for-leaver"
+    # the p2p plane is clean post-shrink: a fresh collective round over the
+    # new membership completes, and sends to the departed rank are typed
+    got = run_coll(c, lambda m: m.scatter(
+        m.comm_world(), list("abc") if m.rank == 1 else None, root=1),
+        ranks=[0, 1, 2])
+    assert got == ["a", "b", "c"]
+    with pytest.raises(DepartedRankError):
+        c.mana(2).isend(3, tag=1, payload="ghost")
+    c.writer.close()
+
+
 def test_drain_counts_collective_traffic():
     c = Cluster(2, "openmpi")
     m0, m1 = c.mana(0), c.mana(1)

@@ -195,6 +195,57 @@ def test_as_source_coerces_paths_and_passes_sources(tmp_path):
     c.writer.close()
 
 
+def test_repair_repushes_single_copies_after_partner_death(tmp_path):
+    """Ring re-pairing after a world shrink: a survivor whose ring partner
+    died holds the ONLY copy of some containers — repair must re-push each
+    to the holder's next alive ring partner, restoring 2x redundancy."""
+    c = _cluster(tmp_path, world=4)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    c.halt_rank(1)                     # its copies of (1,0) and (1,1) die
+    stats = tier.repair(c)
+    assert stats["single_copy"] == 2 and stats["repushed"] == 2
+    alive = c.survivors()
+    for r in range(4):
+        holders = [h for h in alive if (1, r) in tier.stores.get(h, {})]
+        assert len(holders) >= 2, f"rank {r} container not redundant"
+    # re-pushed copies crossed the p2p plane intact (checksums hold)
+    for h in alive:
+        for cont in tier.stores[h].values():
+            assert cont.sha == container_sha(cont.data)
+    # the repair holds up under the SECOND death: the original primary
+    # dies and the image still assembles from the re-paired ring
+    c.halt_rank(0)
+    img = tier.image(c)
+    assert img is not None and img.step == 1
+    c.writer.close()
+
+
+def test_attach_after_death_repairs_inline(tmp_path):
+    # (re-)attaching the tier after a membership change runs the ring
+    # repair inline, so a fresh supervisor inherits a redundant tier
+    c = _cluster(tmp_path, world=4)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    c.halt_rank(3)
+    tier.attach(c)
+    alive = c.survivors()
+    for r in range(4):
+        holders = [h for h in alive if (1, r) in tier.stores.get(h, {})]
+        assert len(holders) >= 2, f"rank {r} container not redundant"
+    c.writer.close()
+
+
+def test_repair_noop_when_already_redundant(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    assert tier.repair(c) == {"repushed": 0, "single_copy": 0}
+    c.halt_rank(1)                     # one survivor: nobody to push to
+    assert tier.repair(c)["repushed"] == 0
+    c.writer.close()
+
+
 def test_load_arrays_from_ram_image_matches_disk(tmp_path):
     c = _cluster(tmp_path, world=2)
     arrays = _arrays(7)

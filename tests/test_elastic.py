@@ -1,0 +1,446 @@
+"""Zero-downtime elasticity: live rank join/leave without a restart.
+
+The rescale gate: the world goes N -> N±1 UNDER LOAD with the training
+loss curve continuous across the membership change — survivor parameters
+byte-identical post-shrink (a live shrink never touches arrays), a
+joined rank's slice digest-verified on arrival, and shrink downtime a
+constant (drain + re-point), not a function of checkpoint size."""
+import threading
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CkptIOConfig, smoke_config
+from repro.core import Cluster, ckpt_io, elastic, faults
+from repro.core.backends.fabric import DepartedRankError, Fabric
+from repro.core.callspec import TAG_USER, handle_vid
+from repro.core.ckpt_tiers import ReplicaTier, container_sha
+from repro.core.faults import (FaultInjector, FaultPlan, FaultSpec,
+                               PreemptNotice)
+from repro.core.restore import repoint_world
+from repro.core.supervisor import (Supervisor, SupervisorConfig,
+                                   classify_failure)
+from repro.launch.train import Trainer
+
+WORLD = 4
+
+
+def _io(**kw):
+    kw.setdefault("codec", "zlib")
+    kw.setdefault("incremental", True)
+    kw.setdefault("drain_timeout", 1.0)
+    return CkptIOConfig(**kw)
+
+
+def _arrays(seed=3):
+    rng = np.random.default_rng(seed)
+    return {"w": jax.numpy.asarray(rng.normal(size=(64, 16))
+                                   .astype(np.float32))}
+
+
+def _cluster(tmp_path, world=WORLD):
+    return Cluster(world, "mpich", ckpt_dir=tmp_path / "ck", ckpt_io=_io())
+
+
+def _commit(c, step, arrays=None):
+    c.checkpoint(step, arrays or _arrays(), None).wait()
+    c.writer.wait_idle()
+    return c.writer.latest()
+
+
+def _allreduce_all(c):
+    """One world allreduce entered by every member concurrently."""
+    return c.run_collective(
+        lambda m: m.allreduce(m.comm_world(), 1.0, m.op_handles["MPI_SUM"]))
+
+
+@pytest.fixture(autouse=True)
+def _clean_failpoints():
+    yield
+    faults.disarm_all()
+
+
+# ---------------------------------------------------------------------------
+# fabric: retirement + scavenging (the transport half of a leave)
+# ---------------------------------------------------------------------------
+
+def test_fabric_retire_scavenge_and_departed_send():
+    f = Fabric(3)
+    f.send(0, 2, 7, "queued-before-departure")
+    triples = f.scavenge(2)
+    assert triples == [(0, 7, "queued-before-departure")]
+    f.retire(2)
+    with pytest.raises(DepartedRankError) as ei:
+        f.send(0, 2, 8, "too-late")
+    assert ei.value.dst == 2
+    # the fabric only ever grows; shrinking is expressed as retirement
+    with pytest.raises(ValueError, match="never shrinks"):
+        f.resize(2)
+    f.resize(5)
+    assert f.world_size == 5
+    f.send(0, 4, 1, "new slot reachable")
+
+
+# ---------------------------------------------------------------------------
+# repoint_world: sparse-membership COMM_WORLD re-point, vid coherence
+# ---------------------------------------------------------------------------
+
+def test_repoint_world_vids_coherent_across_members(tmp_path):
+    c = _cluster(tmp_path)
+    old_vids = {r: handle_vid(c.mana(r).comm_world()) for r in range(WORLD)}
+    assert len(set(old_vids.values())) == 1      # one ggid, no coordination
+    c.remove_rank(1)
+    stats = c.resize([0, 2, 3])
+    assert set(stats) == {0, 2, 3}
+    new_vids = {r: handle_vid(c.mana(r).comm_world()) for r in (0, 2, 3)}
+    # identical member lists hash to identical ggids on every survivor,
+    # and the old world vid is gone (freed before the new registration)
+    assert len(set(new_vids.values())) == 1
+    assert set(new_vids.values()) != set(old_vids.values())
+    for r in (0, 2, 3):
+        assert c.mana(r).world_size == 3
+        assert c.mana(r).backend.comm_ranks(
+            c.mana(r).backend.world_comm()) == [0, 2, 3]
+    # a post-repoint collective over the sparse membership completes
+    assert _allreduce_all(c) == [3.0, 3.0, 3.0]
+    c.writer.close()
+
+
+def test_repoint_world_purges_stale_internal_messages(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    m0, m1 = c.mana(0), c.mana(1)
+    m1.bcast(m1.comm_world(), "half-a-round", root=1)   # in flight
+    from repro.core.drain import drain_rank
+    drain_rank(m0)                       # buffers the internal bcast chunk
+    m1.isend(0, tag=4, payload="user")
+    drain_rank(m0)
+    stats = repoint_world(m0, [0, 1])
+    # the old round's internal message died with the old vid; user p2p
+    # traffic survives the re-point untouched
+    assert stats["purged_internal"] == 1
+    assert [(s, t) for s, t, _ in m0.pending_messages] == [(1, TAG_USER + 4)]
+    assert m0.recv(1, 4) == "user"
+    c.writer.close()
+
+
+def test_resize_rejects_dead_members(tmp_path):
+    c = _cluster(tmp_path)
+    c.halt_rank(2)
+    with pytest.raises(ValueError, match="rank 2 is dead"):
+        c.resize([0, 1, 2, 3])
+    c.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# shrink: the graceful-leave protocol end to end
+# ---------------------------------------------------------------------------
+
+def test_shrink_graceful_handoff_redelivery_and_repair(tmp_path):
+    c = _cluster(tmp_path)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    # in-flight user p2p addressed to the leaver, plus the leaver's own
+    # buffered user message (drained earlier, never delivered)
+    c.mana(0).backend.send(3, TAG_USER + 7, "for-the-leaver")
+    c.mana(3).pending_messages.append((2, TAG_USER + 9, "leaver-held"))
+    rep = elastic.shrink(c, 3, tier=tier, cursor={"next_index": 42},
+                         timeout=5.0)
+    assert rep.kind == "shrink" and rep.graceful
+    assert rep.members == [0, 1, 2] and rep.inheritor == 0
+    assert rep.workload_cursor == {"next_index": 42}
+    assert rep.redelivered == 2          # scavenged msg + handed-off pending
+    assert rep.cancelled == []           # no internal round was in flight
+    assert rep.downtime_ms < 1000        # constant-bounded, not image-sized
+    assert c.survivors() == [0, 1, 2]
+    # the leaver's held containers moved to the inheritor; after repair the
+    # image still assembles from survivors only
+    assert any(k[1] == 3 for k in tier.stores[0])
+    img = tier.image(c)
+    assert img is not None and img.step == 1
+    # redelivered traffic is receivable AT the inheritor, original metadata
+    inh = c.mana(0)
+    assert inh.recv(0, 7) == "for-the-leaver"
+    assert inh.recv(2, 9) == "leaver-held"
+    # the shrunken world is live: collective + departed-rank sends typed
+    assert _allreduce_all(c) == [3.0, 3.0, 3.0]
+    with pytest.raises(DepartedRankError):
+        c.mana(1).backend.send(3, TAG_USER + 1, "ghost")
+    assert ("rescaled", "shrink", 3, (0, 1, 2)) in [
+        e[:4] for e in c.events if e[0] == "rescaled"]
+    c.writer.close()
+
+
+def test_shrink_dead_leaver_skips_handoff_serves_from_replicas(tmp_path):
+    c = _cluster(tmp_path)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    c.halt_rank(2)                       # died without a grace window
+    rep = elastic.shrink(c, 2, tier=tier, timeout=5.0)
+    assert not rep.graceful and rep.handoff_items == 0
+    assert rep.members == [0, 1, 3]
+    # the dead rank's newest container survives in its ring partner's RAM
+    img = tier.image(c)
+    assert img is not None and img.step == 1
+    assert _allreduce_all(c) == [3.0, 3.0, 3.0]
+    c.writer.close()
+
+
+def test_shrink_last_member_is_typed(tmp_path):
+    c = _cluster(tmp_path, world=1)
+    with pytest.raises(elastic.RescaleError, match="last"):
+        elastic.shrink(c, 0)
+    c.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# join: handshake, digest-verified slice stream, fencing
+# ---------------------------------------------------------------------------
+
+def test_join_streams_digest_verified_slice(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    tier = ReplicaTier()
+    tier.replicate(c, _commit(c, 1))
+    rep = elastic.join(c, tier=tier, timeout=5.0)
+    assert rep.kind == "join" and rep.members == [0, 1, rep.rank]
+    assert rep.slice_verified is True
+    assert rep.handoff_items == len(tier.stores[rep.rank])
+    for (step, r), cont in tier.stores[rep.rank].items():
+        assert cont.sha == container_sha(cont.data)
+    assert c.survivors() == [0, 1, rep.rank]
+    assert _allreduce_all(c) == [3.0, 3.0, 3.0]
+    c.writer.close()
+
+
+def test_join_timeout_fences_joiner_world_untouched(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    members_before = c.survivors()
+    vids_before = {r: handle_vid(c.mana(r).comm_world())
+                   for r in members_before}
+
+    def stall(name, ctx):
+        faults.disarm("elastic.join.ready", stall)
+        raise faults.InjectedFault(
+            f"injected join stall: rank {ctx.get('rank')} wedged")
+
+    faults.arm("elastic.join.ready", stall)
+    with pytest.raises(elastic.JoinTimeoutError) as ei:
+        elastic.join(c, timeout=1.0)
+    fenced = ei.value.rank
+    # the running world never saw the joiner: membership, world vids, and
+    # collectives all exactly as before; the fenced slot is unreachable
+    assert c.survivors() == members_before
+    assert {r: handle_vid(c.mana(r).comm_world())
+            for r in members_before} == vids_before
+    assert _allreduce_all(c) == [2.0, 2.0]
+    with pytest.raises(DepartedRankError):
+        c.mana(0).backend.send(fenced, TAG_USER + 1, "ghost")
+    assert any(e[0] == "join_fenced" and e[1] == fenced for e in c.events)
+    c.writer.close()
+
+
+def test_injected_join_timeout_fault_arms_the_failpoint(tmp_path):
+    c = _cluster(tmp_path, world=2)
+    with FaultInjector(FaultPlan([FaultSpec("join_timeout",
+                                            at_step=1)])) as inj:
+        inj.on_step(1, c)
+        with pytest.raises(elastic.JoinTimeoutError):
+            elastic.join(c, timeout=1.0)
+    assert c.survivors() == [0, 1]
+    c.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# trainer under load: loss continuity + byte-identical survivor params
+# ---------------------------------------------------------------------------
+
+STEPS, EVERY = 9, 3
+
+
+def _tiny_cfg():
+    return replace(smoke_config("granite-3-2b"), n_layers=1, d_model=32,
+                   n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                   vocab_size=128, vocab_pad_multiple=64)
+
+
+def _trainer(ckpt_dir, world=WORLD):
+    return Trainer(_tiny_cfg(), batch_size=4, seq_len=16, world_size=world,
+                   ckpt_dir=ckpt_dir, total_steps=STEPS, ckpt_io=_io())
+
+
+def _digests(tr):
+    leaves = jax.tree.leaves({"p": tr.params, "o": tr.opt_state})
+    return [ckpt_io.shard_digest(jax.device_get(leaf)) for leaf in leaves]
+
+
+def test_live_shrink_under_load_params_byte_identical(tmp_path):
+    tr = _trainer(tmp_path / "ck")
+    tr.init_state()
+    try:
+        tr.run(4, ckpt_every=2, log_every=1)
+        before = _digests(tr)
+        step_before = tr.step
+        rep = elastic.shrink(tr.cluster, 3,
+                             cursor=tr.prepare_leave(3), timeout=5.0)
+        tr.rescale(rep)
+        # the membership change never touched arrays or the step counter
+        assert _digests(tr) == before
+        assert tr.step == step_before
+        # ...and training CONTINUES on the survivors: the loss curve is one
+        # unbroken trajectory (deterministic pipeline cursor, no rewind)
+        tr.run(3, ckpt_every=0, log_every=1)
+        assert tr.step == step_before + 3
+        steps = [h["step"] for h in tr.history]
+        assert steps == sorted(set(steps))       # strictly forward, no replay
+        assert all(np.isfinite(h["loss"]) for h in tr.history)
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_live_shrink_of_pipeline_owner_reshards_cursor(tmp_path):
+    tr = _trainer(tmp_path / "ck")
+    tr.init_state()
+    try:
+        tr.run(2, ckpt_every=0, log_every=100)
+        cursor_before = tr.pipeline.state()["next_index"]
+        cursor = tr.prepare_leave(0)             # rank 0 OWNS the pipeline
+        assert cursor is not None
+        assert cursor["next_index"] == cursor_before
+        rep = elastic.shrink(tr.cluster, 0, cursor=cursor, timeout=5.0)
+        tr.rescale(rep)
+        # reattached on a survivor, resuming from the same counter
+        assert tr.pipeline.mana.rank == rep.members[0]
+        assert tr.pipeline.state()["next_index"] == cursor_before
+        tr.run(2, ckpt_every=0, log_every=100)
+        assert all(np.isfinite(h["loss"]) for h in tr.history)
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# supervisor: the rescale rung
+# ---------------------------------------------------------------------------
+
+def test_classify_preempt_notice():
+    assert classify_failure(PreemptNotice(2, 3.0)) == ("preempt_notice", 2)
+
+
+def _supervised(tmp_path, specs, world=WORLD, **cfg_kw):
+    cfg_kw.setdefault("backoff_floor_s", 0.01)
+    cfg_kw.setdefault("backoff_ceiling_s", 0.05)
+    tr = _trainer(tmp_path / "ck", world=world)
+    tr.init_state()
+    with FaultInjector(FaultPlan(specs)) as inj:
+        sup = Supervisor(tr, injector=inj, lease_s=1.0, verbose=False,
+                         tier=ReplicaTier(),
+                         config=SupervisorConfig(**cfg_kw))
+        incidents = sup.run(STEPS, ckpt_every=EVERY)
+    return tr, incidents
+
+
+def test_supervised_preempt_rescale_rung_no_rewind(tmp_path):
+    tr, incidents = _supervised(
+        tmp_path, [FaultSpec("preempt_notice", at_step=5, rank=3)])
+    try:
+        assert [i.kind for i in incidents] == ["preempt_notice"]
+        inc = incidents[0]
+        assert inc.tier == "rescale" and inc.ckpt is None
+        # no rewind: the loss curve continues at the very step the notice
+        # arrived, on the shrunken world
+        assert inc.resumed_step == inc.step == 5
+        assert inc.world_before == WORLD and inc.world_after == WORLD - 1
+        assert tr.step == STEPS
+        assert tr.cluster.survivors() == [0, 1, 2]
+        assert any(e[0] == "rescaled" for e in tr.cluster.events)
+        # post-shrink checkpoints carry the sparse membership
+        tr.cluster.writer.wait_idle()
+        from repro.core.restore import load_manifest
+        man = load_manifest(tr.cluster.writer.latest())
+        assert man["members"] == [0, 1, 2]
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_supervised_rescale_off_falls_through_to_ladder(tmp_path):
+    # policy "off": the notice is handled like any fencing failure —
+    # victim fenced, restore ladder walked, step rewound to the checkpoint
+    tr, incidents = _supervised(
+        tmp_path, [FaultSpec("preempt_notice", at_step=5, rank=3)],
+        rescale="off")
+    try:
+        inc = incidents[0]
+        assert inc.kind == "preempt_notice"
+        assert inc.tier in ("ram", "disk", "disk_chain")
+        assert inc.resumed_step == 3
+        assert tr.step == STEPS
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_supervised_rescale_all_serves_rank_dead(tmp_path):
+    # policy "all": even an ungraceful death is resized around — the dead
+    # rank's replicas serve from its ring partner, nothing rewinds
+    tr, incidents = _supervised(
+        tmp_path, [FaultSpec("kill_rank", at_step=5, rank=3)],
+        rescale="all")
+    try:
+        inc = incidents[0]
+        assert inc.kind == "rank_dead" and inc.tier == "rescale"
+        assert inc.resumed_step == inc.step
+        assert tr.cluster.survivors() == [0, 1, 2]
+        assert tr.step == STEPS
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()
+
+
+def test_supervised_shrink_downtime_beats_restore(tmp_path):
+    # the rescale gate's latency half: a live shrink must be cheaper than
+    # the SAME failure recovered through the restore ladder's RAM rung
+    tr1, inc1 = _supervised(
+        tmp_path / "a", [FaultSpec("preempt_notice", at_step=5, rank=3)])
+    tr1.pipeline.stop()
+    tr1.cluster.writer.close()
+    tr2, inc2 = _supervised(
+        tmp_path / "b", [FaultSpec("preempt_notice", at_step=5, rank=3)],
+        rescale="off")
+    tr2.pipeline.stop()
+    tr2.cluster.writer.close()
+    assert inc1[0].tier == "rescale" and inc2[0].tier in ("ram", "disk")
+    assert inc1[0].timings["restore_ms"] < inc2[0].timings["restore_ms"]
+
+
+# ---------------------------------------------------------------------------
+# grow under supervision: shrink then live join back to full strength
+# ---------------------------------------------------------------------------
+
+def test_shrink_then_join_roundtrip_under_load(tmp_path):
+    tr = _trainer(tmp_path / "ck")
+    tr.init_state()
+    tier = ReplicaTier()
+    try:
+        tr.run(3, ckpt_every=3, log_every=100)
+        tr.cluster.writer.wait_idle()
+        tier.attach(tr.cluster)
+        tier.drain_commits(tr.cluster)
+        rep = elastic.shrink(tr.cluster, 3, tier=tier,
+                             cursor=tr.prepare_leave(3), timeout=5.0)
+        tr.rescale(rep)
+        tr.run(2, ckpt_every=0, log_every=100)
+        grown = elastic.join(tr.cluster, tier=tier, timeout=5.0)
+        assert grown.slice_verified in (True, None)
+        assert len(tr.cluster.survivors()) == WORLD
+        tr.run(2, ckpt_every=0, log_every=100)
+        assert tr.step == 7
+        steps = [h["step"] for h in tr.history]
+        assert steps == sorted(set(steps))
+        assert all(np.isfinite(h["loss"]) for h in tr.history)
+    finally:
+        tr.pipeline.stop()
+        tr.cluster.writer.close()

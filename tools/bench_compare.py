@@ -51,6 +51,11 @@ RECOVERY_METRICS = [
     ("ram_speedup", lambda r: r["ram_speedup"], True, 1.0),
     ("mttr_ram_ms", lambda r: r["mttr_ram_ms"], False, None),
     ("mttr_disk_ms", lambda r: r["mttr_disk_ms"], False, None),
+    # a live shrink slower than the best restore would unseat the rescale
+    # rung from the top of the ladder: hard gate >1x vs RAM-tier MTTR
+    ("rescale_speedup", lambda r: r["rescale_speedup"], True, 1.0),
+    ("shrink_downtime_ms", lambda r: r["shrink_downtime_ms"], False, None),
+    ("join_downtime_ms", lambda r: r["join_downtime_ms"], False, None),
 ]
 
 

@@ -42,6 +42,7 @@ NON_CALL_SURFACE = {
     "capabilities": "capability advertisement (gates native collectives)",
     "alias_dtype": "restore-side envelope re-encode hook",
     "type_get_contents": "restore-side decode (§5 category 2)",
+    "resize_world": "elastic-side world re-point (live membership change)",
     "shutdown": "lifecycle teardown",
 }
 
