@@ -121,8 +121,11 @@ def one(arch, overrides, world=4, engine="par_zlib_inc", steps=2,
         delta_ratio = stats2["bytes_written"] / max(stats["bytes_written"], 1)
         # array-restore latency from the latest (= the delta) checkpoint,
         # through the parallel streaming loader
-        from repro.core.restore import load_arrays
+        from repro.core.restore import load_arrays, load_rank_state
         shardings = {"params": tr.param_sh, "opt": tr.opt_sh}
+        rt_meta = load_rank_state(tr.cluster.writer.latest(), 0).get("runtime")
+        if rt_meta:
+            shardings["runtime"] = tr.runtime.shardings(rt_meta)
         array_load_s = 1e9
         for _ in range(2):
             t0 = time.perf_counter()

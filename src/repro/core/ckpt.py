@@ -92,6 +92,22 @@ def _to_np(x):
     return arr
 
 
+def runtime_leaf_indices(arrays) -> frozenset:
+    """Flattened-leaf indices of the conventional top-level ``"runtime"``
+    subtree (``repro.core.runtime_state``).  These leaves are bit-for-bit
+    ordinary array entries — same delta digests, codecs, tier pushes — but
+    the container index and manifest tag them ``kind="runtime"`` so tooling
+    can tell live state from params."""
+    if not isinstance(arrays, dict) or "runtime" not in arrays:
+        return frozenset()
+    flat, _ = jax.tree_util.tree_flatten_with_path(arrays)
+    out = set()
+    for li, (path, _leaf) in enumerate(flat):
+        if path and getattr(path[0], "key", None) == "runtime":
+            out.add(li)
+    return frozenset(out)
+
+
 class CheckpointRequest:
     """Async handle for an in-flight checkpoint (a REQUEST-kind object: the
     drain protocol completes it before the next snapshot).  ``timings``
@@ -190,25 +206,31 @@ class CheckpointWriter:
         full = (not self.incremental or not self._digest_table
                 or self._since_full >= self.keep)
         req = CheckpointRequest(fdir)
+        rt_leaves = runtime_leaf_indices(arrays)
         if self.pipeline:
             self._checkpoint_pipelined(step, arrays, mesh, rank_states,
-                                       extra_meta, tdir, fdir, full, req)
+                                       extra_meta, tdir, fdir, full, req,
+                                       rt_leaves)
             if not defer_release:
                 req.release()
         else:
             self._checkpoint_buffered(step, arrays, mesh, rank_states,
-                                      extra_meta, tdir, fdir, full, req)
+                                      extra_meta, tdir, fdir, full, req,
+                                      rt_leaves)
         self._inflight = req
         return req
 
     # -- pipelined path ------------------------------------------------------
     def _checkpoint_pipelined(self, step, arrays, mesh, rank_states,
-                              extra_meta, tdir, fdir, full, req):
+                              extra_meta, tdir, fdir, full, req,
+                              rt_leaves=frozenset()):
         """Blocking work = plan + batched D2H + enqueue.  Everything else —
         digest/delta decisions, compression, file writes, manifest, COMMIT —
         runs on the pool + a finalize thread while training continues."""
         leaves_meta, items = ckpt_pipeline.plan_snapshot(
             arrays, self.world_size, mesh)
+        for li in rt_leaves:
+            leaves_meta[li]["kind"] = "runtime"
         pool = self._get_pool()
         lossy = self.codec.lossy
         writers: dict[int, ckpt_io.RankShardWriter] = {}
@@ -245,7 +267,10 @@ class CheckpointWriter:
                 if fresh:
                     digest = w.add(it.key, view, digest=digest,
                                    compute_digest=self.incremental
-                                   and not lossy)
+                                   and not lossy,
+                                   kind="runtime"
+                                   if int(it.key.split(".", 1)[0]) in rt_leaves
+                                   else "array")
                 out.append((it, digest, fresh))
             pr = per_rank[rank]
             with pr["lock"]:
@@ -324,9 +349,12 @@ class CheckpointWriter:
 
     # -- buffered (PR 1) path ------------------------------------------------
     def _checkpoint_buffered(self, step, arrays, mesh, rank_states,
-                             extra_meta, tdir, fdir, full, req):
+                             extra_meta, tdir, fdir, full, req,
+                             rt_leaves=frozenset()):
         t0 = time.time()
         leaves_meta, per_rank = snapshot_shards(arrays, self.world_size, mesh)
+        for li in rt_leaves:
+            leaves_meta[li]["kind"] = "runtime"
         snap_s = time.time() - t0
         req.write_stats["device_to_host_s"] = round(snap_s, 4)
         req.timings["snapshot_ms"] = round(snap_s * 1e3, 3)
@@ -358,7 +386,9 @@ class CheckpointWriter:
                 rdir, {k: arrays_r[k] for k in arrays_r if k in fresh_keys},
                 self.codec, self.chunk_bytes,
                 digests={k: digests[k] for k in fresh_keys & digests.keys()},
-                compute_digests=self.incremental and not lossy)
+                compute_digests=self.incremental and not lossy,
+                kinds={k: "runtime" for k in fresh_keys
+                       if int(k.split(".", 1)[0]) in rt_leaves})
             ckpt_io.atomic_write_text(rdir / "state.json",
                                       json.dumps(rank_states.get(rank, {})))
             raw_all = sum(a.nbytes for a in arrays_r.values())

@@ -297,13 +297,16 @@ class RankShardWriter:
         self.enc_bytes = 0
 
     def add(self, key: str, arr, digest: str | None = None,
-            compute_digest: bool = False) -> str | None:
+            compute_digest: bool = False, kind: str = "array") -> str | None:
         """Append one entry.  ``digest`` records a known content digest;
         ``compute_digest`` hashes the entry inline while streaming — for
         lossless codecs the transform is the identity, so the chunk stream
         is the original bytes and the fused hash equals
         :func:`shard_digest` without a second memory pass.  (Callers must
-        pre-compute digests for lossy codecs.)  Returns the entry digest."""
+        pre-compute digests for lossy codecs.)  ``kind`` tags non-parameter
+        entries ("runtime": KV/recurrent caches, RNG streams) in the index;
+        the default "array" is implicit and not stored, so legacy containers
+        parse identically.  Returns the entry digest."""
         failpoint("ckpt_io.append", key=key, rank_dir=self.rank_dir)
         arr = np.asarray(arr)
         enc_arr, qmeta = self.codec.transform(arr)
@@ -336,7 +339,7 @@ class RankShardWriter:
             for enc in enc_chunks:
                 self._f.write(enc)
                 self.enc_bytes += len(enc)
-            self.entries[key] = {
+            entry = {
                 "dtype": dtype_name(arr.dtype),
                 "shape": list(arr.shape),
                 "enc_dtype": dtype_name(enc_arr.dtype),
@@ -346,6 +349,9 @@ class RankShardWriter:
                 "qmeta": qmeta,
                 "digest": digest,
             }
+            if kind != "array":
+                entry["kind"] = kind
+            self.entries[key] = entry
             self._offset += sum(c[0] for c in chunks)
             self.raw_bytes += arr.nbytes
             if digest is not None:
@@ -376,16 +382,20 @@ class RankShardWriter:
 def write_rank_shards(rank_dir, arrays: dict, codec: Codec,
                       chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                       digests: dict | None = None,
-                      compute_digests: bool = False) -> dict:
+                      compute_digests: bool = False,
+                      kinds: dict | None = None) -> dict:
     """Stream ``arrays`` ({key: np.ndarray}) into ``rank_dir/shards.bin`` +
     ``rank_dir/index.json`` in one shot (see :class:`RankShardWriter` for
-    the streaming/digest semantics).  Returns {"raw_bytes", "enc_bytes",
-    "entries", "digests"}."""
+    the streaming/digest semantics).  ``kinds`` optionally maps entry keys
+    to a non-default kind tag (e.g. "runtime").  Returns {"raw_bytes",
+    "enc_bytes", "entries", "digests"}."""
     digests = digests or {}
+    kinds = kinds or {}
     w = RankShardWriter(rank_dir, codec, chunk_bytes)
     for key, arr in arrays.items():
         d = w.add(key, arr, digest=digests.get(key),
-                  compute_digest=compute_digests)
+                  compute_digest=compute_digests,
+                  kind=kinds.get(key, "array"))
         if d is not None:
             digests[key] = d
     st = w.finish()

@@ -75,6 +75,10 @@ class PairPlan:
     native_split: bool           # dst implements comm_split natively
     dtype_aliases: dict          # dst aliasing table over predefined names
     reencode_envelopes: bool     # any alias differs -> envelopes re-encoded
+    #: canonical-dtype re-encode rules for runtime-state leaves
+    #: (``repro.core.runtime_state``): StateLeaf transport dtypes pass
+    #: through the same aliasing table as datatype envelopes.
+    runtime: dict = field(default_factory=dict)
 
     @property
     def replay_comm_split(self) -> bool:
@@ -102,6 +106,8 @@ def translation_plan(src: str, dst: str, dst_backend=None) -> PairPlan:
         native_split="comm_split" in dst_backend.capabilities(),
         dtype_aliases=aliases,
         reencode_envelopes=any(k != v for k, v in aliases.items()),
+        runtime={"dtype_aliases": dict(aliases),
+                 "reencode": any(k != v for k, v in aliases.items())},
     )
 
 

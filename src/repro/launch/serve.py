@@ -17,7 +17,8 @@ import numpy as np
 from repro import steps as ST
 from repro.configs import get_config, smoke_config
 from repro.core import Cluster
-from repro.core.restore import as_source, load_arrays
+from repro.core import runtime_state as RS
+from repro.core.restore import as_source, load_arrays, translation_plan
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
 from repro.sharding import ShardingCtx, rules_for
@@ -41,6 +42,51 @@ class Server:
         self.generated = []
         self.resume_tok = None
         self._tok = None         # next decode seed (supervised step state)
+        # sampling key stream: advanced once per decode step (argmax decode
+        # never consumes it, but a restored server must hold the SAME key a
+        # sampling decode would — RNG streams are runtime state too)
+        self.rng_key = jax.random.key(seed + 1)
+        self.last_runtime_restore = None
+        # runtime-state providers: KV/recurrent cache pytree (with its
+        # treedef), the sampling key stream, and the decode cursor — the
+        # full upper-half serving state, made checkpointable
+        self.runtime = RS.RuntimeStateRegistry()
+        self.runtime.register(RS.PyTreeProvider(
+            "kv_caches", lambda: self.caches, self._set_caches))
+        self.runtime.register(RS.RngStateProvider(
+            "rng", lambda: self.rng_key, self._set_rng))
+        self.runtime.register(RS.JsonStateProvider(
+            "decode_cursor", self._cursor_state, self._apply_cursor))
+
+    # -- runtime provider hooks ---------------------------------------------
+    def _set_caches(self, tree):
+        self.caches = tree
+
+    def _set_rng(self, key):
+        self.rng_key = key
+
+    def _cursor_state(self) -> dict:
+        st = {"pos": int(self.pos),
+              "prefill_pos": int(self.pos - len(self.generated))}
+        if self.generated:
+            # the token that seeds the next decode step after a resume
+            st["last_tok"] = np.asarray(self.generated[-1]).tolist()
+        return st
+
+    def _apply_cursor(self, st: dict) -> None:
+        # rewinding pos must also rewind the generated stream, or the
+        # tokens decoded between snapshot and failure appear TWICE after
+        # the supervisor replays them
+        prefill_pos = self.pos - len(self.generated)
+        self.pos = int(st["pos"])
+        keep = max(0, self.pos - prefill_pos)
+        if len(self.generated) > keep:
+            del self.generated[keep:]
+        tok = st.get("last_tok")
+        self.resume_tok = np.asarray(tok, np.int32) if tok is not None \
+            else None
+        if self.resume_tok is not None:
+            self._tok = jnp.asarray(self.resume_tok)
 
     def prefill(self, tokens, patch_embeds=None, pad_to=None):
         batch = {"tokens": jnp.asarray(tokens)}
@@ -80,6 +126,7 @@ class Server:
         if self.cfg.n_codebooks > 1:
             tok = tok.reshape(tok.shape[0], -1)[:, : self.cfg.n_codebooks]
         self._tok = tok.astype(jnp.int32)
+        self.rng_key, _ = jax.random.split(self.rng_key)
         out = np.asarray(self._tok)
         self.generated.append(out)
         self.pos += 1
@@ -100,10 +147,12 @@ class Server:
     def checkpoint(self, tag=None):
         if tag is None:
             tag = self.pos
-        arrays = {"caches": self.caches}
-        extra = {"pos": int(self.pos)}
+        rt_arrays, rt_meta = self.runtime.snapshot()
+        arrays = {"runtime": rt_arrays}
+        # legacy pos/last_tok keys ride alongside the runtime section so
+        # older tooling keeps parsing serving snapshots
+        extra = {"pos": int(self.pos), "runtime": rt_meta}
         if self.generated:
-            # the token that seeds the next decode step after a resume
             extra["last_tok"] = np.asarray(self.generated[-1]).tolist()
         req = self.cluster.checkpoint(tag, arrays, self.mesh,
                                       extra_rank_state=lambda r: dict(extra))
@@ -116,11 +165,20 @@ class Server:
         ``new_world_size`` / ``rebuild`` go through ``Cluster.restart``:
         fresh lower halves (possibly a different flavor or a shrunken
         world) with cache-leaf reads overlapping the descriptor re-bind;
-        restart phase timings land in ``self.cluster.restart_timings``."""
-        # shardings: reuse current cache structure if present, else None tree
+        restart phase timings land in ``self.cluster.restart_timings``.
+
+        Snapshots carry a runtime-state section (tree skeletons + StateLeaf
+        descriptors), so a FRESH server restores the full decode state —
+        cache treedef included — without running a prefill first."""
         src = as_source(ckpt)
         manifest = src.manifest()
-        if self.caches is not None:
+        rs = src.rank_state(0)
+        rt_meta = rs.get("runtime")
+        if rt_meta is not None:
+            # shardings rebuilt from snapshot metadata alone
+            sh = {"runtime": self.runtime.shardings(rt_meta)}
+        elif self.caches is not None:
+            # legacy (pre-runtime-section) snapshot: live cache structure
             sh = {"caches": jax.tree.map(lambda _: None, self.caches)}
         else:
             sh = {"caches": [None] * len(manifest["leaves"])}
@@ -132,20 +190,16 @@ class Server:
             arrays = self.cluster.restored_arrays
         else:
             arrays = load_arrays(src, sh)
+        if rt_meta is not None:
+            plan = translation_plan(
+                manifest.get("backend", self.cluster.backend_name),
+                self.cluster.backend_name, self.cluster.mana(0).backend)
+            self.last_runtime_restore = self.runtime.restore(
+                arrays.get("runtime", {}), rt_meta, plan=plan)
+            return
+        # legacy restore path: cache leaves + pos/last_tok rank state
         self.caches = arrays["caches"]
-        rs = src.rank_state(0)
-        # rewinding pos must also rewind the generated stream, or the
-        # tokens decoded between snapshot and failure appear TWICE after
-        # the supervisor replays them
-        prefill_pos = self.pos - len(self.generated)
-        self.pos = rs["pos"]
-        keep = max(0, self.pos - prefill_pos)
-        if len(self.generated) > keep:
-            del self.generated[keep:]
-        self.resume_tok = np.asarray(rs["last_tok"], np.int32) \
-            if "last_tok" in rs else None
-        if self.resume_tok is not None:
-            self._tok = jnp.asarray(self.resume_tok)
+        self._apply_cursor(rs)
 
     def recover(self, ckpt_dir, *, new_world_size=None):
         """Supervisor entry point: rebuild the lower halves (tokens are
@@ -229,29 +283,33 @@ def main():
     prompts = rng.integers(0, cfg.vocab_size, shape, dtype=np.int32)
     pe = rng.standard_normal((args.batch, cfg.img_tokens, 1024)).astype(np.float32) \
         if cfg.img_tokens else None
-    logits = srv.prefill(prompts, pe, pad_to=args.prompt_len + args.gen)
-    first = np.argmax(np.asarray(logits)[..., : cfg.vocab_size], axis=-1)
-    if cfg.n_codebooks > 1:
-        first = first.reshape(args.batch, -1)[:, : cfg.n_codebooks]
-    first = first.astype(np.int32)
     gen = args.gen
-    # NB: the prefill above runs even on --resume — the snapshot stores
-    # cache LEAVES only, and Server.restore needs a live cache pytree to
-    # recover the tree structure; the prefill is what builds it.  A
-    # production server would persist the treedef and skip this.
+    first = None
+    resumed = False
     supervised = args.supervise or args.fault_plan
     # resume runs FIRST (matching train.py): a preempted supervised server
     # relaunched with --supervise --resume continues mid-sequence instead
-    # of silently cold-starting
+    # of silently cold-starting.  Snapshots persist the cache treedef
+    # (runtime-state section), so a successful resume skips the prefill
+    # entirely — nothing is recomputed.
     if args.resume and args.ckpt_dir:
         ck = srv.resume_latest(new_backend=args.restore_backend)
         if ck is not None:
+            resumed = True
             gen = max(args.prompt_len + args.gen - srv.pos, 0)
-            if srv.resume_tok is not None:
-                first = srv.resume_tok
+            first = srv.resume_tok
             print(f"resumed {ck.name} mid-sequence at pos {srv.pos} under "
                   f"{srv.cluster.backend_name}; {gen} tokens left")
-    elif args.ckpt_dir and args.snapshot_at and not supervised:
+    if first is None:
+        # cold start — or a snapshot taken before any token was decoded
+        # (no seed token recorded): the prefill recomputes the first token
+        # and rebuilds the caches it overwrites
+        logits = srv.prefill(prompts, pe, pad_to=args.prompt_len + args.gen)
+        first = np.argmax(np.asarray(logits)[..., : cfg.vocab_size], axis=-1)
+        if cfg.n_codebooks > 1:
+            first = first.reshape(args.batch, -1)[:, : cfg.n_codebooks]
+        first = first.astype(np.int32)
+    if not resumed and args.ckpt_dir and args.snapshot_at and not supervised:
         toks, dt = srv.decode(min(args.snapshot_at, gen), first)
         srv.checkpoint(tag=srv.pos).wait()
         print(f"serving snapshot at pos {srv.pos} -> "

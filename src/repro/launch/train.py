@@ -24,7 +24,8 @@ import numpy as np
 from repro import steps as ST
 from repro.configs import CkptIOConfig, get_config, smoke_config
 from repro.core import Cluster
-from repro.core.restore import as_source
+from repro.core import runtime_state as RS
+from repro.core.restore import as_source, translation_plan
 from repro.data import DataPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
@@ -59,6 +60,27 @@ class Trainer:
         self.history = []
         self.restart_timings = {}
         self._log_t0 = time.time()
+        # training key stream: advanced once per step (stochastic ops —
+        # dropout, data augmentation — would draw from it); checkpointed so
+        # a resumed run continues the exact stream
+        self.rng_key = jax.random.key(seed + 2)
+        # runtime-state providers: the key stream plus the data-pipeline
+        # cursor, snapshotted/restored by the checkpoint plane alongside
+        # params (repro.core.runtime_state)
+        self.runtime = RS.RuntimeStateRegistry()
+        self.runtime.register(RS.RngStateProvider(
+            "rng", lambda: self.rng_key, self._set_rng))
+        self.runtime.register(RS.JsonStateProvider(
+            "data_cursor", lambda: self.pipeline.state(),
+            self._resume_pipeline))
+
+    # -- runtime provider hooks ---------------------------------------------
+    def _set_rng(self, key):
+        self.rng_key = key
+
+    def _resume_pipeline(self, state):
+        self.pipeline = DataPipeline.resume(self.cfg, state,
+                                            mana=self.cluster.mana(0))
 
     # ------------------------------------------------------------------
     def _build_step(self):
@@ -101,6 +123,7 @@ class Trainer:
         batch = self._device_batch(self.pipeline.next())
         self.params, self.opt_state, metrics = self.train_step(
             self.params, self.opt_state, batch, jnp.int32(self.step))
+        self.rng_key = jax.random.fold_in(self.rng_key, self.step)
         self.step += 1
         if self.metrics_allreduce:
             world = max(len(self.cluster.manas), 1)
@@ -146,12 +169,16 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def checkpoint(self):
-        arrays = {"params": self.params, "opt": self.opt_state}
+        rt_arrays, rt_meta = self.runtime.snapshot()
+        arrays = {"params": self.params, "opt": self.opt_state,
+                  "runtime": rt_arrays}
         pipe_state = self.pipeline.state()
 
         def extra(rank):
+            # legacy pipeline/train_step/seed keys ride alongside the
+            # runtime section so older tooling keeps parsing checkpoints
             return {"pipeline": pipe_state, "train_step": self.step,
-                    "seed": self.seed}
+                    "seed": self.seed, "runtime": rt_meta}
 
         req = self.cluster.checkpoint(self.step, arrays, self.mesh,
                                       extra_rank_state=extra)
@@ -180,8 +207,14 @@ class Trainer:
         ``req.timings``)."""
         src = as_source(ckpt)
         manifest = src.manifest()
+        rs = src.rank_state(0)
+        rt_meta = rs.get("runtime")
         self.pipeline.stop()
         shardings = {"params": self.param_sh, "opt": self.opt_sh}
+        if rt_meta is not None:
+            rt_sh = self.runtime.shardings(rt_meta)
+            if rt_sh:
+                shardings["runtime"] = rt_sh
         self.cluster = self.cluster.restart(src,
                                             new_world_size=new_world_size,
                                             new_backend=new_backend,
@@ -189,10 +222,17 @@ class Trainer:
         arrays = self.cluster.restored_arrays
         self.restart_timings = self.cluster.restart_timings
         self.params, self.opt_state = arrays["params"], arrays["opt"]
-        rs = src.rank_state(0)
         self.step = rs["train_step"]
-        self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],
-                                            mana=self.cluster.mana(0))
+        if rt_meta is not None:
+            plan = translation_plan(
+                manifest.get("backend", self.cluster.backend_name),
+                self.cluster.backend_name, self.cluster.mana(0).backend)
+            self.runtime.restore(arrays.get("runtime", {}), rt_meta,
+                                 plan=plan)
+        else:
+            # legacy (pre-runtime-section) checkpoint
+            self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],
+                                                mana=self.cluster.mana(0))
         return manifest
 
     # -- live rescale (zero-downtime elasticity) -----------------------

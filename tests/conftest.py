@@ -6,6 +6,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: restart-matrix / chaos-adjacent tests — CI runs them in a "
+        "separate tier-1 step (select with -m slow, skip with -m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

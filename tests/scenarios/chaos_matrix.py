@@ -26,7 +26,12 @@ also surface through collective calls — then asserts:
     joins the shrunken world back to N — digest-verified slice on the RAM
     tier — and the grown world takes a step.  A serve-workload variant
     asserts the decode stream stays gap- and duplicate-free across both
-    membership changes.
+    membership changes;
+  * serve kill cells (``kill_rank`` mid-decode, RAM and disk tiers) assert
+    the REWIND path on the decode loop: the runtime-state section restores
+    caches + cursor + RNG from the tier image and the replayed token
+    stream is byte-identical to an uninterrupted decode — no token
+    re-minted, none lost.
 
 Modes:
   --full    every valid (kind, phase, tier) combo x every backend family
@@ -344,6 +349,85 @@ def run_serve_cell(base: Path, tier: str) -> dict:
             "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
 
 
+def run_serve_kill_cell(base: Path, tier: str) -> dict:
+    """kill_rank cell on the DECODE loop: a serving rank dies mid-decode,
+    the supervisor rewinds to the latest snapshot image (peer RAM or disk)
+    and replays — the runtime-state section restores caches + cursor + RNG
+    on the surviving world, so the final token stream must be gap- AND
+    duplicate-free: byte-identical to an uninterrupted decode."""
+    disarm_all()
+    import numpy as np
+
+    from repro.launch.serve import Server
+
+    name = f"kill_rank:serve:mpich:{tier}"
+    t0 = time.time()
+    world, prompt, gen = 2, 8, 8
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 256, (2, prompt), dtype=np.int32)
+
+    def _prefill(server):
+        logits = server.prefill(prompts, None, pad_to=prompt + gen + 1)
+        return np.argmax(np.asarray(logits)[..., : server.cfg.vocab_size],
+                         axis=-1).astype(np.int32)
+
+    # fault-free reference stream (no snapshots, no supervisor)
+    ref_srv = Server(tiny_config(), world_size=world, backend="mpich")
+    ref_srv.start_decode(_prefill(ref_srv))
+    for _ in range(gen):
+        ref_srv.step_once()
+    ref_stream = np.stack(ref_srv.generated)
+
+    srv = Server(tiny_config(), world_size=world, backend="mpich",
+                 ckpt_dir=base / name.replace(":", "_"))
+    srv.start_decode(_prefill(srv))
+    try:
+        # snapshots land at pos 9/12/15; the kill at 13 forces a rewind to
+        # the pos-12 image with one committed snapshot still ahead
+        plan = FaultPlan([FaultSpec("kill_rank", at_step=prompt + 5,
+                                    rank=world - 1)])
+        with FaultInjector(plan) as injector:
+            sup = Supervisor(srv, injector=injector, lease_s=1.0,
+                             verbose=False,
+                             tier=ReplicaTier() if tier == "ram" else None,
+                             config=SupervisorConfig(backoff_floor_s=0.01,
+                                                     backoff_ceiling_s=0.05))
+            incidents = sup.run(gen, ckpt_every=CKPT_EVERY)
+        assert injector.fired and incidents, f"{name}: no incident"
+        inc = incidents[0]
+        assert inc.kind == "rank_dead", \
+            f"{name}: classified {inc.kind!r} ({inc.error})"
+        if tier == "ram":
+            assert inc.tier == "ram", \
+                f"{name}: served by {inc.tier!r}, expected peer RAM"
+        else:
+            assert inc.tier in ("disk", "disk_chain"), \
+                f"{name}: served by {inc.tier!r}, expected the disk tier"
+        assert inc.resumed_step < inc.step, \
+            f"{name}: no rewind recorded ({inc.resumed_step}, {inc.step})"
+        assert len(srv.cluster.survivors()) == world - 1, \
+            f"{name}: recovery world {len(srv.cluster.survivors())}"
+        # gap- and duplicate-free: exactly gen tokens, byte-identical to
+        # the uninterrupted stream (replayed tokens replace, not append)
+        assert srv.pos == prompt + gen, f"{name}: stopped at pos {srv.pos}"
+        assert len(srv.generated) == gen, \
+            f"{name}: {len(srv.generated)} tokens for {gen} decode steps"
+        got = np.stack(srv.generated)
+        assert got.shape == ref_stream.shape and \
+            got.tobytes() == ref_stream.tobytes(), \
+            f"{name}: token stream diverged after recovery"
+    finally:
+        try:
+            srv.cluster.writer.close()
+        except Exception:  # noqa: BLE001 — never mask the cell's verdict
+            pass
+    return {"cell": name, "kind": inc.kind, "rank": inc.rank,
+            "resumed_step": inc.resumed_step, "ckpt": inc.ckpt,
+            "tier": inc.tier, "ladder": inc.ladder, "absorbed": inc.absorbed,
+            "world": f"{inc.world_before}->{inc.world_after}",
+            "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
+
+
 def select_cells(mode: str) -> list:
     families = sorted(family_reps().values())
     if mode == "full":
@@ -398,24 +482,30 @@ def main() -> int:
         except Exception as e:  # noqa: BLE001 — report every failed cell
             failures.append(f"{kind}:{phase}:{backend}:{tier}: {e}")
             print(f"  FAIL {kind}:{phase}:{backend}:{tier}: {e}", flush=True)
-    # rescale cells on the serve workload (decode loop instead of the
-    # training step) — part of the smoke/full sweeps, skipped by --quick
+    # serve-workload cells (decode loop instead of the training step) —
+    # part of the smoke/full sweeps, skipped by --quick: the rescale cell
+    # (live shrink + grow, no rewind) and the kill cell (rewind to a RAM-
+    # or disk-tier image, runtime-state restore, gap-/duplicate-free
+    # stream)
     if args.mode in ("smoke", "full"):
-        for tier in ("ram", "disk"):
-            cells.append(("preempt_notice", "serve", "mpich", tier))
-            try:
-                r = run_serve_cell(base, tier)
-                results.append(r)
-                t = r["timings"]
-                print(f"  ok {r['cell']:<40} -> {r['kind']:<14} "
-                      f"tier={r['tier']} resumed={r['resumed_step']} "
-                      f"world={r['world']} detect={t['detect_ms']:.0f}ms "
-                      f"restore={t['restore_ms']:.0f}ms [{r['wall_s']}s]",
-                      flush=True)
-            except Exception as e:  # noqa: BLE001 — report every failed cell
-                failures.append(f"preempt_notice:serve:mpich:{tier}: {e}")
-                print(f"  FAIL preempt_notice:serve:mpich:{tier}: {e}",
-                      flush=True)
+        serve_cells = [("preempt_notice", run_serve_cell),
+                       ("kill_rank", run_serve_kill_cell)]
+        for kind, fn in serve_cells:
+            for tier in ("ram", "disk"):
+                cells.append((kind, "serve", "mpich", tier))
+                try:
+                    r = fn(base, tier)
+                    results.append(r)
+                    t = r["timings"]
+                    print(f"  ok {r['cell']:<40} -> {r['kind']:<14} "
+                          f"tier={r['tier']} resumed={r['resumed_step']} "
+                          f"world={r['world']} detect={t['detect_ms']:.0f}ms "
+                          f"restore={t['restore_ms']:.0f}ms [{r['wall_s']}s]",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — report every cell
+                    failures.append(f"{kind}:serve:mpich:{tier}: {e}")
+                    print(f"  FAIL {kind}:serve:mpich:{tier}: {e}",
+                          flush=True)
     if args.out:
         Path(args.out).write_text(json.dumps(
             {"bench": "chaos_matrix", "mode": args.mode,

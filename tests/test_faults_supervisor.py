@@ -295,6 +295,7 @@ def _supervised(tmp_path, specs, **sup_kw):
     return tr, incidents
 
 
+@pytest.mark.slow
 def test_supervised_kill_rank_byte_identical(tmp_path, ref_digests):
     tr, incidents = _supervised(
         tmp_path, [FaultSpec("kill_rank", at_step=5)])
@@ -312,6 +313,7 @@ def test_supervised_kill_rank_byte_identical(tmp_path, ref_digests):
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_supervised_corrupt_falls_back_to_good_ckpt(tmp_path, ref_digests):
     # poison the step-6 checkpoint at step 7, kill at step 8: recovery must
     # skip the poisoned image and land on step 3 — and still reproduce the
@@ -329,6 +331,7 @@ def test_supervised_corrupt_falls_back_to_good_ckpt(tmp_path, ref_digests):
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_supervisor_bounded_retries(tmp_path):
     class Hopeless:
         """Workload whose step always fails; recovery 'works' but never
@@ -360,6 +363,7 @@ def test_supervisor_bounded_retries(tmp_path):
     c.writer.close()
 
 
+@pytest.mark.slow
 def test_supervisor_recurring_failure_does_not_livelock(tmp_path):
     class Sisyphus:
         """Recovery rewinds past a deterministically recurring failure:
@@ -393,6 +397,7 @@ def test_supervisor_recurring_failure_does_not_livelock(tmp_path):
     c.writer.close()
 
 
+@pytest.mark.slow
 def test_supervisor_refuses_without_valid_checkpoint(tmp_path):
     tr = _trainer(tmp_path / "ck")
     tr.init_state()
@@ -424,6 +429,7 @@ def _supervised_tier(tmp_path, specs, world=2, **cfg_kw):
     return tr, incidents
 
 
+@pytest.mark.slow
 def test_supervised_ram_tier_serves_byte_identical(tmp_path, ref_digests):
     # a plain rank kill leaves a complete replicated image in surviving
     # RAM: recovery must be served by the RAM tier with zero ladder noise
@@ -441,6 +447,7 @@ def test_supervised_ram_tier_serves_byte_identical(tmp_path, ref_digests):
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_partner_death_escalates_to_disk(tmp_path, ref_digests):
     # victim AND its ring partner die together: every RAM copy of the
     # victim's container is lost, so the ladder must fall through to the
@@ -458,6 +465,7 @@ def test_partner_death_escalates_to_disk(tmp_path, ref_digests):
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_corrupt_replica_fails_verification_escalates(tmp_path, ref_digests):
     # in-memory rot: the RAM rung raises TierVerifyError (non-retryable)
     # and the ladder escalates to disk without burning rung retries
@@ -477,6 +485,7 @@ def test_corrupt_replica_fails_verification_escalates(tmp_path, ref_digests):
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_double_fault_mid_recovery_absorbed_not_dropped(tmp_path,
                                                         ref_digests):
     # a second rank dies WHILE the first recovery is restoring: the
@@ -496,6 +505,7 @@ def test_double_fault_mid_recovery_absorbed_not_dropped(tmp_path,
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_restore_error_retried_on_same_rung(tmp_path, ref_digests):
     # a transient fault inside rebind_world: retryable, so the SAME rung
     # retries (bounded by level_retries) and the RAM tier still serves
@@ -512,6 +522,7 @@ def test_restore_error_retried_on_same_rung(tmp_path, ref_digests):
         tr.cluster.writer.close()
 
 
+@pytest.mark.slow
 def test_backoff_knobs_scale_recovery_spacing(tmp_path):
     from repro.core.supervisor import SupervisorConfig
 

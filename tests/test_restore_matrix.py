@@ -20,6 +20,10 @@ from repro.core import BACKENDS, Cluster, backend_family, restart_matrix
 from repro.core.restore import (find_resumable, load_arrays, load_rank_state,
                                 translation_plan)
 
+# the full ordered-pair sweep at world=4 is the heavyweight tier-1 tail;
+# CI runs it in the dedicated slow step
+pytestmark = pytest.mark.slow
+
 WORLD = 4
 PAIRS = sorted(itertools.product(BACKENDS, BACKENDS))
 

@@ -1,0 +1,321 @@
+"""Runtime-state conformance suite (``repro.core.runtime_state``).
+
+Fast tier: registry/skeleton/descriptor unit coverage plus the container's
+``kind="runtime"`` tagging and delta-eligibility.
+
+Slow tier (``-m slow``): the stateful-inference conformance sweep — a
+mid-sequence xLSTM / SSM generation is snapshotted, restored on a FRESH
+server (no prefill: the snapshot's runtime section carries the cache
+treedef) under every one of the 25 ordered backend pairs, and the
+continued token stream must be byte-identical to an uninterrupted run —
+the "develop once, run everywhere" claim extended from params to live
+decode state.
+"""
+import json
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import ckpt, runtime_state as RS
+from repro.core.backends import BACKENDS
+from repro.core.restore import translation_plan
+
+FLAVORS = sorted(BACKENDS)
+PAIRS = [(s, d) for s in FLAVORS for d in FLAVORS]
+
+
+# ---------------------------------------------------------------------------
+# fast: skeletons + descriptors
+# ---------------------------------------------------------------------------
+
+def test_skeleton_roundtrip_matches_flatten_order():
+    tree = {"b": [np.zeros(2), (np.ones(3), np.zeros(1))],
+            "a": {"y": np.zeros(4), "x": np.zeros(5)},
+            "c": None}
+    skel = RS.tree_skeleton(tree)
+    assert RS.skeleton_leaf_count(skel) == len(jax.tree.leaves(tree))
+    # filling with a counter must enumerate leaves in jax flatten order
+    it = iter(range(10))
+    rebuilt = RS.skeleton_fill(skel, lambda: next(it))
+    flat, treedef = jax.tree.flatten(rebuilt)
+    assert flat == list(range(len(flat)))
+    ref_flat, ref_treedef = jax.tree.flatten(tree)
+    assert treedef == ref_treedef
+    nulls = RS.null_tree(skel)
+    assert all(x is None for x in jax.tree.flatten(
+        nulls, is_leaf=lambda x: x is None)[0])
+
+
+def test_state_leaf_json_roundtrip():
+    leaf = RS.StateLeaf(name="kv/3", dtype="bfloat16", shape=(2, 4, 8),
+                        layout="sharded", mpi_dtype="MPI_BFLOAT16")
+    assert RS.StateLeaf.from_json(leaf.to_json()) == leaf
+
+
+def test_describe_tree_transport_dtypes():
+    import ml_dtypes
+    tree = {"a": np.zeros(3, np.int8), "b": np.zeros((), np.float32),
+            "c": np.zeros(2, ml_dtypes.float8_e4m3fn)}
+    leaves = RS.describe_tree("p", tree)
+    by_name = {l.name: l for l in leaves}
+    assert by_name["p/0"].mpi_dtype == "MPI_INT8_T"
+    assert by_name["p/1"].mpi_dtype == "MPI_FLOAT"
+    assert by_name["p/1"].shape == ()
+    assert by_name["p/2"].mpi_dtype == "MPI_CHAR"   # no MPI constant: bytes
+
+
+# ---------------------------------------------------------------------------
+# fast: registry snapshot/restore
+# ---------------------------------------------------------------------------
+
+def _registry(state):
+    reg = RS.RuntimeStateRegistry()
+    reg.register(RS.PyTreeProvider("caches", lambda: state["caches"],
+                                   lambda t: state.__setitem__("caches", t)))
+    reg.register(RS.RngStateProvider("rng", lambda: state["rng"],
+                                     lambda k: state.__setitem__("rng", k)))
+    reg.register(RS.JsonStateProvider("cursor", lambda: state["cursor"],
+                                      lambda c: state.__setitem__("cursor",
+                                                                  c)))
+    return reg
+
+
+def test_registry_roundtrip():
+    state = {"caches": {"k": np.arange(6, dtype=np.float32).reshape(2, 3),
+                        "v": (np.ones(2, np.int8), np.zeros(1))},
+             "rng": jax.random.key(7),
+             "cursor": {"pos": 11, "last_tok": [3, 4]}}
+    reg = _registry(state)
+    arrays, meta = reg.snapshot()
+    # JSON round-trip the meta: it rides state.json
+    meta = json.loads(json.dumps(meta))
+    assert set(arrays) == {"caches", "rng"}       # cursor has no leaves
+    sh = reg.shardings(meta)
+    # the null-sharding tree mirrors the cache structure (None at leaves —
+    # flatten with is_leaf exactly as load_arrays does)
+    assert jax.tree.structure(sh["caches"],
+                              is_leaf=lambda x: x is None) == \
+        jax.tree.structure(state["caches"])
+
+    target = {"caches": None, "rng": None, "cursor": None}
+    reg2 = _registry(target)
+    stats = reg2.restore(arrays, meta)
+    assert stats["providers"] == 3 and not stats["skipped"]
+    np.testing.assert_array_equal(target["caches"]["k"],
+                                  state["caches"]["k"])
+    assert np.asarray(jax.random.key_data(target["rng"])).tobytes() == \
+        np.asarray(jax.random.key_data(state["rng"])).tobytes()
+    assert target["cursor"] == {"pos": 11, "last_tok": [3, 4]}
+
+
+def test_registry_empty_provider_and_unknown_skip():
+    state = {"caches": None, "rng": jax.random.key(0), "cursor": {}}
+    reg = _registry(state)
+    arrays, meta = reg.snapshot()
+    assert "caches" not in arrays                  # empty cache: no leaves
+    assert meta["providers"]["caches"]["meta"] == {"empty": True}
+
+    lone = RS.RuntimeStateRegistry()
+    got = {}
+    lone.register(RS.RngStateProvider("rng", lambda: None,
+                                      lambda k: got.setdefault("rng", k)))
+    stats = lone.restore(arrays, meta)
+    assert stats["providers"] == 1
+    assert sorted(stats["skipped"]) == ["caches", "cursor"]
+
+
+def test_registry_version_guard():
+    reg = RS.RuntimeStateRegistry()
+    reg.register(RS.JsonStateProvider("cursor", dict, lambda c: None,
+                                      version=1))
+    meta = {"format": RS.FORMAT,
+            "providers": {"cursor": {"version": 2, "meta": {"state": {}}}}}
+    with pytest.raises(ValueError, match="newer"):
+        reg.restore({}, meta)
+
+
+def test_reencode_through_pair_plan():
+    leaves = [RS.StateLeaf("p/0", "int8", (4,),
+                           mpi_dtype="MPI_INT8_T").to_json(),
+              RS.StateLeaf("p/1", "float32", (2,),
+                           mpi_dtype="MPI_FLOAT").to_json()]
+    # ExaMPI reinterpret-casts INT8 to CHAR: the runtime section re-encodes
+    # exactly like datatype envelopes
+    plan = translation_plan("mpich", "exampi")
+    assert plan.runtime["reencode"]
+    out, n = RS.reencode_leaves(leaves, plan)
+    assert n == 1 and out[0]["mpi_dtype"] == "MPI_CHAR"
+    assert out[1]["mpi_dtype"] == "MPI_FLOAT"
+    # same-discipline destination: identity
+    plan2 = translation_plan("mpich", "mpich")
+    out2, n2 = RS.reencode_leaves(leaves, plan2)
+    assert n2 == 0 and out2 == leaves
+
+
+# ---------------------------------------------------------------------------
+# fast: container kind="runtime" tagging + delta eligibility
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipeline", [True, False],
+                         ids=["pipelined", "buffered"])
+def test_kind_runtime_entries_delta_eligible(tmp_path, pipeline):
+    w = ckpt.CheckpointWriter(tmp_path, 1, codec="zlib", incremental=True,
+                              pipeline=pipeline)
+    arrays = {"params": {"w": np.ones((4, 4), np.float32)},
+              "runtime": {"kv": np.zeros((2, 3), np.float32),
+                          "rng": np.asarray([0, 7], np.uint32)}}
+    w.checkpoint(1, arrays, None, {0: {}}).wait()
+    d1 = tmp_path / "step_00000001"
+    index = json.loads((d1 / "rank00000" / "index.json").read_text())
+    manifest = json.loads((d1 / "manifest.json").read_text())
+    # flatten order is sorted-key: params.w, runtime.kv, runtime.rng
+    assert "kind" not in index["entries"]["0.0"]
+    assert index["entries"]["1.0"]["kind"] == "runtime"
+    assert index["entries"]["2.0"]["kind"] == "runtime"
+    assert "kind" not in manifest["leaves"][0]
+    assert manifest["leaves"][1]["kind"] == "runtime"
+    assert manifest["leaves"][2]["kind"] == "runtime"
+    # digest-fused: runtime entries carry content digests like any leaf
+    assert all(index["entries"][k]["digest"] for k in index["entries"])
+    # delta-eligible: unchanged runtime shards are NOT rewritten
+    w.checkpoint(2, arrays, None, {0: {}}).wait()
+    m2 = json.loads(
+        (tmp_path / "step_00000002" / "manifest.json").read_text())
+    assert m2["delta"]["fresh_shards"] == 0
+    # a mutated runtime leaf IS rewritten, tagged, and re-pointed
+    arrays["runtime"]["rng"] = np.asarray([1, 8], np.uint32)
+    w.checkpoint(3, arrays, None, {0: {}}).wait()
+    d3 = tmp_path / "step_00000003"
+    m3 = json.loads((d3 / "manifest.json").read_text())
+    i3 = json.loads((d3 / "rank00000" / "index.json").read_text())
+    assert m3["delta"]["fresh_shards"] == 1
+    assert i3["entries"]["2.0"]["kind"] == "runtime"
+    assert m3["leaves"][1]["shards"][0]["step"] == 1   # clean kv re-pointed
+    w.close()
+
+
+def test_runtime_leaf_indices():
+    arrays = {"params": {"a": 1, "b": [2, 3]},
+              "runtime": {"kv": {"x": 4}, "rng": 5}}
+    assert ckpt.runtime_leaf_indices(arrays) == frozenset({3, 4})
+    assert ckpt.runtime_leaf_indices({"params": {"a": 1}}) == frozenset()
+    assert ckpt.runtime_leaf_indices([1, 2]) == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# slow: the 25-pair stateful-inference conformance sweep
+# ---------------------------------------------------------------------------
+
+WORLD, PROMPT, GEN, SNAP = 2, 6, 8, 3
+
+ARCH_CFGS = {
+    # xLSTM recurrent caches: {"C","n","m","conv"} dicts per block
+    "xlstm": lambda: replace(smoke_config("xlstm-350m"), n_layers=2,
+                             d_model=64),
+    # hybrid SSM: {"state","conv"} dicts + KV caches in one tree
+    "ssm": lambda: replace(smoke_config("hymba-1.5b"), n_layers=2),
+}
+
+
+class _Rig:
+    """Lazily-built source runs and restorer servers, shared module-wide so
+    each (arch, src) pair compiles and decodes its reference stream once."""
+
+    def __init__(self, base: Path):
+        self.base = base
+        self._sources: dict = {}
+        self._restorers: dict = {}
+        self._servers: list = []
+
+    def _prompts(self, cfg):
+        rng = np.random.default_rng(0)
+        return rng.integers(0, cfg.vocab_size, (2, PROMPT), dtype=np.int32)
+
+    def source(self, arch: str, flavor: str):
+        """(ckpt_dir, reference tail stream, reference final rng key) of a
+        mid-sequence generation snapshotted at SNAP decoded tokens and run
+        to GEN without interruption."""
+        key = (arch, flavor)
+        if key not in self._sources:
+            from repro.launch.serve import Server
+            cfg = ARCH_CFGS[arch]()
+            srv = Server(cfg, world_size=WORLD, backend=flavor,
+                         ckpt_dir=self.base / f"{arch}_{flavor}", seed=0)
+            self._servers.append(srv)
+            logits = srv.prefill(self._prompts(cfg), None,
+                                 pad_to=PROMPT + GEN + 1)
+            first = np.argmax(np.asarray(logits)[..., : cfg.vocab_size],
+                              axis=-1).astype(np.int32)
+            srv.start_decode(first)
+            for _ in range(SNAP):
+                srv.step_once()
+            srv.checkpoint().wait()
+            ck = srv.cluster.writer.latest()
+            manifest = json.loads((ck / "manifest.json").read_text())
+            assert all(m.get("kind") == "runtime"
+                       for m in manifest["leaves"]), \
+                "serving snapshot has untagged runtime leaves"
+            for _ in range(GEN - SNAP):
+                srv.step_once()
+            tail = np.stack(srv.generated[SNAP:])
+            rng_end = np.asarray(jax.random.key_data(srv.rng_key))
+            self._sources[key] = (ck, tail, rng_end)
+        return self._sources[key]
+
+    def restorer(self, arch: str, flavor: str):
+        """A fresh server that NEVER ran a prefill — reused across the 5
+        destination flavors of one source (each restore must fully rewind
+        it, exercising the replay-rewind path on later pairs)."""
+        key = (arch, flavor)
+        if key not in self._restorers:
+            from repro.launch.serve import Server
+            srv = Server(ARCH_CFGS[arch](), world_size=WORLD, backend=flavor,
+                         ckpt_dir=self.base / f"{arch}_{flavor}_restorer",
+                         seed=0)
+            self._servers.append(srv)
+            self._restorers[key] = srv
+        return self._restorers[key]
+
+    def close(self):
+        for srv in self._servers:
+            try:
+                if srv.cluster.writer is not None:
+                    srv.cluster.writer.close()
+            except Exception:  # noqa: BLE001 — teardown must not mask
+                pass
+
+
+@pytest.fixture(scope="module")
+def rig(tmp_path_factory):
+    r = _Rig(tmp_path_factory.mktemp("runtime_state"))
+    yield r
+    r.close()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", sorted(ARCH_CFGS))
+@pytest.mark.parametrize("src,dst", PAIRS,
+                         ids=[f"{s}->{d}" for s, d in PAIRS])
+def test_conformance_stream_byte_identical(rig, arch, src, dst):
+    ck, ref_tail, ref_rng = rig.source(arch, src)
+    srv = rig.restorer(arch, src)
+    srv.restore(ck, new_backend=dst, rebuild=True)
+    assert srv.cluster.backend_name == dst
+    assert srv.pos == PROMPT + SNAP
+    assert srv.resume_tok is not None and not srv.generated
+    assert srv.last_runtime_restore["providers"] == 3
+    srv.start_decode(srv.resume_tok)
+    for _ in range(GEN - SNAP):
+        srv.step_once()
+    got = np.stack(srv.generated)
+    # byte-identical continued stream: same tokens, same dtype, same bytes
+    assert got.dtype == ref_tail.dtype and got.shape == ref_tail.shape
+    assert got.tobytes() == ref_tail.tobytes(), \
+        f"{arch} {src}->{dst}: continued stream diverged"
+    # the RNG stream also continues bit-exactly
+    assert np.asarray(jax.random.key_data(srv.rng_key)).tobytes() == \
+        ref_rng.tobytes()

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Per-file test duration report from pytest junit XML.
+
+CI splits tier-1 into a fast step (``-m "not slow"``) and a slow step
+(``-m slow``); each writes a junit file.  This tool aggregates testcase
+wall time per test FILE across all given junit files and emits a markdown
+table — appended to ``$GITHUB_STEP_SUMMARY`` when set (the CI job summary
+page), stdout otherwise — so a creeping test-time regression shows up on
+the PR instead of hiding inside a 7-minute blob.
+
+Usage:
+  python tools/duration_report.py junit-fast.xml junit-slow.xml
+"""
+import argparse
+import os
+import sys
+import xml.etree.ElementTree as ET
+from collections import defaultdict
+
+
+def collect(paths):
+    """-> {file: {"time": s, "tests": n, "step": junit-stem}} per test file."""
+    rows = defaultdict(lambda: {"time": 0.0, "tests": 0, "steps": set()})
+    for path in paths:
+        stem = os.path.splitext(os.path.basename(path))[0]
+        for case in ET.parse(path).getroot().iter("testcase"):
+            # classname "tests.test_backends" (or empty for collect errors)
+            mod = (case.get("classname") or "unknown").split(".")
+            # drop a trailing class name if pytest nested one
+            while mod and mod[-1][:1].isupper():
+                mod.pop()
+            fname = "/".join(mod) + ".py" if mod else "unknown"
+            r = rows[fname]
+            r["time"] += float(case.get("time") or 0.0)
+            r["tests"] += 1
+            r["steps"].add(stem)
+    return rows
+
+
+def render(rows):
+    total = sum(r["time"] for r in rows.values())
+    ntests = sum(r["tests"] for r in rows.values())
+    lines = ["## Test durations by file",
+             "",
+             f"{ntests} tests, {total:.1f}s total",
+             "",
+             "| file | tests | time | share | step |",
+             "|---|---:|---:|---:|---|"]
+    for fname, r in sorted(rows.items(), key=lambda kv: -kv[1]["time"]):
+        share = 100.0 * r["time"] / total if total else 0.0
+        lines.append(f"| `{fname}` | {r['tests']} | {r['time']:.1f}s "
+                     f"| {share:.0f}% | {', '.join(sorted(r['steps']))} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("junit", nargs="+", help="pytest junit XML file(s)")
+    args = ap.parse_args(argv)
+    paths = [p for p in args.junit if os.path.exists(p)]
+    missing = sorted(set(args.junit) - set(paths))
+    if missing:
+        print(f"duration_report: skipping missing {missing}", file=sys.stderr)
+    if not paths:
+        print("duration_report: no junit files found", file=sys.stderr)
+        return 0  # report is best-effort; never fail the build over it
+    summary = render(collect(paths))
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as fh:
+            fh.write(summary + "\n")
+    print(summary)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
