@@ -13,6 +13,7 @@ fast translation paths.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import jax
@@ -140,6 +141,217 @@ def collective_rows(world=4, backends=("mpich", "fabric"), iters=25,
             out.append((f"coll_{coll}_{backend}", times["fast"],
                         f"slow_us={times['slow']:.1f};"
                         f"native={coll in caps};world={world}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compute plane (BENCH_compute): tuned kernels, interposition tax, tokens/s
+# ---------------------------------------------------------------------------
+
+#: hard gate: geomean speedup of the tuned dispatch over the seed oracles
+KERNEL_GEOMEAN_GATE = 1.2
+#: hard gate: per-step cost of fast-path interposition at the gated app's
+#: call density, as a fraction of the native step ("zero-tax" budget)
+TAX_GATE_PCT = 3.0
+#: f32 parity tolerance vs the naive oracle, per kernel (the bench re-checks
+#: numerics on the EXACT shapes it times, so a fast-but-wrong path can never
+#: win the speedup gate)
+KERNEL_TOL = {"flash_attention": 2e-5, "decode_attention": 2e-5,
+              "gla": 1e-4}
+
+
+def _bench_jit(f, *args, trials=3):
+    """(best wall seconds, output) of a jitted callable; first call is
+    compile/warmup and excluded, then min-of-trials (paper methodology:
+    min is the noise-robust estimator for a deterministic computation)."""
+    out = f(*args)
+    jax.block_until_ready(out)
+    best = 1e9
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def kernel_rows(trials=3):
+    """Seed-oracle vs tuned-dispatch wall time per compute kernel, on
+    shapes where the algorithmic advantage is visible (blocked triangular
+    flash vs full-S^2 materialization; no-repeat GQA decode vs K-head
+    replication; chunk-parallel GLA vs the step-by-step recurrence).  The
+    GLA row autotunes its chunk length through
+    :mod:`repro.kernels.tuning` first — the speedup column measures the
+    CACHED winner, so the row exercises the same tune-once/lookup-forever
+    path production dispatch uses."""
+    from repro.kernels import ops, tuning
+
+    rows = []
+    key = jax.random.key(0)
+
+    def row(kernel, shape, t_ref, t_fast, y_ref, y_fast, extra=""):
+        err = float(jnp.max(jnp.abs(y_fast.astype(jnp.float32)
+                                    - y_ref.astype(jnp.float32))))
+        tol = KERNEL_TOL[kernel]
+        rows.append({"kernel": kernel, "shape": shape,
+                     "ref_ms": round(1e3 * t_ref, 3),
+                     "fast_ms": round(1e3 * t_fast, 3),
+                     "speedup": round(t_ref / t_fast, 3),
+                     "max_err": err, "tol": tol, "numerics_ok": err < tol,
+                     "extra": extra})
+
+    B, S, H, K, D = 2, 512, 8, 4, 64
+    q = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(key, (B, K, S, D), jnp.float32)
+    v = jax.random.normal(key, (B, K, S, D), jnp.float32)
+    t_ref, y_ref = _bench_jit(
+        lambda a, b, c: ops.flash_attention(a, b, c, force="ref"),
+        q, k, v, trials=trials)
+    t_new, y_new = _bench_jit(
+        lambda a, b, c: ops.flash_attention(a, b, c), q, k, v, trials=trials)
+    row("flash_attention", f"B{B}.H{H}.S{S}.K{K}.D{D}.causal",
+        t_ref, t_new, y_ref, y_new)
+
+    B, S, H, K, D = 8, 8192, 16, 2, 64
+    q = jax.random.normal(key, (B, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, K, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, K, D), jnp.float32)
+    length = jnp.int32(S - 7)
+    t_ref, y_ref = _bench_jit(
+        lambda a, b, c, l: ops.decode_attention(a, b, c, l, force="ref"),
+        q, k, v, length, trials=trials)
+    t_new, y_new = _bench_jit(
+        lambda a, b, c, l: ops.decode_attention(a, b, c, l),
+        q, k, v, length, trials=trials)
+    row("decode_attention", f"B{B}.H{H}.S{S}.K{K}.D{D}",
+        t_ref, t_new, y_ref, y_new)
+
+    B, S, H, N, P = 2, 512, 8, 64, 64
+    q = jax.random.normal(key, (B, S, H, N), jnp.float32) * 0.3
+    k = jax.random.normal(key, (B, S, H, N), jnp.float32) * 0.3
+    v = jax.random.normal(key, (B, S, H, P), jnp.float32)
+    lg = -jnp.abs(jax.random.normal(key, (B, S, H), jnp.float32)) * 0.1
+    # seed path: the unrolled recurrence — 2 trials, its compile alone is
+    # ~15s and the per-run time is stable
+    t_ref, y_ref = _bench_jit(
+        lambda a, b, c, g: ops.gla(a, b, c, g, force="ref"),
+        q, k, v, lg, trials=min(trials, 2))
+    skey = tuning.make_key("gla_xla", jax.default_backend(), q.dtype,
+                           B=B, S=S, H=H, N=N, P=P)
+    best = tuning.autotune(
+        "gla_xla", skey, [{"chunk": c} for c in (64, 128, 256)],
+        lambda cfg: (lambda: ops.gla(q, k, v, lg, chunk=cfg["chunk"])),
+        trials=trials)
+    t_new, y_new = _bench_jit(
+        lambda a, b, c, g: ops.gla(a, b, c, g, chunk=best["chunk"]),
+        q, k, v, lg, trials=trials)
+    row("gla", f"B{B}.S{S}.H{H}.N{N}.P{P}", t_ref, t_new, y_ref, y_new,
+        extra=f"tuned_chunk={best['chunk']}")
+    return rows
+
+
+def interposition_tax(arch="granite-3-2b", calls_per_step=40, trials=5,
+                      backend="mpich"):
+    """The zero-tax claim, measured in two ways.
+
+    The GATED tax is ``calls_per_step x`` the per-call wrapper cost (20k-rep
+    microbench of ``comm_size`` through the monomorphic fast-path wrappers,
+    ``enable_fastpath(transcripts=False)``) over the native step time — a
+    deterministic composition, because at smoke-step scale (single-digit ms)
+    the in-loop step delta sits BELOW the shared host's scheduler noise
+    floor (+-3%), which would turn a 3% gate on a <1% signal into a flake
+    factory.  The raw in-loop deltas (native vs step+calls, alternating
+    trials, min) are still reported as ``*_measured_pct`` for the trend
+    table, alongside the generic-wrapper comparison."""
+    step, params, opt_state, batch = _make_step(arch)
+    fast = Cluster(1, backend).mana(0)
+    fast.enable_fastpath(transcripts=False)
+    generic = Cluster(1, backend).mana(0)
+    _run(step, params, opt_state, batch)  # warm
+    tn, tf, tg = [], [], []
+    for _ in range(trials):
+        tn.append(_run(step, params, opt_state, batch))
+        tf.append(_run(step, params, opt_state, batch, fast, calls_per_step))
+        tg.append(_run(step, params, opt_state, batch, generic,
+                       calls_per_step))
+    t_native, t_fast, t_generic = min(tn), min(tf), min(tg)
+
+    wrapper_us = {}
+    reps = 20000
+    for m, label in ((generic, "generic"), (fast, "fastpath")):
+        w = m.comm_world()
+        m.comm_size(w)  # lazy world bind outside the timed loop
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            m.comm_size(w)
+        wrapper_us[label] = 1e6 * (time.perf_counter() - t0) / reps
+
+    step_us_native = 1e6 * t_native / STEPS
+    tok = batch["tokens"].shape
+    tokens_per_step = tok[0] * tok[-1]
+    return {
+        "arch": arch, "calls_per_step": calls_per_step,
+        "step_ms_native": round(1e3 * t_native / STEPS, 3),
+        "step_ms_mana_fast": round(1e3 * t_fast / STEPS, 3),
+        "step_ms_mana_generic": round(1e3 * t_generic / STEPS, 3),
+        "interposition_tax_pct":
+            round(100 * calls_per_step * wrapper_us["fastpath"]
+                  / step_us_native, 3),
+        "interposition_tax_generic_pct":
+            round(100 * calls_per_step * wrapper_us["generic"]
+                  / step_us_native, 3),
+        "interposition_tax_measured_pct":
+            round(100 * (t_fast - t_native) / t_native, 3),
+        "interposition_tax_generic_measured_pct":
+            round(100 * (t_generic - t_native) / t_native, 3),
+        "wrapper_us_generic": round(wrapper_us["generic"], 3),
+        "wrapper_us_fastpath": round(wrapper_us["fastpath"], 3),
+        "wrapper_speedup":
+            round(wrapper_us["generic"] / wrapper_us["fastpath"], 3),
+        "tokens_per_s_native": round(STEPS * tokens_per_step / t_native, 1),
+        "tokens_per_s_mana_fast": round(STEPS * tokens_per_step / t_fast, 1),
+    }
+
+
+def compute_smoke(trials=3):
+    """The BENCH_compute payload: tuned-kernel speedups (+ in-band numerics
+    re-check), the interposition tax at the gated app's call density, and
+    the roofline fractions of the committed dry-run smoke fixture.  Gates
+    are applied by benchmarks/run.py --smoke."""
+    kernels = kernel_rows(trials=trials)
+    geo = math.exp(sum(math.log(r["speedup"]) for r in kernels)
+                   / len(kernels))
+    tax = interposition_tax(trials=max(trials, 5))
+    from benchmarks import roofline
+    cells = roofline.load_cells("pod", art_dir=roofline.SMOKE_DIR)
+    roof = [{"arch": c["arch"], "shape": c["shape"],
+             "bottleneck": c["bottleneck"],
+             "roofline_fraction": round(c["roofline_fraction"], 4)}
+            for c in cells]
+    return {"kernels": kernels,
+            "kernel_speedup_geomean": round(geo, 3),
+            "numerics_ok": all(r["numerics_ok"] for r in kernels),
+            **tax, "roofline": roof}
+
+
+def compute_rows(trials=3):
+    """CSV-shaped view of :func:`compute_smoke` for the full run.py sweep."""
+    res = compute_smoke(trials=trials)
+    out = []
+    for r in res["kernels"]:
+        out.append((f"kernel_{r['kernel']}", 1e3 * r["fast_ms"],
+                    f"ref_ms={r['ref_ms']};speedup={r['speedup']}x;"
+                    f"max_err={r['max_err']:.1e};"
+                    f"numerics_ok={r['numerics_ok']};{r['extra']}"))
+    out.append(("interposition_tax", res["wrapper_us_fastpath"],
+                f"tax_pct={res['interposition_tax_pct']};"
+                f"generic_pct={res['interposition_tax_generic_pct']};"
+                f"wrapper_speedup={res['wrapper_speedup']}x;"
+                f"tokens/s={res['tokens_per_s_mana_fast']};"
+                f"calls/step={res['calls_per_step']}"))
+    for r in res["roofline"]:
+        out.append((f"roofline_frac_{r['arch']}_{r['shape']}",
+                    1e4 * r["roofline_fraction"],
+                    f"bottleneck={r['bottleneck']}"))
     return out
 
 

@@ -23,9 +23,29 @@ the ratio MODEL_FLOPS / FLOPs_mxu exposes remat + masked-attention waste.
 from __future__ import annotations
 
 import json
+import sys
 from pathlib import Path
 
 ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+#: tiny committed artifact set so the analysis pipeline runs in CI without
+#: executing the (slow) dry-run — see benchmarks/fixtures/dryrun_smoke/
+SMOKE_DIR = Path(__file__).resolve().parent / "fixtures" / "dryrun_smoke"
+
+
+class DryrunArtifactsError(FileNotFoundError):
+    """The dry-run artifact directory is missing or empty.  Roofline
+    analysis consumes the per-cell JSON files the dry-run writes; without
+    them there is nothing to analyze.  (Before this existed, a fresh
+    checkout crashed with a bare glob over a nonexistent path.)"""
+
+    def __init__(self, art_dir: Path, detail: str):
+        self.art_dir = art_dir
+        super().__init__(
+            f"{detail}: {art_dir}\n"
+            f"Generate artifacts with the dry-run "
+            f"(PYTHONPATH=src python -m repro.launch.dryrun), point "
+            f"--dryrun-dir at an artifact directory, or use the committed "
+            f"smoke fixture: --dryrun-dir {SMOKE_DIR}")
 
 PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
@@ -76,16 +96,27 @@ def analyze(art, cfg):
     }
 
 
-def load_cells(mesh="pod", tag=""):
+def load_cells(mesh="pod", tag="", art_dir=None):
+    """Load + analyze every artifact cell for ``mesh``/``tag`` from
+    ``art_dir`` (default: the repo's ``artifacts/dryrun``).  Raises
+    :class:`DryrunArtifactsError` when the directory is missing or holds
+    no matching cells."""
+    art_dir = Path(art_dir) if art_dir is not None else ART_DIR
+    if not art_dir.is_dir():
+        raise DryrunArtifactsError(art_dir,
+                                   "dry-run artifact directory not found")
     rows = []
     from repro.configs import get_config
     suffix = f".{mesh}{'.' + tag if tag else ''}.json"
-    for p in sorted(ART_DIR.glob(f"*{suffix}")):
+    for p in sorted(art_dir.glob(f"*{suffix}")):
         art = json.loads(p.read_text())
         if (art.get("tag") or "baseline") != (tag or "baseline"):
             continue
         cfg = get_config(art["arch"])
         rows.append({**art, **analyze(art, cfg)})
+    if not rows:
+        raise DryrunArtifactsError(
+            art_dir, f"no '*{suffix}' artifact cells found in")
     return rows
 
 
@@ -102,8 +133,21 @@ def render(rows):
     return "\n".join(out)
 
 
-def main():
-    rows = load_cells("pod")
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dryrun-dir", default=None,
+                    help="artifact directory (default: artifacts/dryrun; "
+                         "the committed smoke fixture lives at "
+                         "benchmarks/fixtures/dryrun_smoke)")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    try:
+        rows = load_cells(args.mesh, args.tag, art_dir=args.dryrun_dir)
+    except DryrunArtifactsError as e:
+        print(f"roofline: {e}", file=sys.stderr)
+        return 2
     print(render(rows))
     print()
     # csv for run.py
@@ -111,7 +155,8 @@ def main():
         print(f"roofline,{r['arch']},{r['shape']},{r['compute_s']:.5f},"
               f"{r['memory_s']:.5f},{r['collective_s']:.5f},{r['bottleneck']},"
               f"{r['useful_ratio']:.3f}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -18,12 +18,13 @@ import sys
 import traceback
 
 
-def smoke(out_path: str, recovery_out: str) -> None:
+def smoke(out_path: str, recovery_out: str, compute_out: str) -> None:
     """Tiny ckpt perf gates: seed-like serial writer vs parallel + zlib +
     incremental engine (write path), buffered vs pipelined snapshot
-    (stop-the-world path), and the per-tier recovery MTTR gate (RAM tier
-    must beat disk); writes the comparisons to ``out_path`` /
-    ``recovery_out``.
+    (stop-the-world path), the per-tier recovery MTTR gate (RAM tier
+    must beat disk), and the compute-plane gates (tuned-kernel speedup,
+    interposition tax, kernel numerics); writes the comparisons to
+    ``out_path`` / ``recovery_out`` / ``compute_out``.
 
     Exits non-zero on ANY gate failure so CI actually enforces the perf
     trajectory instead of just recording it."""
@@ -73,7 +74,39 @@ def smoke(out_path: str, recovery_out: str) -> None:
     # multi-tier recovery gate: the peer-replicated RAM tier must restore
     # faster than the newest committed disk image at world 8
     ok &= bench_recovery.smoke(recovery_out)
-    print(f"wrote {out_path} and {recovery_out}")
+    # compute-plane gates: tuned dispatch must beat the seed oracles by
+    # >=1.2x geomean WITH matching numerics, and fast-path interposition
+    # must cost <=3% of the native step at the gated app's call density
+    comp = bench_overhead.compute_smoke()
+    with open(compute_out, "w") as f:
+        json.dump({"bench": "compute_smoke", "results": comp}, f, indent=2)
+    for r in comp["kernels"]:
+        print(f"compute_{r['kernel']}: ref={r['ref_ms']}ms "
+              f"fast={r['fast_ms']}ms speedup={r['speedup']}x "
+              f"max_err={r['max_err']:.1e} ok={r['numerics_ok']}",
+              flush=True)
+    print(f"compute_smoke: geomean={comp['kernel_speedup_geomean']}x "
+          f"tax={comp['interposition_tax_pct']}% "
+          f"(generic {comp['interposition_tax_generic_pct']}%) "
+          f"wrapper={comp['wrapper_us_fastpath']}us "
+          f"({comp['wrapper_speedup']}x vs generic) "
+          f"tokens/s={comp['tokens_per_s_mana_fast']}", flush=True)
+    if comp["kernel_speedup_geomean"] < bench_overhead.KERNEL_GEOMEAN_GATE:
+        print(f"GATE FAILED: kernel speedup geomean "
+              f"{comp['kernel_speedup_geomean']:.2f}x < "
+              f"{bench_overhead.KERNEL_GEOMEAN_GATE}x", flush=True)
+        ok = False
+    if not comp["numerics_ok"]:
+        bad = [r["kernel"] for r in comp["kernels"] if not r["numerics_ok"]]
+        print(f"GATE FAILED: kernel numerics diverge from oracle: {bad}",
+              flush=True)
+        ok = False
+    if comp["interposition_tax_pct"] > bench_overhead.TAX_GATE_PCT:
+        print(f"GATE FAILED: interposition tax "
+              f"{comp['interposition_tax_pct']:.2f}% > "
+              f"{bench_overhead.TAX_GATE_PCT}%", flush=True)
+        ok = False
+    print(f"wrote {out_path}, {recovery_out} and {compute_out}")
     if not ok:
         sys.exit(1)
 
@@ -85,6 +118,7 @@ def main() -> None:
     sections.append(("vid", bench_vid.rows))
     from benchmarks import bench_overhead
     sections.append(("overhead", bench_overhead.rows))
+    sections.append(("compute", bench_overhead.compute_rows))
     from benchmarks import bench_ckpt
     sections.append(("ckpt", bench_ckpt.rows))
     from benchmarks import bench_restart
@@ -128,8 +162,10 @@ if __name__ == "__main__":
                     help="smoke-mode output path")
     ap.add_argument("--recovery-out", default="BENCH_recovery.json",
                     help="smoke-mode per-tier recovery MTTR output path")
+    ap.add_argument("--compute-out", default="BENCH_compute.json",
+                    help="smoke-mode compute-plane output path")
     args = ap.parse_args()
     if args.smoke:
-        smoke(args.out, args.recovery_out)
+        smoke(args.out, args.recovery_out, args.compute_out)
     else:
         main()

@@ -978,3 +978,167 @@ _BY_NAME = {s.name: s for s in REGISTRY}
 #: wrapper names whose REQUEST results the quiesce protocol must complete
 DRAINING_CALLS = tuple(s.name for s in REGISTRY if s.drains)
 COLLECTIVE_CALLS = tuple(s.name for s in REGISTRY if s.collective)
+
+
+# ---------------------------------------------------------------------------
+# monomorphic fast-path compiler — the "zero interposition tax" leg
+# ---------------------------------------------------------------------------
+
+def compile_fastpath(spec: CallSpec, mana, *,
+                     transcripts: bool = True) -> Callable:
+    """Compile a MONOMORPHIC wrapper for ``spec``, specialized to one Mana
+    instance's configuration at generation time.
+
+    The generic :func:`_make_wrapper` pays, on every call, for generality:
+    argument-dict assembly with name-set validation, a loop over declared
+    handle args with per-arg vector/optional branching, a capability-set
+    membership test, and a four-way policy dispatch on the exit path.  The
+    compiler burns all of those decisions into straight-line source:
+
+    * the python signature IS the spec signature (defaults native, unknown
+      kwargs rejected by the interpreter — no dict build, no name set);
+    * vid deref is inlined per argument: ONE table lookup yielding both the
+      kind check and the physical handle (the generic path looks up twice,
+      in ``_desc`` then ``_phys``);
+    * the capability gate is resolved NOW against the live backend, so the
+      call body goes straight to the native or derived implementation
+      (``self.backend`` is still fetched at call time inside the lower
+      body — a halted rank's DeadLowerHalf raises exactly as before);
+    * only this spec's policy tail is emitted — no policy dispatch;
+    * with ``transcripts=False`` the transcript append is NOT generated at
+      all: no branch, no ``_canon`` walk, nothing to mispredict;
+    * the failpoint stays, reduced to its true cost: one dict probe.
+
+    Everything observable is unchanged when transcripts are on: same typed
+    errors, same creation-log appends, same transcript entries, same
+    ``translate_count`` accounting per translation mode (verified by
+    tests/test_fastpath.py parity sweep).  Regenerate after swapping a
+    backend (``Mana.enable_fastpath`` does this for you).
+    """
+    from repro.core.faults import _ARMED
+    from repro.core.vid import vid_kind as _vid_kind
+
+    names = tuple(a.name for a in spec.args)
+    handle_args = tuple(a for a in spec.args if a.kind is not None)
+    mode = mana.translation
+    legacy = mana.legacy is not None
+
+    impl = spec.lower
+    if spec.capability is not None \
+            and spec.capability not in mana.backend.capabilities():
+        impl = spec.fallback
+
+    ns = {"CallFrame": CallFrame, "_canon": _canon,
+          "make_handle": make_handle, "failpoint": failpoint,
+          "_ARMED": _ARMED, "_spec": spec, "_impl": impl,
+          "_free_vid": _free_vid, "_check_kind": _check_kind,
+          "_log_fields": spec.log_fields, "_log_op": spec.log_op or spec.name,
+          "_vid_kind": _vid_kind}
+    for a in handle_args:
+        ns[f"_k_{a.name}"] = a.kind
+        ns[f"_a_{a.name}"] = a
+
+    params = ["self"]
+    for a in spec.args:
+        if a.required:
+            params.append(a.name)
+        else:
+            ns[f"_dflt_{a.name}"] = a.default
+            params.append(f"{a.name}=_dflt_{a.name}")
+
+    L = []
+
+    def emit(line="", indent=1):
+        L.append("    " * indent + line)
+
+    def emit_deref(arg_name, src, dst, indent):
+        """One-lookup vid deref + kind check + lazy bind, per mode."""
+        if mode == "slow":
+            # legacy tables keep their measured cost model — route through
+            # the instrumented slow path, just without the generic plumbing
+            emit(f"{dst} = self._desc({src})", indent)
+            emit(f"if {dst}.kind is not _k_{arg_name}: "
+                 f"_check_kind(_spec, _a_{arg_name}, {dst})", indent)
+            emit(f"{dst}_p = self._phys({src})", indent)
+            return
+        emit(f"{dst} = self.vids.lookup({src} & 0xFFFFFFFF)", indent)
+        emit(f"if {dst}.kind is not _k_{arg_name}: "
+             f"_check_kind(_spec, _a_{arg_name}, {dst})", indent)
+        emit(f"if {dst}.phys is None: self._bind_lazy({dst})", indent)
+        if mode == "fast":
+            emit("self.translate_count += 1", indent)
+        emit(f"{dst}_p = {dst}.phys", indent)
+
+    emit(f"def {spec.name}({', '.join(params)}):", 0)
+    emit(f"if _ARMED.get('mpi.{spec.name}'):")
+    emit(f"    failpoint('mpi.{spec.name}', rank=self.rank, "
+         f"call={spec.name!r})")
+    raw_items = ", ".join(f"{n!r}: {n}" for n in names)
+    emit(f"frame = CallFrame({{{raw_items}}})")
+
+    if spec.policy is Policy.FREES:
+        fa = handle_args[0]
+        emit(f"_vid = _free_vid(self, _spec, _a_{fa.name}, {fa.name})")
+        emit(f"frame.desc[{fa.name!r}] = self.vids.lookup(_vid)")
+        emit(f"frame.phys[{fa.name!r}] = self._phys({fa.name})")
+    else:
+        for a in handle_args:
+            base = 1
+            if a.optional:
+                emit(f"if {a.name} is not None:")
+                base = 2
+            if a.vector:
+                emit(f"_ds_{a.name} = []; _ps_{a.name} = []", base)
+                emit(f"for _h in {a.name}:", base)
+                emit_deref(a.name, "_h", f"_d_{a.name}", base + 1)
+                emit(f"_ds_{a.name}.append(_d_{a.name}); "
+                     f"_ps_{a.name}.append(_d_{a.name}_p)", base + 1)
+                emit(f"frame.desc[{a.name!r}] = _ds_{a.name}", base)
+                emit(f"frame.phys[{a.name!r}] = _ps_{a.name}", base)
+            else:
+                emit_deref(a.name, a.name, f"_d_{a.name}", base)
+                emit(f"frame.desc[{a.name!r}] = _d_{a.name}", base)
+                emit(f"frame.phys[{a.name!r}] = _d_{a.name}_p", base)
+
+    emit("res = _impl(self, frame)")
+
+    if spec.policy in (Policy.CREATES, Policy.REQUEST):
+        emit("if res is not None:")
+        emit("    desc, phys = res")
+        emit("    out = make_handle(self._register(desc, phys))")
+        if spec.policy is Policy.CREATES:
+            emit("    payload = _log_fields(self, frame, desc) "
+                 "if _log_fields is not None else dict(desc.meta)")
+            emit("    self.log.append((_log_op, payload))")
+        emit("else:")
+        emit("    out = None")
+    elif spec.policy is Policy.FREES:
+        if spec.log_op:
+            emit("self.log.append((_log_op, {'vid': _vid}))")
+        if legacy:
+            emit("_lvid = self._legacy_of.pop(_vid, None)")
+            emit("if _lvid is not None:")
+            emit("    from repro.core.interpose import _KIND_NAME")
+            emit("    self.legacy.free(_KIND_NAME[_vid_kind(_vid)], _lvid)")
+        emit("self.vids.free(_vid)")
+        emit("out = None")
+    else:
+        emit("out = res")
+
+    if transcripts:
+        tr_items = ", ".join(f"{n!r}: _canon({n})" for n in names)
+        emit(f"self.transcript.append(({spec.name!r}, "
+             f"{{{tr_items}}}, _canon(out)))")
+    emit("return out")
+
+    src = "\n".join(L)
+    exec(compile(src, f"<fastpath:{spec.name}>", "exec"), ns)  # noqa: S102
+    fn = ns[spec.name]
+    fn.__qualname__ = f"Mana.{spec.name}[fastpath]"
+    fn.__doc__ = ((spec.doc or spec.name)
+                  + f"\n\n[fastpath-compiled: translation={mode}, "
+                    f"transcripts={'on' if transcripts else 'off'}]")
+    fn.__callspec__ = spec
+    fn.__fastpath__ = True
+    fn.__source__ = src
+    return fn

@@ -102,6 +102,48 @@ class Cluster:
             pool.shutdown(wait=False)
             self._coll_pool = None
 
+    def run_collective_async(self, fn: Callable, *,
+                             timeout: float = 30.0) -> "CollectiveHandle":
+        """START ``fn(mana)`` on every live rank and return immediately with
+        a :class:`CollectiveHandle`; ``handle.wait()`` blocks for the
+        results.  This is the async-start/late-wait split that lets the
+        training loop overlap the per-step metrics allreduce with device
+        compute: the rank threads begin exchanging (or blocking on a value
+        callable that forces a device transfer) while the caller keeps
+        dispatching work, and the wait lands just before the result is
+        needed (see docs/performance.md, "Async allreduce overlap").
+
+        The handle must be waited before the next collective on this
+        cluster is started — collectives need every rank entering
+        concurrently, and an unwaited straggler would poison the pool."""
+        import threading as _threading
+
+        manas = self.manas
+        out = [None] * len(manas)
+        errs: list[BaseException] = []
+        lock = _threading.Lock()
+        done = _threading.Event()
+        state = {"remaining": len(manas)}
+
+        def run(i, m):
+            try:
+                r = fn(m)
+            except BaseException as e:  # noqa: BLE001 — surface to caller
+                with lock:
+                    errs.append(e)
+                done.set()
+            else:
+                out[i] = r
+                with lock:
+                    state["remaining"] -= 1
+                    if state["remaining"] == 0:
+                        done.set()
+
+        pool = self._coll_executor(len(manas))
+        for i, m in enumerate(manas):
+            pool.submit(run, i, m)
+        return CollectiveHandle(self, out, errs, done, state, timeout)
+
     def run_collective(self, fn: Callable, *, timeout: float = 30.0) -> list:
         """Execute ``fn(mana)`` concurrently on every live rank — the
         driver for collective wrappers, which every member must enter
@@ -113,43 +155,7 @@ class Cluster:
         poisoned pool is discarded; stragglers drain on their own).
         Dead-rank errors outrank secondary timeouts so the supervisor
         classifies the root cause."""
-        import threading as _threading
-
-        from repro.core.faults import RankDeadError
-        manas = self.manas
-        out = [None] * len(manas)
-        errs: list[BaseException] = []
-        lock = _threading.Lock()
-        done = _threading.Event()
-        remaining = len(manas)
-
-        def run(i, m):
-            nonlocal remaining
-            try:
-                r = fn(m)
-            except BaseException as e:  # noqa: BLE001 — surface to caller
-                with lock:
-                    errs.append(e)
-                done.set()
-            else:
-                out[i] = r
-                with lock:
-                    remaining -= 1
-                    if remaining == 0:
-                        done.set()
-
-        pool = self._coll_executor(len(manas))
-        for i, m in enumerate(manas):
-            pool.submit(run, i, m)
-        if not done.wait(timeout):
-            self._discard_coll_executor()
-            raise TimeoutError(f"collective did not complete within "
-                               f"{timeout}s ({remaining} rank(s) pending)")
-        if errs:
-            self._discard_coll_executor()
-            errs.sort(key=lambda e: not isinstance(e, RankDeadError))
-            raise errs[0]
-        return out
+        return self.run_collective_async(fn, timeout=timeout).wait()
 
     # -- heartbeats / failure detection ------------------------------------
     def heartbeat(self, rank: int):
@@ -390,3 +396,51 @@ class Cluster:
         fresh.restart_timings = timings
         fresh.events.append(("restarted", manifest["step"], time.time()))
         return fresh
+
+
+class CollectiveHandle:
+    """Waitable result of :meth:`Cluster.run_collective_async`.
+
+    ``wait()`` applies exactly the fail-fast policy of the synchronous
+    path — timeout discards the poisoned pool, dead-rank errors outrank
+    secondary timeouts — and is idempotent (subsequent waits return the
+    cached result or re-raise the same error)."""
+
+    def __init__(self, cluster, out, errs, done, state, timeout):
+        self._cluster = cluster
+        self._out = out
+        self._errs = errs
+        self._done = done
+        self._state = state
+        self._timeout = timeout
+        self._result = None
+        self._exc: BaseException | None = None
+        self._finished = False
+
+    @property
+    def done(self) -> bool:
+        """True once every rank finished (or any rank errored)."""
+        return self._finished or self._done.is_set()
+
+    def wait(self) -> list:
+        from repro.core.faults import RankDeadError
+        if self._finished:
+            if self._exc is not None:
+                raise self._exc
+            return self._result
+        if not self._done.wait(self._timeout):
+            self._cluster._discard_coll_executor()
+            self._finished = True
+            self._exc = TimeoutError(
+                f"collective did not complete within {self._timeout}s "
+                f"({self._state['remaining']} rank(s) pending)")
+            raise self._exc
+        if self._errs:
+            self._cluster._discard_coll_executor()
+            self._errs.sort(key=lambda e: not isinstance(e, RankDeadError))
+            self._finished = True
+            self._exc = self._errs[0]
+            raise self._exc
+        self._finished = True
+        self._result = self._out
+        return self._result

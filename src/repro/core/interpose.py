@@ -148,6 +148,40 @@ class Mana:
         return self.world_handle
 
     # ------------------------------------------------------------------
+    # monomorphic fast-path wrappers (opt-in, per instance)
+    # ------------------------------------------------------------------
+    @property
+    def fastpath_enabled(self) -> bool:
+        return bool(getattr(self, "_fastpath", False))
+
+    def enable_fastpath(self, *, transcripts: bool = True) -> None:
+        """Shadow every generated MPI wrapper with a monomorphic compiled
+        version (``callspec.compile_fastpath``) specialized to THIS
+        instance's translation mode, backend capability set, and transcript
+        setting.  ``transcripts=False`` omits transcript recording entirely
+        from the compiled wrappers (record-replay logging and drain
+        participation are unaffected — see docs/performance.md for exactly
+        what is and isn't recorded).
+
+        Instance-level only: the class-level generic wrappers stay intact,
+        and :meth:`disable_fastpath` restores them.  Call again after
+        anything that swaps ``self.backend`` to a different flavor, so the
+        capability gate is re-resolved."""
+        import types
+        for spec in callspec.REGISTRY:
+            fn = callspec.compile_fastpath(spec, self, transcripts=transcripts)
+            self.__dict__[spec.name] = types.MethodType(fn, self)
+        self._fastpath = True
+        self._fastpath_transcripts = transcripts
+
+    def disable_fastpath(self) -> None:
+        """Drop the compiled instance wrappers; calls fall through to the
+        generic class-level wrappers again."""
+        for spec in callspec.REGISTRY:
+            self.__dict__.pop(spec.name, None)
+        self._fastpath = False
+
+    # ------------------------------------------------------------------
     # buffered receive: the drain-redelivery guarantee, shared by user
     # p2p AND every collective (native and derived alike)
     # ------------------------------------------------------------------

@@ -1,11 +1,23 @@
-"""Split-KV flash-decoding Pallas kernel (one query token, huge KV cache).
+"""Split-KV flash-decoding Pallas kernels (one query token, huge KV cache).
 
-The cache sequence is cut into `n_splits` slabs; each grid step computes
-unnormalized partials (m, l, o) for its slab into separate outputs, and a tiny
-jnp epilogue renormalizes across slabs. This mirrors — at the single-chip
-level — the cross-chip split the serving path performs with shard_map psum
-(models/layers.decode_attention), so the same math runs intra-chip on the MXU
-and inter-chip over ICI.
+Single-pass variant: the cache sequence is cut into `n_splits` slabs and the
+slab axis is the sequential ('arbitrary') innermost grid dimension, with the
+online-softmax carry (m, l, acc) held in VMEM scratch across slabs — so the
+renormalizing combine happens *inside* the kernel and nothing but the final
+[B, H, D] output ever leaves VMEM.  (The seed two-pass version wrote per-slab
+unnormalized partials to HBM and renormalized in a jnp epilogue; the
+single-pass form removes that 2x partials round-trip, which matters because
+decode is bandwidth-bound — see docs/performance.md.)
+
+Paged variant: :func:`paged_decode_attention` reads K/V from a page pool
+([n_pages, page_size, K, D]) through a per-sequence page table, using
+``pltpu.PrefetchScalarGridSpec`` so the page indices are scalar-prefetched
+and drive the BlockSpec index_map directly — the gather happens in the DMA
+engine, not as an XLA gather.  This is the serving-path layout where
+sequences share one physical pool and a sequence's pages are scattered.
+
+`n_splits` is a tuned knob: pass an int, or ``None`` to consult the on-disk
+autotuner cache (kernels/tuning.py) with a fallback of 8.
 
 Layout: q [B, H, D]; k,v [B, S, K, D] -> out [B, H, D].
 """
@@ -17,13 +29,45 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tuning
 
 NEG_INF = -1e30
 
+DEFAULT_SPLITS = {"n_splits": 8}
+SPLIT_CANDIDATES = (1, 2, 4, 8, 16, 32)
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *,
-            scale, split, G, window):
+
+def _accumulate(s, valid, vv, G, m_scr, l_scr, acc_scr):
+    """Online-softmax update of the VMEM carry with one slab's scores.
+    s: [K, G, split] masked scores; vv: [split, K, D]."""
+    K = s.shape[0]
+    m_prev = m_scr[...].reshape(K, G)
+    l_prev = l_scr[...].reshape(K, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    o = jnp.einsum("kgs,skd->kgd", p, vv,
+                   preferred_element_type=jnp.float32)
+    acc = acc_scr[...].reshape(K, G, -1)
+    acc_scr[...] = (acc * alpha[..., None] + o).reshape(acc_scr.shape)
+    m_scr[...] = m_new.reshape(m_scr.shape)
+    l_scr[...] = l_new.reshape(l_scr.shape)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, split, n_splits, G, window):
     si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
     length = len_ref[0]
     q = q_ref[0].astype(jnp.float32) * scale            # [H, D]
     kk = k_ref[0].astype(jnp.float32)                   # [split, K, D]
@@ -36,25 +80,31 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *,
     if window is not None:
         valid = jnp.logical_and(valid, kpos >= length - window)
     s = jnp.where(valid, s, NEG_INF)
-    m = jnp.max(s, axis=-1)                              # [K, G]
-    p = jnp.exp(s - m[..., None])
-    p = jnp.where(valid, p, 0.0)
-    l = jnp.sum(p, axis=-1)
-    vv = v_ref[0].astype(jnp.float32)                    # [split, K, D]
-    o = jnp.einsum("kgs,skd->kgd", p, vv)
-    m_ref[0, 0] = m.reshape(K * G)
-    l_ref[0, 0] = l.reshape(K * G)
-    o_ref[0, 0] = o.reshape(K * G, -1)
+    _accumulate(s, valid, v_ref[0].astype(jnp.float32), G,
+                m_scr, l_scr, acc_scr)
+
+    @pl.when(si == n_splits - 1)
+    def _finalize():
+        acc = acc_scr[...]
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
 
 
-def decode_attention(q, k, v, length, *, n_splits=8, window=None,
+def decode_attention(q, k, v, length, *, n_splits=None, window=None,
                      interpret=None):
-    """q: [B,H,D]; k,v: [B,S,K,D]; attend to cache positions < length."""
+    """q: [B,H,D]; k,v: [B,S,K,D]; attend to cache positions < length.
+
+    ``n_splits=None`` consults the autotuner cache (fallback 8)."""
     B, H, D = q.shape
     _, S, K, _ = k.shape
     G = H // K
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if n_splits is None:
+        key = tuning.make_key("decode_attention", jax.default_backend(),
+                              q.dtype, S=S, H=H, K=K, D=D, window=window or 0)
+        n_splits = tuning.tuned_or_default(
+            "decode_attention", key, DEFAULT_SPLITS)["n_splits"]
     n_splits = min(n_splits, S)
     while S % n_splits:
         n_splits -= 1
@@ -62,9 +112,9 @@ def decode_attention(q, k, v, length, *, n_splits=8, window=None,
     scale = 1.0 / math.sqrt(D)
     lens = jnp.full((B,), length, jnp.int32)
 
-    m, l, o = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, split=split, G=G,
-                          window=window),
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, split=split,
+                          n_splits=n_splits, G=G, window=window),
         grid=(B, n_splits),
         in_specs=[
             pl.BlockSpec((1,), lambda b, s: (b,)),
@@ -72,22 +122,117 @@ def decode_attention(q, k, v, length, *, n_splits=8, window=None,
             pl.BlockSpec((1, split, K, D), lambda b, s: (b, s, 0, 0)),
             pl.BlockSpec((1, split, K, D), lambda b, s: (b, s, 0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, H), lambda b, s: (b, s, 0)),
-            pl.BlockSpec((1, 1, H), lambda b, s: (b, s, 0)),
-            pl.BlockSpec((1, 1, H, D), lambda b, s: (b, s, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, n_splits, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, n_splits, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, n_splits, H, D), jnp.float32),
+        out_specs=pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
         ],
         interpret=interpret,
     )(lens, q, k, v)
+    return out
 
-    # renormalizing combine across splits (same algebra as the shard_map psum)
-    m_g = jnp.max(m, axis=1)                              # [B,H]
-    corr = jnp.exp(m - m_g[:, None])
-    l_g = jnp.sum(l * corr, axis=1)
-    o_g = jnp.sum(o * corr[..., None], axis=1)
-    return (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, page_size, n_pages, G,
+                  window):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    q = q_ref[0].astype(jnp.float32) * scale            # [H, D]
+    kk = k_ref[...].astype(jnp.float32)                 # [page_size, K, D]
+    K = kk.shape[1]
+    qh = q.reshape(K, G, q.shape[-1])
+    s = jnp.einsum("kgd,skd->kgs", qh, kk,
+                   preferred_element_type=jnp.float32)
+    kpos = pi * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (K, G, page_size), 2)
+    valid = kpos < length
+    if window is not None:
+        valid = jnp.logical_and(valid, kpos >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+    _accumulate(s, valid, v_ref[...].astype(jnp.float32), G,
+                m_scr, l_scr, acc_scr)
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        acc = acc_scr[...]
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           window=None, interpret=None):
+    """Decode attention over a paged KV pool.
+
+    q: [B, H, D]; k_pages, v_pages: [n_pool_pages, page_size, K, D];
+    page_table: [B, n_pages] int32 indices into the pool (entries past a
+    sequence's length must still be valid pool indices — use 0);
+    lengths: [B] int32 live cache length per sequence.
+
+    The page table and lengths are scalar-prefetched; the table drives the
+    K/V BlockSpec index_maps so each grid step DMAs exactly one physical
+    page per sequence — the virtual->physical translation costs nothing on
+    the compute path.
+    """
+    B, H, D = q.shape
+    page_size, K = k_pages.shape[1], k_pages.shape[2]
+    n_pages = page_table.shape[1]
+    G = H // K
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = 1.0 / math.sqrt(D)
+    page_table = page_table.astype(jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    def page_index(b, p, pt_ref, len_ref):
+        return (pt_ref[b, p], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, p, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((None, page_size, K, D), page_index),
+            pl.BlockSpec((None, page_size, K, D), page_index),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, pt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, page_size=page_size,
+                          n_pages=n_pages, G=G, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)
+
+
+def tune(q, k, v, length, *, window=None, trials=3,
+         candidates=SPLIT_CANDIDATES, interpret=None):
+    """Autotune ``n_splits`` for this cache shape; persists the winner."""
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    key = tuning.make_key("decode_attention", jax.default_backend(), q.dtype,
+                          S=S, H=H, K=K, D=D, window=window or 0)
+
+    def bench(cfg):
+        fn = functools.partial(decode_attention, n_splits=cfg["n_splits"],
+                               window=window, interpret=interpret)
+        return lambda: fn(q, k, v, length)
+
+    cands = [{"n_splits": n} for n in candidates if n <= S]
+    return tuning.autotune("decode_attention", key, cands, bench,
+                           trials=trials)

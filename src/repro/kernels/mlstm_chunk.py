@@ -1,7 +1,19 @@
-"""Chunked gated-linear-attention Pallas kernel (the mLSTM / SSD hot loop).
+"""Chunked gated-linear-attention Pallas kernels (the mLSTM / SSD hot loop).
 
-One grid row per (batch x head); the chunk axis is the sequential ('arbitrary')
-grid dimension with the [N, P] recurrent state carried in VMEM scratch:
+Two schedules over the same math:
+
+* :func:`gla_chunk` — one grid row per (batch x head); the chunk axis is the
+  sequential ('arbitrary') grid dimension with the [N, P] recurrent state
+  carried in VMEM scratch.  Minimal memory traffic, but the chunk axis
+  serializes: wall-clock is O(nc) kernel steps per head.
+* :func:`gla_chunk_parallel` — two fully-parallel Pallas phases bridged by
+  an XLA ``associative_scan`` over chunks.  Phase A computes, for every
+  chunk independently, the intra-chunk output plus the chunk's state delta
+  and total decay; the scan combines ``(g, d)`` pairs with
+  ``(g1*g2, d2 + g2*d1)`` (decay composes multiplicatively, deltas decay
+  under later gates) in O(log nc) depth; phase B adds each chunk's
+  inter-chunk read of the scanned start-state.  Use this when nc is large
+  enough that the sequential carry, not bandwidth, bounds the step.
 
   intra-chunk:  y_i += (q_i k_j^T * exp(cum_i - cum_j))_{j<=i} v_j    (MXU)
   inter-chunk:  y_i += (q_i * exp(cum_i)) . state                      (MXU)
@@ -10,6 +22,9 @@ grid dimension with the [N, P] recurrent state carried in VMEM scratch:
 Matches models/ssm.chunked_gla (the XLA production path) and is tested against
 ref.naive_gla. Log-decays arrive pre-summed per chunk (cumsum done outside —
 cheap VPU work that XLA fuses into the producer).
+
+``chunk`` is a tuned knob: pass an int, or ``None`` to consult the on-disk
+autotuner cache (kernels/tuning.py) with a fallback of 256.
 
 Layout: q,k [BH, nc, c, N]; v [BH, nc, c, P]; cum [BH, nc, c] (within-chunk
 inclusive cumsum of log decay).
@@ -23,6 +38,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tuning
+
+DEFAULT_CHUNK = {"chunk": 256}
+CHUNK_CANDIDATES = (64, 128, 256, 512)
+
+
+def _intra_and_delta(q, k, v, cum):
+    """Shared per-chunk math: intra-chunk output and the chunk's state
+    delta/total decay. q,k: [c,N] f32; v: [c,P] f32; cum: [c] f32."""
+    total = cum[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [c,c]
+    dec = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    w = jnp.where(jj <= ii, jnp.exp(dec), 0.0)
+    y_intra = jax.lax.dot_general(s * w, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    k_scaled = k * jnp.exp(total - cum)[:, None]
+    dstate = jax.lax.dot_general(k_scaled, v, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    return y_intra, dstate, total
+
 
 def _kernel(q_ref, k_ref, v_ref, cum_ref, y_ref, state_scr, *, chunk):
     ci = pl.program_id(1)
@@ -35,35 +73,47 @@ def _kernel(q_ref, k_ref, v_ref, cum_ref, y_ref, state_scr, *, chunk):
     k = k_ref[0, 0].astype(jnp.float32)
     v = v_ref[0, 0].astype(jnp.float32)                  # [c, P]
     cum = cum_ref[0, 0].astype(jnp.float32)              # [c]
-    total = cum[-1]
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [c,c]
-    dec = cum[:, None] - cum[None, :]
-    ii = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    w = jnp.where(jj <= ii, jnp.exp(dec), 0.0)
-    y = jax.lax.dot_general(s * w, v, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)
+    y, dstate, total = _intra_and_delta(q, k, v, cum)
     state = state_scr[...]
     y = y + jax.lax.dot_general(q * jnp.exp(cum)[:, None], state,
                                 (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-    k_scaled = k * jnp.exp(total - cum)[:, None]
-    dstate = jax.lax.dot_general(k_scaled, v, (((0,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
     state_scr[...] = state * jnp.exp(total) + dstate
     y_ref[0, 0] = y.astype(y_ref.dtype)
 
 
-def gla_chunk(q, k, v, lg, *, chunk=256, interpret=None):
-    """q,k: [B,S,H,N]; v: [B,S,H,P]; lg: [B,S,H] log decays (<=0).
-    Returns y [B,S,H,P] (final state stays device-side in the scan carry of
-    the XLA path; the kernel recomputes it per call)."""
+def _phase_a_kernel(q_ref, k_ref, v_ref, cum_ref, y_ref, g_ref, d_ref):
+    """Per-chunk intra output + (decay, delta) pair — no cross-chunk data."""
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    cum = cum_ref[0, 0].astype(jnp.float32)
+    y, dstate, total = _intra_and_delta(q, k, v, cum)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    g_ref[0, 0] = jnp.exp(total)
+    d_ref[0, 0] = dstate
+
+
+def _phase_b_kernel(q_ref, cum_ref, state_ref, yin_ref, y_ref):
+    """Add each chunk's read of its (pre-scanned) start state."""
+    q = q_ref[0, 0].astype(jnp.float32)
+    cum = cum_ref[0, 0].astype(jnp.float32)
+    state = state_ref[0, 0]
+    y = yin_ref[0, 0].astype(jnp.float32) + jax.lax.dot_general(
+        q * jnp.exp(cum)[:, None], state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def _prep(q, k, v, lg, chunk):
+    """Shared layout prep; resolves the chunk knob through the tuner."""
     B, S, H, N = q.shape
     P = v.shape[-1]
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    if chunk is None:
+        key = tuning.make_key("gla_chunk", jax.default_backend(), q.dtype,
+                              S=S, H=H, N=N, P=P)
+        chunk = tuning.tuned_or_default("gla_chunk", key,
+                                        DEFAULT_CHUNK)["chunk"]
     c = min(chunk, S)
     while S % c:
         c //= 2
@@ -78,6 +128,16 @@ def gla_chunk(q, k, v, lg, *, chunk=256, interpret=None):
     # within-chunk inclusive cumsum of the log decays
     cumc = jnp.cumsum(lg.reshape(B, nc, c, H).astype(jnp.float32), axis=2)
     cumf = jnp.moveaxis(cumc, 3, 1).reshape(B * H, nc, c)
+    return qf, kf, vf, cumf, (B, S, H, N, P, c, nc)
+
+
+def gla_chunk(q, k, v, lg, *, chunk=None, interpret=None):
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; lg: [B,S,H] log decays (<=0).
+    Returns y [B,S,H,P] (final state stays device-side in the scan carry of
+    the XLA path; the kernel recomputes it per call)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qf, kf, vf, cumf, (B, S, H, N, P, c, nc) = _prep(q, k, v, lg, chunk)
 
     y = pl.pallas_call(
         functools.partial(_kernel, chunk=c),
@@ -94,3 +154,72 @@ def gla_chunk(q, k, v, lg, *, chunk=256, interpret=None):
         interpret=interpret,
     )(qf, kf, vf, cumf)
     return jnp.moveaxis(y.reshape(B * H, S, P).reshape(B, H, S, P), 1, 2)
+
+
+def gla_chunk_parallel(q, k, v, lg, *, chunk=None, interpret=None):
+    """Chunk-parallel schedule of :func:`gla_chunk` — same signature, same
+    numerics (both checked against ref.naive_gla)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qf, kf, vf, cumf, (B, S, H, N, P, c, nc) = _prep(q, k, v, lg, chunk)
+    specs4 = lambda w: pl.BlockSpec((1, 1, c, w), lambda i, j: (i, j, 0, 0))
+    spec_cum = pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0))
+    spec_state = pl.BlockSpec((1, 1, N, P), lambda i, j: (i, j, 0, 0))
+    spec_g = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+
+    y_intra, g, d = pl.pallas_call(
+        _phase_a_kernel,
+        grid=(B * H, nc),
+        in_specs=[specs4(N), specs4(N), specs4(P), spec_cum],
+        out_specs=[specs4(P), spec_g, spec_state],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, nc, c, P), v.dtype),
+            jax.ShapeDtypeStruct((B * H, nc), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, nc, N, P), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(qf, kf, vf, cumf)
+
+    # inclusive scan of (decay, delta): state after chunk j given zeros
+    # before chunk 0; combine is associative because decay composes
+    # multiplicatively and earlier deltas decay under later gates
+    def combine(a, b):
+        g1, d1 = a
+        g2, d2 = b
+        return g1 * g2, d2 + g2[..., None, None] * d1
+
+    g_inc, d_inc = jax.lax.associative_scan(combine, (g, d), axis=1)
+    # exclusive form: state at each chunk's START (zeros for chunk 0)
+    start = jnp.concatenate(
+        [jnp.zeros_like(d_inc[:, :1]), d_inc[:, :-1]], axis=1)
+
+    y = pl.pallas_call(
+        _phase_b_kernel,
+        grid=(B * H, nc),
+        in_specs=[specs4(N), spec_cum, spec_state, specs4(P)],
+        out_specs=specs4(P),
+        out_shape=jax.ShapeDtypeStruct((B * H, nc, c, P), v.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(qf, cumf, start, y_intra)
+    return jnp.moveaxis(y.reshape(B * H, S, P).reshape(B, H, S, P), 1, 2)
+
+
+def tune(q, k, v, lg, *, trials=3, candidates=CHUNK_CANDIDATES,
+         interpret=None):
+    """Autotune the chunk length for this shape; persists the winner."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    key = tuning.make_key("gla_chunk", jax.default_backend(), q.dtype,
+                          S=S, H=H, N=N, P=P)
+
+    def bench(cfg):
+        fn = functools.partial(gla_chunk, chunk=cfg["chunk"],
+                               interpret=interpret)
+        return lambda: fn(q, k, v, lg)
+
+    cands = [{"chunk": c} for c in candidates if c <= S]
+    return tuning.autotune("gla_chunk", key, cands, bench, trials=trials)

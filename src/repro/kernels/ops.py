@@ -1,6 +1,10 @@
-"""Jit'd dispatch wrappers: Pallas kernel on TPU, XLA reference path on CPU
-(interpret=True is available everywhere for validation, but is far too slow
-for production shapes on CPU — the dispatchers below pick the fast legal path).
+"""Jit'd dispatch wrappers: tuned Pallas kernel on TPU, blocked XLA fast
+path elsewhere (interpret=True Pallas is available everywhere for
+validation, but is far too slow for production shapes on CPU — the
+dispatchers below pick the fast legal path).
+
+``force`` selects a path explicitly: None (auto), 'kernel' (Pallas),
+'xla' (blocked XLA fast path), 'ref' (the naive oracle — test/debug only).
 """
 from __future__ import annotations
 
@@ -9,7 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, xla_fast
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.mlstm_chunk import gla_chunk as _gla_kernel
@@ -21,28 +25,34 @@ def _on_tpu():
 
 @partial(jax.jit, static_argnames=("causal", "window", "force"))
 def flash_attention(q, k, v, *, causal=True, window=None, force=None):
-    """q: [B,H,S,D]; k,v: [B,K,S,D]. force: None(auto)|'kernel'|'ref'."""
-    use_kernel = force == "kernel" or (force is None and _on_tpu())
-    if use_kernel:
+    """q: [B,H,S,D]; k,v: [B,K,S,D]. force: None|'kernel'|'xla'|'ref'."""
+    if force == "kernel" or (force is None and _on_tpu()):
         return _flash_kernel(q, k, v, causal=causal, window=window)
-    return ref.naive_attention(q, k, v, causal=causal, window=window)
+    if force == "ref":
+        return ref.naive_attention(q, k, v, causal=causal, window=window)
+    return xla_fast.flash_attention_xla(q, k, v, causal=causal, window=window)
 
 
 @partial(jax.jit, static_argnames=("window", "n_splits", "force"))
-def decode_attention(q, k, v, length, *, window=None, n_splits=8, force=None):
+def decode_attention(q, k, v, length, *, window=None, n_splits=None,
+                     force=None):
     """q: [B,H,D]; k,v: [B,S,K,D]."""
-    use_kernel = force == "kernel" or (force is None and _on_tpu())
-    if use_kernel:
-        return _decode_kernel(q, k, v, length, n_splits=n_splits, window=window)
-    return ref.naive_decode_attention(
-        q, jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2), length, window=window)
+    if force == "kernel" or (force is None and _on_tpu()):
+        return _decode_kernel(q, k, v, length, n_splits=n_splits,
+                              window=window)
+    if force == "ref":
+        return ref.naive_decode_attention(
+            q, jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2), length,
+            window=window)
+    return xla_fast.decode_attention_xla(q, k, v, length, window=window)
 
 
 @partial(jax.jit, static_argnames=("chunk", "force"))
-def gla(q, k, v, lg, *, chunk=256, force=None):
+def gla(q, k, v, lg, *, chunk=None, force=None):
     """q,k: [B,S,H,N]; v: [B,S,H,P]; lg: [B,S,H]."""
-    use_kernel = force == "kernel" or (force is None and _on_tpu())
-    if use_kernel:
+    if force == "kernel" or (force is None and _on_tpu()):
         return _gla_kernel(q, k, v, lg, chunk=chunk)
-    y, _ = ref.naive_gla(q, k, v, lg)
-    return y
+    if force == "ref":
+        y, _ = ref.naive_gla(q, k, v, lg)
+        return y
+    return xla_fast.gla_xla(q, k, v, lg, chunk=chunk or 256)

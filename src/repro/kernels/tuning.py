@@ -1,0 +1,183 @@
+"""Block-size autotuner with an on-disk cache (the roofline-driven pass).
+
+Pallas kernel throughput on TPU is dominated by block-shape choice: the
+q/kv tile of flash attention decides VMEM residency and MXU utilization,
+the split count of decode attention trades grid parallelism against
+per-slab softmax overhead, and the GLA chunk length balances the O(c^2)
+intra-chunk matmul against the number of sequential state carries.  The
+right choice depends on (shape, dtype, backend) — so it is MEASURED, not
+guessed:
+
+  * :func:`autotune` times every candidate config for a key (median of
+    ``trials`` best-effort wall-clock runs, compile excluded) and returns
+    the winner;
+  * winners persist in a JSON cache on disk keyed by
+    ``kernel|backend|dtype|shape-sig`` so tuning cost is paid once per
+    machine, not once per process (``REPRO_TUNING_CACHE`` overrides the
+    location; the file is written atomically);
+  * kernels consult the cache via :func:`lookup` when the caller passes
+    ``None`` for a block argument — an explicit block size always wins,
+    and a cache miss falls back to the kernel's static default, so the
+    hot path NEVER tunes implicitly.
+
+The cache format is documented in docs/performance.md ("Kernel tuning
+knobs" section).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Callable, Optional, Sequence
+
+CACHE_VERSION = 1
+
+_cache_singleton: Optional["TuningCache"] = None
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_TUNING_CACHE")
+    if env:
+        return Path(env).expanduser()
+    return Path.home() / ".cache" / "repro" / "pallas_tuning.json"
+
+
+def make_key(kernel: str, backend: str, dtype, **dims) -> str:
+    """Stable cache key: kernel name, backend platform, dtype, and the
+    shape-relevant dims in sorted order (``S=1024,D=128,...``)."""
+    sig = ",".join(f"{k}={dims[k]}" for k in sorted(dims))
+    return f"{kernel}|{backend}|{_dtype_name(dtype)}|{sig}"
+
+
+def _dtype_name(dtype) -> str:
+    try:
+        import numpy as np
+        return np.dtype(dtype).name
+    except Exception:  # noqa: BLE001 — jnp dtype objects, strings
+        return str(dtype)
+
+
+class TuningCache:
+    """Lazy-loaded, atomically-persisted ``key -> config`` map.  Configs
+    are plain JSON dicts (``{"q_block": 256, "kv_block": 512}``); values
+    survive round-trips untouched."""
+
+    def __init__(self, path: Optional[Path] = None):
+        self.path = Path(path) if path is not None else cache_path()
+        self._entries: Optional[dict] = None
+
+    # -- storage --------------------------------------------------------
+    def _load(self) -> dict:
+        if self._entries is None:
+            try:
+                payload = json.loads(self.path.read_text())
+                if payload.get("version") == CACHE_VERSION:
+                    self._entries = dict(payload.get("entries", {}))
+                else:
+                    self._entries = {}
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def save(self) -> None:
+        entries = self._load()
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": CACHE_VERSION, "entries": entries}
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access ---------------------------------------------------------
+    def get(self, key: str) -> Optional[dict]:
+        return self._load().get(key)
+
+    def put(self, key: str, config: dict, *, persist: bool = True) -> None:
+        self._load()[key] = dict(config)
+        if persist:
+            self.save()
+
+    def clear(self) -> None:
+        self._entries = {}
+        try:
+            self.path.unlink()
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+def cache() -> TuningCache:
+    """Process-wide cache instance (re-created when ``REPRO_TUNING_CACHE``
+    changes — tests point it at a tmpdir)."""
+    global _cache_singleton
+    p = cache_path()
+    if _cache_singleton is None or _cache_singleton.path != p:
+        _cache_singleton = TuningCache(p)
+    return _cache_singleton
+
+
+def lookup(kernel: str, key: str) -> Optional[dict]:
+    """Cached best config for ``key``, or ``None`` (caller falls back to
+    its static default — a miss never triggers implicit tuning)."""
+    return cache().get(key)
+
+
+def autotune(kernel: str, key: str, candidates: Sequence[dict],
+             bench: Callable[[dict], Callable[[], object]], *,
+             trials: int = 3, persist: bool = True) -> dict:
+    """Measure every candidate config and cache the winner.
+
+    ``bench(config)`` returns a zero-arg callable running the kernel once
+    under that config (the callable's FIRST invocation is treated as
+    compile/warmup and excluded); candidates whose build or run raises are
+    skipped (e.g. a block shape the current backend rejects).  Returns the
+    winning config (already persisted under ``key`` unless ``persist`` is
+    False).  Raises ``ValueError`` when no candidate survives.
+    """
+    import jax
+
+    best_cfg, best_t = None, float("inf")
+    results = []
+    for cand in candidates:
+        try:
+            fn = bench(cand)
+            jax.block_until_ready(fn())          # compile + warm
+            t = float("inf")
+            for _ in range(trials):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                t = min(t, time.perf_counter() - t0)
+        except Exception:  # noqa: BLE001 — illegal tile for this target
+            continue
+        results.append((t, cand))
+        if t < best_t:
+            best_cfg, best_t = cand, t
+    if best_cfg is None:
+        raise ValueError(f"autotune({kernel!r}): no candidate config "
+                         f"survived out of {len(candidates)}")
+    entry = dict(best_cfg)
+    entry["_tuned_us"] = round(best_t * 1e6, 2)
+    cache().put(key, entry, persist=persist)
+    return entry
+
+
+def tuned_or_default(kernel: str, key: str, defaults: dict) -> dict:
+    """Merge the cached config over ``defaults`` (private ``_``-prefixed
+    bookkeeping keys are dropped)."""
+    hit = lookup(kernel, key)
+    out = dict(defaults)
+    if hit:
+        out.update({k: v for k, v in hit.items() if not k.startswith("_")})
+    return out

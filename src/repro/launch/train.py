@@ -125,14 +125,24 @@ class Trainer:
             self.params, self.opt_state, batch, jnp.int32(self.step))
         self.rng_key = jax.random.fold_in(self.rng_key, self.step)
         self.step += 1
+        handle, world = None, 1
         if self.metrics_allreduce:
             world = max(len(self.cluster.manas), 1)
-            loss_sum = ST.host_allreduce(self.cluster,
-                                         float(metrics["loss"]))
-            metrics = dict(metrics)
-            metrics["world_loss"] = loss_sum / world
+            # async-start/late-wait overlap: the collective rank threads
+            # start NOW and block on the device transfer inside the pool
+            # (the value callable forces `metrics["loss"]`), while the main
+            # thread finishes step bookkeeping; the wait below lands after
+            # the heartbeats, so collective latency hides behind them and
+            # the still-running device work instead of serializing.  The
+            # handle is waited within the same step — world_loss semantics
+            # are unchanged (see docs/performance.md).
+            handle = ST.host_allreduce_async(
+                self.cluster, lambda r: float(metrics["loss"]))
         for r in range(len(self.cluster.ranks)):
             self.cluster.heartbeat(r)
+        if handle is not None:
+            metrics = dict(metrics)
+            metrics["world_loss"] = handle.wait() / world
         return metrics
 
     def log_step(self, metrics, log_every=25, force=False):

@@ -66,6 +66,41 @@ def _grad_with_aux(loss_fn, params):
     return grads, (total, aux)
 
 
+class AllreduceHandle:
+    """Late-wait half of :func:`host_allreduce_async`; ``wait()`` returns
+    the folded scalar (the rank-0 copy, identical on every rank)."""
+
+    def __init__(self, coll_handle):
+        self._h = coll_handle
+
+    @property
+    def done(self) -> bool:
+        return self._h.done
+
+    def wait(self):
+        return self._h.wait()[0]
+
+
+def host_allreduce_async(cluster, value, op: str = "MPI_SUM", *,
+                         timeout: float = 30.0) -> AllreduceHandle:
+    """Async-start/late-wait split of :func:`host_allreduce`: the rank
+    threads enter the collective NOW, the caller keeps dispatching device
+    work, and ``handle.wait()`` lands when the result is needed.
+
+    The overlap trick: pass ``value`` as a callable ``rank -> scalar``
+    closing over a device array (e.g. ``lambda r: float(metrics["loss"])``
+    right after an async jit dispatch) — each rank thread then blocks on
+    the device transfer INSIDE the collective pool while the main thread
+    (and the device) keep going, so collective latency hides behind
+    backward/optimizer compute instead of adding to it.  Exactly one
+    allreduce may be in flight per cluster; wait before starting the next
+    collective (see docs/performance.md, "Async allreduce overlap")."""
+    def one(m):
+        v = value(m.rank) if callable(value) else value
+        return m.allreduce(m.comm_world(), v, m.op_handles[op])
+    return AllreduceHandle(cluster.run_collective_async(one, timeout=timeout))
+
+
 def host_allreduce(cluster, value, op: str = "MPI_SUM", *,
                    timeout: float = 30.0):
     """World allreduce of a host scalar over the MANA plane — the training
@@ -76,10 +111,7 @@ def host_allreduce(cluster, value, op: str = "MPI_SUM", *,
     ``value`` may be a plain scalar (same contribution everywhere) or a
     callable ``rank -> scalar``.  Returns the rank-order fold, identical
     on every rank (the rank-0 copy)."""
-    def one(m):
-        v = value(m.rank) if callable(value) else value
-        return m.allreduce(m.comm_world(), v, m.op_handles[op])
-    return cluster.run_collective(one, timeout=timeout)[0]
+    return host_allreduce_async(cluster, value, op, timeout=timeout).wait()
 
 
 def make_prefill_step(model: Model, ctx):

@@ -1,0 +1,135 @@
+"""Monomorphic fast-path wrapper parity (``callspec.compile_fastpath``).
+
+The compiled per-call wrappers must be OBSERVATIONALLY IDENTICAL to the
+generic generated wrappers — same results, same record-replay log, same
+transcripts, same translate accounting, same typed errors — in every
+translation mode; ``transcripts=False`` may drop ONLY the transcript.
+Referenced from the ``compile_fastpath`` docstring and
+docs/performance.md ("Fast-path wrappers").
+"""
+import pytest
+
+from repro.core import Cluster
+from repro.core import callspec
+from repro.core.callspec import HandleFreeError, HandleKindError
+
+
+def _exercise(m):
+    """A workload touching every wrapper family: metadata, object-creating
+    (dup/split + derived datatype), p2p with request wait, collectives
+    (native or derived per backend), and frees.  Returns observables."""
+    w = m.comm_world()
+    sizes = [m.comm_size(w), m.comm_rank(w)]
+    dup = m.comm_create(list(range(m.world_size)))
+    color = m.rank % 2
+    sub = m.comm_split(w, color, m.rank)
+    vec = m.type_contiguous(4, m.dtype_handles["MPI_INT32_T"])
+    env = m.type_envelope(vec)
+    peer = (m.rank + 1) % m.world_size
+    req = m.isend(peer, 11, {"from": m.rank})
+    got = m.recv((m.rank - 1) % m.world_size, 11)
+    m.wait_all([req])
+    red = m.allreduce(w, m.rank + 1, m.op_handles["MPI_SUM"])
+    bc = m.bcast(w, m.rank * 10, root=0)
+    m.comm_free(dup)
+    return {"sizes": sizes, "split_size": m.comm_size(sub), "got": got,
+            "env": env, "red": red, "bc": bc}
+
+
+def _run_world(backend, translation, *, fastpath, transcripts=True,
+               world=3):
+    c = Cluster(world, backend, translation=translation)
+    if fastpath:
+        for r in range(world):
+            c.mana(r).enable_fastpath(transcripts=transcripts)
+    outs = c.run_collective(_exercise)
+    manas = [c.mana(r) for r in range(world)]
+    obs = {
+        "outs": outs,
+        "logs": [list(m.log) for m in manas],
+        "transcripts": [list(m.transcript) for m in manas],
+        "translate": [m.translate_count for m in manas],
+    }
+    return obs
+
+
+@pytest.mark.parametrize("translation", ["fast", "slow", "none"])
+def test_fastpath_parity_all_translation_modes(translation):
+    base = _run_world("mpich", translation, fastpath=False)
+    fast = _run_world("mpich", translation, fastpath=True)
+    assert fast["outs"] == base["outs"]
+    assert fast["logs"] == base["logs"]
+    assert fast["transcripts"] == base["transcripts"]
+    assert fast["translate"] == base["translate"]
+
+
+def test_fastpath_parity_derived_collectives():
+    """The fabric flavor has no native collectives: the compiled wrappers
+    must resolve the SAME derived p2p composition the generic ones do."""
+    base = _run_world("fabric", "fast", fastpath=False)
+    fast = _run_world("fabric", "fast", fastpath=True)
+    assert fast["outs"] == base["outs"]
+    assert fast["logs"] == base["logs"]
+    assert fast["translate"] == base["translate"]
+
+
+def test_fastpath_transcripts_off_drops_only_transcripts():
+    base = _run_world("mpich", "fast", fastpath=False)
+    quiet = _run_world("mpich", "fast", fastpath=True, transcripts=False)
+    assert quiet["outs"] == base["outs"]
+    assert quiet["logs"] == base["logs"]
+    assert quiet["translate"] == base["translate"]
+    assert all(t == [] for t in quiet["transcripts"])
+
+
+def test_fastpath_typed_errors_preserved():
+    m = Cluster(1, "mpich").mana(0)
+    m.enable_fastpath()
+    dup = m.comm_create(list(range(m.world_size)))
+    m.comm_free(dup)
+    with pytest.raises(HandleFreeError):
+        m.comm_free(dup)
+    with pytest.raises(HandleKindError):
+        m.comm_size(m.op_handles["MPI_SUM"])
+
+
+def test_enable_disable_roundtrip():
+    m = Cluster(1, "mpich").mana(0)
+    assert not m.fastpath_enabled
+    m.enable_fastpath()
+    assert m.fastpath_enabled
+    assert m.comm_size.__func__.__fastpath__ is True
+    size = m.comm_size(m.comm_world())
+    m.disable_fastpath()
+    assert not m.fastpath_enabled
+    assert not getattr(m.comm_size.__func__, "__fastpath__", False)
+    assert m.comm_size(m.comm_world()) == size
+
+
+def test_compiled_source_is_specialized():
+    """The generated source must be monomorphic: no transcript code when
+    transcripts are off, and no legacy-table branch outside slow mode."""
+    m = Cluster(1, "mpich").mana(0)
+    spec = next(s for s in callspec.REGISTRY if s.name == "comm_size")
+    src = callspec.compile_fastpath(spec, m, transcripts=False).__source__
+    assert "transcript" not in src
+    assert "legacy" not in src
+    src_t = callspec.compile_fastpath(spec, m, transcripts=True).__source__
+    assert "transcript" in src_t
+
+
+def test_fastpath_failpoints_still_arm():
+    from repro.core.faults import arm, disarm
+
+    def boom(name, ctx):
+        raise RuntimeError("injected")
+
+    m = Cluster(1, "mpich").mana(0)
+    m.enable_fastpath()
+    arm("mpi.comm_create", boom)
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            m.comm_create([0])
+    finally:
+        disarm("mpi.comm_create")
+    m.comm_create([0])  # disarmed: back to normal

@@ -61,6 +61,36 @@ def test_artifacts_cover_all_live_cells():
     assert not missing, f"missing dry-run cells: {missing}"
 
 
+def test_load_cells_missing_dir_raises_typed_error(tmp_path):
+    from benchmarks.roofline import DryrunArtifactsError, load_cells
+    with pytest.raises(DryrunArtifactsError) as ei:
+        load_cells("pod", art_dir=tmp_path / "nope")
+    # the message must tell the user how to get artifacts
+    assert "--dryrun-dir" in str(ei.value)
+    assert "dryrun_smoke" in str(ei.value)
+    # present-but-empty directory: same typed error, different detail
+    with pytest.raises(DryrunArtifactsError):
+        load_cells("pod", art_dir=tmp_path)
+
+
+def test_load_cells_smoke_fixture():
+    from benchmarks.roofline import SMOKE_DIR, load_cells, render
+    rows = load_cells("pod", art_dir=SMOKE_DIR)
+    assert len(rows) >= 3
+    for r in rows:
+        assert 0 < r["roofline_fraction"] <= 1.0
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert "roofl%" in render(rows).splitlines()[0]
+
+
+def test_roofline_cli_exit_codes(tmp_path, capsys):
+    from benchmarks.roofline import SMOKE_DIR, main
+    assert main(["--dryrun-dir", str(SMOKE_DIR)]) == 0
+    assert "roofline," in capsys.readouterr().out
+    assert main(["--dryrun-dir", str(tmp_path / "missing")]) == 2
+    assert "roofline:" in capsys.readouterr().err
+
+
 def test_artifact_sanity():
     import json
     art_dir = Path(__file__).parents[1] / "artifacts" / "dryrun"

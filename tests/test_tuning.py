@@ -1,0 +1,87 @@
+"""Autotuner cache unit tests: key stability, persistence, atomic save,
+candidate selection, and the tuned-or-default merge (no devices needed)."""
+import json
+
+import pytest
+
+from repro.kernels import tuning
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    return path
+
+
+def test_make_key_is_stable_and_order_insensitive():
+    a = tuning.make_key("flash", "cpu", "float32", S=128, D=64)
+    b = tuning.make_key("flash", "cpu", "float32", D=64, S=128)
+    assert a == b == "flash|cpu|float32|D=64,S=128"
+    assert tuning.make_key("flash", "cpu", "bfloat16", S=128, D=64) != a
+
+
+def test_cache_roundtrip_and_persistence(tmp_cache):
+    tuning.cache().put("k1", {"q_block": 64})
+    assert tuning.lookup("flash", "k1") == {"q_block": 64}
+    # a fresh instance re-reads the file: the winner survived the process
+    fresh = tuning.TuningCache(tmp_cache)
+    assert fresh.get("k1") == {"q_block": 64}
+    assert len(fresh) == 1
+
+
+def test_cache_ignores_corrupt_and_wrong_version_files(tmp_cache):
+    tmp_cache.write_text("{not json")
+    assert tuning.TuningCache(tmp_cache).get("k") is None
+    tmp_cache.write_text(json.dumps(
+        {"version": 999, "entries": {"k": {"x": 1}}}))
+    assert tuning.TuningCache(tmp_cache).get("k") is None
+
+
+def test_autotune_picks_fastest_and_persists(tmp_cache):
+    import time
+
+    def bench(cfg):
+        def run():
+            time.sleep(0.001 * cfg["cost"])
+            return 0
+        return run
+
+    win = tuning.autotune("demo", "key", [{"cost": 5}, {"cost": 1}], bench,
+                          trials=2)
+    assert win["cost"] == 1
+    assert "_tuned_us" in win
+    assert tuning.lookup("demo", "key")["cost"] == 1
+    # the persisted file is valid versioned JSON
+    payload = json.loads(tmp_cache.read_text())
+    assert payload["version"] == tuning.CACHE_VERSION
+
+
+def test_autotune_skips_raising_candidates(tmp_cache):
+    def bench(cfg):
+        if cfg.get("bad"):
+            raise ValueError("illegal tile")
+        return lambda: 0
+
+    win = tuning.autotune("demo", "k2", [{"bad": True}, {"bad": False}],
+                          bench, trials=1)
+    assert win["bad"] is False
+    with pytest.raises(ValueError):
+        tuning.autotune("demo", "k3", [{"bad": True}], bench, trials=1)
+
+
+def test_tuned_or_default_merge_drops_private_keys(tmp_cache):
+    defaults = {"q_block": 256, "kv_block": 256}
+    assert tuning.tuned_or_default("flash", "miss", defaults) == defaults
+    tuning.cache().put("hit", {"q_block": 64, "_tuned_us": 12.0})
+    got = tuning.tuned_or_default("flash", "hit", defaults)
+    assert got == {"q_block": 64, "kv_block": 256}
+
+
+def test_env_override_switches_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "a.json"))
+    tuning.cache().put("k", {"v": 1})
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "b.json"))
+    assert tuning.lookup("x", "k") is None
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "a.json"))
+    assert tuning.lookup("x", "k") == {"v": 1}

@@ -5,8 +5,8 @@ CI runs the checkpoint/restart smoke benches on every PR and already FAILS
 on hard gate regressions (benchmarks/run.py and bench_restart exit non-zero
 when a gate trips).  This tool adds the TREND layer on top: it compares the
 fresh numbers against the repo's committed ``BENCH_ckpt.json`` /
-``BENCH_restart.json`` / ``BENCH_recovery.json`` within a tolerance band
-and
+``BENCH_restart.json`` / ``BENCH_recovery.json`` / ``BENCH_compute.json``
+within a tolerance band and
 
   * **warns** (exit 0) when a tracked metric drifted outside the band —
     noisy CI runners make drift-as-failure a flake factory, but the drift
@@ -23,7 +23,9 @@ Usage:
       --restart-fresh BENCH_restart.fresh.json \
       --restart-base BENCH_restart.json \
       --recovery-fresh BENCH_recovery.fresh.json \
-      --recovery-base BENCH_recovery.json [--tolerance 0.25]
+      --recovery-base BENCH_recovery.json \
+      --compute-fresh BENCH_compute.fresh.json \
+      --compute-base BENCH_compute.json [--tolerance 0.25]
 """
 from __future__ import annotations
 
@@ -33,7 +35,12 @@ import os
 import sys
 from pathlib import Path
 
-#: (label, extractor, higher_is_better, hard_gate_min | None)
+#: (label, extractor, higher_is_better, hard_gate | None[, rel_gate])
+#: ``hard_gate`` is a floor when higher_is_better else a ceiling;
+#: ``rel_gate`` (optional 5th element) hard-fails when the fresh value
+#: falls below that fraction of the committed baseline — the gate for
+#: absolute-unit metrics (tokens/s) that only mean anything relative to
+#: the same host's history.
 CKPT_METRICS = [
     ("write_speedup", lambda r: r["write_speedup"], True, 1.0),
     ("blocking_reduction", lambda r: r["blocking_reduction"], True, 2.0),
@@ -57,6 +64,22 @@ RECOVERY_METRICS = [
     ("shrink_downtime_ms", lambda r: r["shrink_downtime_ms"], False, None),
     ("join_downtime_ms", lambda r: r["join_downtime_ms"], False, None),
 ]
+COMPUTE_METRICS = [
+    # tokens/s is host-relative: hard-fail only on a >2x collapse vs the
+    # committed baseline; the +-tolerance drift band warns before that
+    ("tokens_per_s_mana_fast", lambda r: r["tokens_per_s_mana_fast"],
+     True, None, 0.5),
+    ("kernel_speedup_geomean", lambda r: r["kernel_speedup_geomean"],
+     True, 1.2),
+    # the zero-tax budget is hard-gated by run.py --smoke itself; here the
+    # tax only drift-warns (a near-zero noisy percentage as a hard trend
+    # gate would be a flake factory)
+    ("interposition_tax_pct", lambda r: r["interposition_tax_pct"],
+     False, None),
+    ("wrapper_us_fastpath", lambda r: r["wrapper_us_fastpath"],
+     False, None),
+    ("wrapper_speedup", lambda r: r["wrapper_speedup"], True, None),
+]
 
 
 def _load(path):
@@ -79,10 +102,15 @@ def _recovery_result(payload):
     return payload.get("results") if payload else None
 
 
+def _compute_result(payload):
+    return payload.get("results") if payload else None
+
+
 def compare(metrics, fresh, base, tolerance):
     """Returns (rows, warnings, failures) for one bench's metric table."""
     rows, warnings, failures = [], [], []
-    for label, get, higher_better, gate in metrics:
+    for label, get, higher_better, gate, *rest in metrics:
+        rel_gate = rest[0] if rest else None
         try:
             f = float(get(fresh))
         except (KeyError, TypeError, IndexError):
@@ -93,9 +121,17 @@ def compare(metrics, fresh, base, tolerance):
         except (KeyError, TypeError, IndexError):
             b = None
         status = "ok"
-        if gate is not None and f < gate:
+        gated = gate is not None and \
+            (f < gate if higher_better else f > gate)
+        if gated:
             status = "GATE FAILED"
-            failures.append(f"{label}: {f:.3f} below hard gate {gate}")
+            word = "below" if higher_better else "above"
+            failures.append(f"{label}: {f:.3f} {word} hard gate {gate}")
+        elif rel_gate is not None and b and f < rel_gate * b:
+            status = "GATE FAILED"
+            failures.append(
+                f"{label}: {f:.3f} below {rel_gate:.0%} of committed "
+                f"baseline {b:.3f}")
         elif b:
             drift = (f - b) / abs(b)
             regressed = drift < -tolerance if higher_better \
@@ -130,6 +166,8 @@ def main() -> int:
     ap.add_argument("--restart-base", default="BENCH_restart.json")
     ap.add_argument("--recovery-fresh", default="BENCH_recovery.fresh.json")
     ap.add_argument("--recovery-base", default="BENCH_recovery.json")
+    ap.add_argument("--compute-fresh", default="BENCH_compute.fresh.json")
+    ap.add_argument("--compute-base", default="BENCH_compute.json")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="relative drift band before a warning (default 25%%)")
     args = ap.parse_args()
@@ -141,7 +179,9 @@ def main() -> int:
             ("Restart smoke (BENCH_restart)", args.restart_fresh,
              args.restart_base, RESTART_METRICS, _restart_result),
             ("Recovery smoke (BENCH_recovery)", args.recovery_fresh,
-             args.recovery_base, RECOVERY_METRICS, _recovery_result)]:
+             args.recovery_base, RECOVERY_METRICS, _recovery_result),
+            ("Compute smoke (BENCH_compute)", args.compute_fresh,
+             args.compute_base, COMPUTE_METRICS, _compute_result)]:
         fresh = extract(_load(fresh_path))
         if fresh is None:
             all_fail.append(f"{title}: no fresh results at {fresh_path}")
