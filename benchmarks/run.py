@@ -18,7 +18,8 @@ import sys
 import traceback
 
 
-def smoke(out_path: str, recovery_out: str, compute_out: str) -> None:
+def smoke(out_path: str, recovery_out: str, compute_out: str,
+          serve_out: str) -> None:
     """Tiny ckpt perf gates: seed-like serial writer vs parallel + zlib +
     incremental engine (write path), buffered vs pipelined snapshot
     (stop-the-world path), the per-tier recovery MTTR gate (RAM tier
@@ -28,7 +29,8 @@ def smoke(out_path: str, recovery_out: str, compute_out: str) -> None:
 
     Exits non-zero on ANY gate failure so CI actually enforces the perf
     trajectory instead of just recording it."""
-    from benchmarks import bench_ckpt, bench_overhead, bench_recovery
+    from benchmarks import bench_ckpt, bench_overhead, bench_recovery, \
+        bench_serve
     results = bench_ckpt.smoke()
     # collective wrapper rows (allreduce/bcast, fast vs slow translation,
     # native vs derived flavor): tracked, not hard-gated — collective
@@ -106,7 +108,11 @@ def smoke(out_path: str, recovery_out: str, compute_out: str) -> None:
               f"{comp['interposition_tax_pct']:.2f}% > "
               f"{bench_overhead.TAX_GATE_PCT}%", flush=True)
         ok = False
-    print(f"wrote {out_path}, {recovery_out} and {compute_out}")
+    # serving-fleet gate: migration p99 token latency must stay bounded;
+    # the throughput trend is rel-gated in tools/bench_compare.py
+    ok &= bench_serve.smoke(serve_out)
+    print(f"wrote {out_path}, {recovery_out}, {compute_out} and "
+          f"{serve_out}")
     if not ok:
         sys.exit(1)
 
@@ -125,6 +131,8 @@ def main() -> None:
     sections.append(("restart", bench_restart.rows))
     from benchmarks import bench_recovery
     sections.append(("recovery", bench_recovery.rows))
+    from benchmarks import bench_serve
+    sections.append(("serve", bench_serve.rows))
 
     failures = 0
     for name, fn in sections:
@@ -164,8 +172,11 @@ if __name__ == "__main__":
                     help="smoke-mode per-tier recovery MTTR output path")
     ap.add_argument("--compute-out", default="BENCH_compute.json",
                     help="smoke-mode compute-plane output path")
+    ap.add_argument("--serve-out", default="BENCH_serve.json",
+                    help="smoke-mode serving-fleet output path")
     args = ap.parse_args()
     if args.smoke:
-        smoke(args.out, args.recovery_out, args.compute_out)
+        smoke(args.out, args.recovery_out, args.compute_out,
+              args.serve_out)
     else:
         main()

@@ -10,7 +10,7 @@ import tempfile
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.launch.serve import Server
+from repro.serving.engine import Server
 
 
 def main():

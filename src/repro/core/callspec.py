@@ -71,6 +71,7 @@ TAG_BASES = {
     "scan": 70800,
     "replica": 70900,   # RAM-tier checkpoint shard push (ckpt_tiers.py)
     "rescale": 71000,   # live membership change: handoff / join (elastic.py)
+    "migrate": 71100,   # live serving-session migration (serving/migrate.py)
 }
 COLL_TAG_MIN = min(TAG_BASES.values()) << 32
 #: native multi-phase algorithms offset their second phase by this much

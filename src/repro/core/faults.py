@@ -66,6 +66,11 @@ scheduled step and simulates one production failure class:
                   next joining rank stalls mid-handshake and must be
                   FENCED without poisoning the running world (membership
                   only changes after the handshake completes)
+  migrate_corrupt arms the ``serve.migrate.chunk`` failpoint one-shot: the
+                  next live-migration chunk has its payload bytes flipped
+                  AFTER its digest was recorded (a torn transfer on the
+                  wire) — the receiver must reject the whole session and
+                  the source must keep serving it
   ==============  ========================================================
 
 Nothing here imports the checkpoint/restore stack — injection sites call in,
@@ -82,7 +87,7 @@ from pathlib import Path
 FAULT_KINDS = ("kill_rank", "stall_drain", "corrupt_shard", "truncate_shard",
                "drop_token", "snapshot_error", "partner_death",
                "corrupt_replica", "double_fault", "restore_error",
-               "preempt_notice", "join_timeout")
+               "preempt_notice", "join_timeout", "migrate_corrupt")
 
 #: fault -> the checkpoint-cycle phase where it lands (the chaos matrix
 #: sweeps (kind, phase, backend family); kill/drop can also fire at the
@@ -93,7 +98,8 @@ DEFAULT_PHASE = {"kill_rank": "compute", "stall_drain": "drain",
                  "drop_token": "compute", "snapshot_error": "snapshot",
                  "partner_death": "compute", "corrupt_replica": "compute",
                  "double_fault": "compute", "restore_error": "compute",
-                 "preempt_notice": "compute", "join_timeout": "compute"}
+                 "preempt_notice": "compute", "join_timeout": "compute",
+                 "migrate_corrupt": "compute"}
 
 
 class InjectedFault(RuntimeError):
@@ -562,6 +568,25 @@ class FaultInjector:
             disarm(site, handler)
             raise InjectedFault(f"injected join stall: rank "
                                 f"{ctx.get('rank')} wedged mid-handshake")
+
+        arm(site, handler)
+        self._armed.append((site, handler))
+
+    def _fire_migrate_corrupt(self, spec, step, cluster):
+        """Arm the ``serve.migrate.chunk`` failpoint one-shot: the next
+        live-migration chunk gets its payload bytes flipped AFTER the
+        digest was recorded.  The receiver's per-chunk verification must
+        reject the whole session (``MigrationError`` at the source, which
+        keeps serving it) — torn transfers never half-land."""
+        site = "serve.migrate.chunk"
+
+        def handler(name, ctx):
+            disarm(site, handler)
+            msg = ctx.get("msg")
+            if msg and msg.get("data"):
+                data = bytearray(msg["data"])
+                data[len(data) // 2] ^= 0xFF
+                msg["data"] = bytes(data)
 
         arm(site, handler)
         self._armed.append((site, handler))

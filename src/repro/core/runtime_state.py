@@ -253,6 +253,48 @@ class RngStateProvider(StateProvider):
         self._set(jax.random.wrap_key_data(data))
 
 
+class PagedCacheProvider(StateProvider):
+    """Paged KV/recurrent-cache state behind a :class:`~repro.serving.kv_pool.
+    PagePool`-shaped object (anything with ``export_state()`` /
+    ``import_state(arrays, table)``).
+
+    The snapshot serializes the *page table* (session -> page list, lengths,
+    priorities, free map) as JSON meta and the *page contents* — one array
+    per (session, cache leaf) plus per-session recurrent blocks — as ordinary
+    ``kind="runtime"`` leaves, so a serving fleet's in-flight sessions ride
+    the same container path (delta digests, codecs, tier replication, the
+    cross-flavor transport-dtype re-encode) as params.  This is what the
+    live-migration plane snapshots through."""
+
+    def __init__(self, name: str, get: Callable[[], Any], *,
+                 version: int = 1, layout: str = "replicated"):
+        self.name, self.version = name, version
+        self._get, self._layout = get, layout
+
+    def snapshot(self):
+        pool = self._get()
+        if pool is None:
+            return None, {"empty": True}
+        arrays, table = pool.export_state()
+        if not arrays:
+            return None, {"empty": True, "table": table}
+        return arrays, {"skeleton": tree_skeleton(arrays),
+                        "layout": self._layout, "table": table}
+
+    def restore(self, arrays, meta: dict) -> None:
+        pool = self._get()
+        if pool is None:
+            raise ValueError(f"runtime provider {self.name!r}: no live pool "
+                             "to restore into")
+        if meta.get("empty"):
+            pool.import_state({}, meta.get("table"))
+            return
+        if arrays is None:
+            raise ValueError(f"runtime provider {self.name!r}: snapshot has "
+                             "pages but restore received none")
+        pool.import_state(arrays, meta.get("table"))
+
+
 class JsonStateProvider(StateProvider):
     """Pure-JSON state with no array leaves (data-pipeline cursors, decode
     positions).  Rides rank state only."""
@@ -267,6 +309,22 @@ class JsonStateProvider(StateProvider):
 
     def restore(self, arrays, meta: dict) -> None:
         self._set(meta.get("state"))
+
+
+def warn_skipped(stats: Optional[dict], where: str) -> Optional[str]:
+    """One-line diagnostic when a restore skipped providers the live registry
+    doesn't know — a legacy image restored by newer code, or a renamed
+    provider.  Silently dropping the report makes those resumes undebuggable;
+    callers (both CLIs) print the returned line.  Returns ``None`` when
+    nothing was skipped."""
+    skipped = (stats or {}).get("skipped") or []
+    if not skipped:
+        return None
+    line = (f"WARNING: {where}: runtime-state restore skipped unknown "
+            f"provider(s) {', '.join(sorted(skipped))} — their snapshot "
+            f"state was NOT applied")
+    print(line, flush=True)
+    return line
 
 
 # ---------------------------------------------------------------------------

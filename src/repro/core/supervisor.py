@@ -204,6 +204,8 @@ class Incident:
     ladder: list = field(default_factory=list)    # per-rung transcript
     absorbed: list = field(default_factory=list)  # faults folded in
                                                   # mid-recovery
+    rehomed: int | None = None   # serving fleets: live sessions re-homed
+                                 # onto the surviving world by this recovery
 
     def to_dict(self) -> dict:
         return {"kind": self.kind, "rank": self.rank, "step": self.step,
@@ -212,7 +214,7 @@ class Incident:
                 "world_before": self.world_before,
                 "world_after": self.world_after, "timings": self.timings,
                 "tier": self.tier, "ladder": self.ladder,
-                "absorbed": self.absorbed}
+                "absorbed": self.absorbed, "rehomed": self.rehomed}
 
 
 class LeaseDetector:
@@ -691,6 +693,7 @@ class Supervisor:
             attempt=attempt, world_before=world_before,
             world_after=len(w.cluster.ranks),
             tier=tier_name, ladder=ladder_log, absorbed=absorbed,
+            rehomed=getattr(w, "last_rehomed", None),
             timings={"detect_ms": round(detect_ms, 3),
                      "classify_ms": round(classify_ms, 3),
                      "restore_ms": round(restart_ms, 3),

@@ -220,6 +220,24 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
     )(page_table, lengths, q, k_pages, v_pages)
 
 
+def paged_attention_pool_view(q, view, *, window=None, interpret=None):
+    """Run :func:`paged_decode_attention` straight off a serving-pool view.
+
+    ``view`` is the ``(k_pages, v_pages, page_table, lengths)`` tuple
+    produced by :meth:`repro.serving.kv_pool.PagePool.kernel_view` — the
+    pool's physical ``[n_pool_pages, page_size, numel]`` stores reshaped to
+    the kernel's ``[n_pool_pages, page_size, K, D]`` layout with the block
+    lists flattened into a padded page table.  This is the zero-copy bridge
+    between the fleet allocator and the decode kernel: no gather, no dense
+    materialization, the table IS the translation.
+    """
+    k_pages, v_pages, page_table, lengths = view
+    return paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(k_pages), jnp.asarray(v_pages),
+        jnp.asarray(page_table), jnp.asarray(lengths),
+        window=window, interpret=interpret)
+
+
 def tune(q, k, v, length, *, window=None, trials=3,
          candidates=SPLIT_CANDIDATES, interpret=None):
     """Autotune ``n_splits`` for this cache shape; persists the winner."""

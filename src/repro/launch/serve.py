@@ -1,238 +1,37 @@
-"""Serving driver: batched prefill + decode with transparent snapshots.
+"""Serving CLI: batched prefill + decode with transparent snapshots.
 
-Preemptible serving is the paper's §1 motivation (urgent/real-time HPC): the
-server can be checkpointed BETWEEN DECODE STEPS on short notice — the KV/state
-caches are part of the upper half, so a restarted server resumes mid-sequence
-(on a possibly different mesh/backend) without recomputing the prefill.
+The ``Server`` class now lives in :mod:`repro.serving.engine` (next to the
+multi-tenant ``ServeEngine`` fleet); this module is the thin command-line
+driver plus a deprecation shim so ``from repro.launch.serve import Server``
+keeps working one release longer (the ``repro.launch.restart`` precedent).
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import steps as ST
-from repro.configs import get_config, smoke_config
-from repro.core import Cluster
-from repro.core import runtime_state as RS
-from repro.core.restore import as_source, load_arrays, translation_plan
-from repro.launch.mesh import make_host_mesh
-from repro.models import Model
-from repro.sharding import ShardingCtx, rules_for
+from repro.configs import smoke_config
+
+_MOVED = {"Server": "repro.serving.engine"}
 
 
-class Server:
-    def __init__(self, cfg, *, world_size=2, backend="mpich", ckpt_dir=None,
-                 mesh=None, seed=0):
-        self.cfg = cfg
-        self.mesh = mesh if mesh is not None else (
-            make_host_mesh() if len(jax.devices()) > 1 else None)
-        self.ctx = ShardingCtx(self.mesh, rules_for(cfg, "decode"))
-        self.model = Model(cfg)
-        self.cluster = Cluster(world_size, backend, ckpt_dir=ckpt_dir)
-        self.params = self.model.init(jax.random.key(seed))
-        self.prefill_fn = jax.jit(ST.make_prefill_step(self.model, self.ctx))
-        self.decode_fn = jax.jit(ST.make_decode_step(self.model, self.ctx),
-                                 donate_argnums=(3,))
-        self.caches = None
-        self.pos = 0
-        self.generated = []
-        self.resume_tok = None
-        self._tok = None         # next decode seed (supervised step state)
-        # sampling key stream: advanced once per decode step (argmax decode
-        # never consumes it, but a restored server must hold the SAME key a
-        # sampling decode would — RNG streams are runtime state too)
-        self.rng_key = jax.random.key(seed + 1)
-        self.last_runtime_restore = None
-        # runtime-state providers: KV/recurrent cache pytree (with its
-        # treedef), the sampling key stream, and the decode cursor — the
-        # full upper-half serving state, made checkpointable
-        self.runtime = RS.RuntimeStateRegistry()
-        self.runtime.register(RS.PyTreeProvider(
-            "kv_caches", lambda: self.caches, self._set_caches))
-        self.runtime.register(RS.RngStateProvider(
-            "rng", lambda: self.rng_key, self._set_rng))
-        self.runtime.register(RS.JsonStateProvider(
-            "decode_cursor", self._cursor_state, self._apply_cursor))
-
-    # -- runtime provider hooks ---------------------------------------------
-    def _set_caches(self, tree):
-        self.caches = tree
-
-    def _set_rng(self, key):
-        self.rng_key = key
-
-    def _cursor_state(self) -> dict:
-        st = {"pos": int(self.pos),
-              "prefill_pos": int(self.pos - len(self.generated))}
-        if self.generated:
-            # the token that seeds the next decode step after a resume
-            st["last_tok"] = np.asarray(self.generated[-1]).tolist()
-        return st
-
-    def _apply_cursor(self, st: dict) -> None:
-        # rewinding pos must also rewind the generated stream, or the
-        # tokens decoded between snapshot and failure appear TWICE after
-        # the supervisor replays them
-        prefill_pos = self.pos - len(self.generated)
-        self.pos = int(st["pos"])
-        keep = max(0, self.pos - prefill_pos)
-        if len(self.generated) > keep:
-            del self.generated[keep:]
-        tok = st.get("last_tok")
-        self.resume_tok = np.asarray(tok, np.int32) if tok is not None \
-            else None
-        if self.resume_tok is not None:
-            self._tok = jnp.asarray(self.resume_tok)
-
-    def prefill(self, tokens, patch_embeds=None, pad_to=None):
-        batch = {"tokens": jnp.asarray(tokens)}
-        if patch_embeds is not None:
-            batch["patch_embeds"] = jnp.asarray(patch_embeds)
-        logits, caches = self.prefill_fn(self.params, batch)
-        S = batch["tokens"].shape[-1]
-        if pad_to and pad_to > S:
-            def grow(x):
-                if hasattr(x, "ndim") and x.ndim >= 3 and x.shape[-2] == S:
-                    pad = [(0, 0)] * x.ndim
-                    pad[-2] = (0, pad_to - S)
-                    return jnp.pad(x, pad)
-                return x
-            caches = jax.tree.map(grow, caches)
-        self.caches = caches
-        self.pos = S
-        return logits
-
-    # -- supervisor workload protocol ---------------------------------------
-    # (step / step_once / checkpoint / recover: the same contract Trainer
-    # implements, so one Supervisor drives training AND serving)
-    @property
-    def step(self) -> int:
-        return self.pos
-
-    def start_decode(self, first_token):
-        """Seed the supervised decode loop (``step_once`` consumes it)."""
-        self._tok = jnp.asarray(first_token)
-
-    def step_once(self):
-        """Decode ONE token from the internal seed; the unit the supervisor
-        drives between snapshots."""
-        logits, self.caches = self.decode_fn(self.params, self._tok,
-                                             jnp.int32(self.pos), self.caches)
-        tok = jnp.argmax(logits[..., : self.cfg.vocab_size], axis=-1)
-        if self.cfg.n_codebooks > 1:
-            tok = tok.reshape(tok.shape[0], -1)[:, : self.cfg.n_codebooks]
-        self._tok = tok.astype(jnp.int32)
-        self.rng_key, _ = jax.random.split(self.rng_key)
-        out = np.asarray(self._tok)
-        self.generated.append(out)
-        self.pos += 1
-        for r in range(len(self.cluster.ranks)):
-            self.cluster.heartbeat(r)
-        return out
-
-    def decode(self, n_tokens, first_token):
-        self.start_decode(first_token)
-        out = []
-        t0 = time.time()
-        for _ in range(n_tokens):
-            out.append(self.step_once())
-        dt = time.time() - t0
-        return out, dt
-
-    # -- transparent serving snapshot ---------------------------------------
-    def checkpoint(self, tag=None):
-        if tag is None:
-            tag = self.pos
-        rt_arrays, rt_meta = self.runtime.snapshot()
-        arrays = {"runtime": rt_arrays}
-        # legacy pos/last_tok keys ride alongside the runtime section so
-        # older tooling keeps parsing serving snapshots
-        extra = {"pos": int(self.pos), "runtime": rt_meta}
-        if self.generated:
-            extra["last_tok"] = np.asarray(self.generated[-1]).tolist()
-        req = self.cluster.checkpoint(tag, arrays, self.mesh,
-                                      extra_rank_state=lambda r: dict(extra))
-        return req
-
-    def restore(self, ckpt, *, new_backend=None, new_world_size=None,
-                rebuild=False):
-        """Resume mid-sequence from a serving snapshot — a committed step
-        dir or an in-RAM ``TierImage``.  ``new_backend`` /
-        ``new_world_size`` / ``rebuild`` go through ``Cluster.restart``:
-        fresh lower halves (possibly a different flavor or a shrunken
-        world) with cache-leaf reads overlapping the descriptor re-bind;
-        restart phase timings land in ``self.cluster.restart_timings``.
-
-        Snapshots carry a runtime-state section (tree skeletons + StateLeaf
-        descriptors), so a FRESH server restores the full decode state —
-        cache treedef included — without running a prefill first."""
-        src = as_source(ckpt)
-        manifest = src.manifest()
-        rs = src.rank_state(0)
-        rt_meta = rs.get("runtime")
-        if rt_meta is not None:
-            # shardings rebuilt from snapshot metadata alone
-            sh = {"runtime": self.runtime.shardings(rt_meta)}
-        elif self.caches is not None:
-            # legacy (pre-runtime-section) snapshot: live cache structure
-            sh = {"caches": jax.tree.map(lambda _: None, self.caches)}
-        else:
-            sh = {"caches": [None] * len(manifest["leaves"])}
-        if new_backend is not None or new_world_size is not None or rebuild:
-            self.cluster = self.cluster.restart(src,
-                                                new_backend=new_backend,
-                                                new_world_size=new_world_size,
-                                                shardings=sh)
-            arrays = self.cluster.restored_arrays
-        else:
-            arrays = load_arrays(src, sh)
-        if rt_meta is not None:
-            plan = translation_plan(
-                manifest.get("backend", self.cluster.backend_name),
-                self.cluster.backend_name, self.cluster.mana(0).backend)
-            self.last_runtime_restore = self.runtime.restore(
-                arrays.get("runtime", {}), rt_meta, plan=plan)
-            return
-        # legacy restore path: cache leaves + pos/last_tok rank state
-        self.caches = arrays["caches"]
-        self._apply_cursor(rs)
-
-    def recover(self, ckpt_dir, *, new_world_size=None):
-        """Supervisor entry point: rebuild the lower halves (tokens are
-        re-minted — the fabric-direct dropped-token case) on the surviving
-        world and rewind decode to the snapshot position."""
-        self.restore(ckpt_dir, new_world_size=new_world_size, rebuild=True)
-
-    # -- live rescale (zero-downtime elasticity) -----------------------
-    def prepare_leave(self, rank):  # noqa: ARG002 — workload hook shape
-        """Supervisor hook before ``elastic.shrink``: a server has no data
-        pipeline cursor — decode state (caches, pos, seed token) lives in
-        the upper half and is untouched by a live shrink."""
-        return None
-
-    def rescale(self, report):  # noqa: ARG002 — workload hook shape
-        """Supervisor hook after a live rescale: decode continues at the
-        SAME position with the SAME caches — the membership change never
-        touches arrays, so no token is re-minted and none is lost."""
-        return None
-
-    def resume_latest(self, *, new_backend=None):
-        """Resume-from-latest with delta-chain resolution; returns the
-        checkpoint dir or ``None`` when nothing restorable exists."""
-        if self.cluster.writer is None:
-            return None
-        ck = self.cluster.writer.resumable()
-        if ck is None:
-            return None
-        self.restore(ck, new_backend=new_backend)
-        return ck
+def __getattr__(name):
+    new_mod = _MOVED.get(name)
+    if new_mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    warnings.warn(
+        f"repro.launch.serve.{name} moved to {new_mod}.{name}; "
+        "the repro.launch.serve alias will be removed in a future release",
+        DeprecationWarning, stacklevel=2)
+    import importlib
+    return getattr(importlib.import_module(new_mod), name)
 
 
 def main():
+    from repro.serving.engine import Server
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--batch", type=int, default=4)

@@ -237,8 +237,9 @@ class Trainer:
             plan = translation_plan(
                 manifest.get("backend", self.cluster.backend_name),
                 self.cluster.backend_name, self.cluster.mana(0).backend)
-            self.runtime.restore(arrays.get("runtime", {}), rt_meta,
-                                 plan=plan)
+            self.last_runtime_restore = self.runtime.restore(
+                arrays.get("runtime", {}), rt_meta, plan=plan)
+            RS.warn_skipped(self.last_runtime_restore, "train")
         else:
             # legacy (pre-runtime-section) checkpoint
             self.pipeline = DataPipeline.resume(self.cfg, rs["pipeline"],

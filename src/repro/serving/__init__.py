@@ -1,0 +1,22 @@
+"""Multi-tenant serving fleet on the checkpoint/restart planes.
+
+``kv_pool``    paged KV/recurrent-cache allocator (page table, block lists,
+               preempt-on-OOM) whose physical layout feeds
+               ``kernels.decode_attention.paged_decode_attention``
+``scheduler``  continuous-batching scheduler: admission queue, per-step
+               join/retire, prefill/decode interleave, fairness + priority
+``engine``     the serving engine (single-stream ``Server`` and the
+               multi-tenant ``ServeEngine``) speaking the supervisor's
+               workload protocol
+``migrate``    live cross-flavor session migration over the interposed p2p
+               plane, digest-verified like the elastic join path
+"""
+from repro.serving.engine import ServeEngine, Server
+from repro.serving.kv_pool import PagePool, PoolOOMError
+from repro.serving.migrate import MigrationError, MigrationLink, \
+    MigrationReport, migrate_sessions
+from repro.serving.scheduler import ContinuousBatchScheduler
+
+__all__ = ["ServeEngine", "Server", "PagePool", "PoolOOMError",
+           "ContinuousBatchScheduler", "MigrationError", "MigrationLink",
+           "MigrationReport", "migrate_sessions"]

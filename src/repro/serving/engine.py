@@ -1,0 +1,761 @@
+"""Serving engines: the single-stream ``Server`` and the multi-tenant
+``ServeEngine`` fleet.
+
+``Server`` (moved here from ``launch/serve.py``, which keeps a deprecation
+shim) is the paper's §1 preemptible-serving demonstrator: one batched
+sequence, checkpointable between decode steps, resumable mid-sequence on a
+different mesh/backend.
+
+``ServeEngine`` is the production-shaped workload built on it: many
+concurrent sessions over ONE model instance, continuous batching
+(per-step join/retire via ``serving/scheduler.py``), cache state in a
+paged pool (``serving/kv_pool.py``) that is authoritative and
+write-through, and the full runtime-state plane — page tables + pages
+ride checkpoints as ``kind="runtime"`` leaves through
+:class:`~repro.core.runtime_state.PagedCacheProvider`, so a fleet's
+in-flight sessions survive rank death (supervisor re-homes them onto the
+surviving world) and live-migrate across backend flavors
+(``serving/migrate.py``) with gap- and duplicate-free token streams.
+
+Both classes speak the supervisor workload protocol (``step`` /
+``step_once`` / ``checkpoint`` / ``recover`` + the rescale hooks), so one
+:class:`~repro.core.supervisor.Supervisor` drives training, single-stream
+serving, and the fleet.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import steps as ST
+from repro.core import Cluster
+from repro.core import runtime_state as RS
+from repro.core.restore import as_source, load_arrays, translation_plan
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.serving import scheduler as SCHED
+from repro.serving.kv_pool import PagePool, PoolOOMError
+from repro.serving.scheduler import ContinuousBatchScheduler
+from repro.sharding import ShardingCtx, rules_for
+
+
+class Server:
+    """Single-stream preemptible serving (one batched sequence)."""
+
+    def __init__(self, cfg, *, world_size=2, backend="mpich", ckpt_dir=None,
+                 mesh=None, seed=0):
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else (
+            make_host_mesh() if len(jax.devices()) > 1 else None)
+        self.ctx = ShardingCtx(self.mesh, rules_for(cfg, "decode"))
+        self.model = Model(cfg)
+        self.cluster = Cluster(world_size, backend, ckpt_dir=ckpt_dir)
+        self.params = self.model.init(jax.random.key(seed))
+        self.prefill_fn = jax.jit(ST.make_prefill_step(self.model, self.ctx))
+        self.decode_fn = jax.jit(ST.make_decode_step(self.model, self.ctx),
+                                 donate_argnums=(3,))
+        self.caches = None
+        self.pos = 0
+        self.generated = []
+        # the next decode seed token: ONE source of truth, owned by the
+        # decode_cursor provider (the old separate ``resume_tok`` numpy
+        # mirror is now a read-only view — see the property below)
+        self._tok = None
+        # sampling key stream: advanced once per decode step (argmax decode
+        # never consumes it, but a restored server must hold the SAME key a
+        # sampling decode would — RNG streams are runtime state too)
+        self.rng_key = jax.random.key(seed + 1)
+        self.last_runtime_restore = None
+        # runtime-state providers: KV/recurrent cache pytree (with its
+        # treedef), the sampling key stream, and the decode cursor — the
+        # full upper-half serving state, made checkpointable
+        self.runtime = RS.RuntimeStateRegistry()
+        self.runtime.register(RS.PyTreeProvider(
+            "kv_caches", lambda: self.caches, self._set_caches))
+        self.runtime.register(RS.RngStateProvider(
+            "rng", lambda: self.rng_key, self._set_rng))
+        self.runtime.register(RS.JsonStateProvider(
+            "decode_cursor", self._cursor_state, self._apply_cursor))
+
+    # -- runtime provider hooks ---------------------------------------------
+    def _set_caches(self, tree):
+        self.caches = tree
+
+    def _set_rng(self, key):
+        self.rng_key = key
+
+    @property
+    def resume_tok(self):
+        """Deprecated-by-consolidation numpy view of the next decode seed
+        (kept for callers of the old duplicated field; the jnp ``_tok``
+        restored by the ``decode_cursor`` provider is the single source)."""
+        return None if self._tok is None else np.asarray(self._tok, np.int32)
+
+    def _cursor_state(self) -> dict:
+        st = {"pos": int(self.pos),
+              "prefill_pos": int(self.pos - len(self.generated))}
+        if self.generated:
+            # the token that seeds the next decode step after a resume
+            st["last_tok"] = np.asarray(self.generated[-1]).tolist()
+        return st
+
+    def _apply_cursor(self, st: dict) -> None:
+        # rewinding pos must also rewind the generated stream, or the
+        # tokens decoded between snapshot and failure appear TWICE after
+        # the supervisor replays them
+        prefill_pos = self.pos - len(self.generated)
+        self.pos = int(st["pos"])
+        keep = max(0, self.pos - prefill_pos)
+        if len(self.generated) > keep:
+            del self.generated[keep:]
+        tok = st.get("last_tok")
+        self._tok = jnp.asarray(np.asarray(tok, np.int32)) \
+            if tok is not None else None
+
+    def prefill(self, tokens, patch_embeds=None, pad_to=None):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if patch_embeds is not None:
+            batch["patch_embeds"] = jnp.asarray(patch_embeds)
+        logits, caches = self.prefill_fn(self.params, batch)
+        S = batch["tokens"].shape[-1]
+        if pad_to and pad_to > S:
+            def grow(x):
+                if hasattr(x, "ndim") and x.ndim >= 3 and x.shape[-2] == S:
+                    pad = [(0, 0)] * x.ndim
+                    pad[-2] = (0, pad_to - S)
+                    return jnp.pad(x, pad)
+                return x
+            caches = jax.tree.map(grow, caches)
+        self.caches = caches
+        self.pos = S
+        return logits
+
+    # -- supervisor workload protocol ---------------------------------------
+    # (step / step_once / checkpoint / recover: the same contract Trainer
+    # implements, so one Supervisor drives training AND serving)
+    @property
+    def step(self) -> int:
+        return self.pos
+
+    def start_decode(self, first_token):
+        """Seed the supervised decode loop (``step_once`` consumes it)."""
+        self._tok = jnp.asarray(first_token)
+
+    def step_once(self):
+        """Decode ONE token from the internal seed; the unit the supervisor
+        drives between snapshots."""
+        logits, self.caches = self.decode_fn(self.params, self._tok,
+                                             jnp.int32(self.pos), self.caches)
+        tok = jnp.argmax(logits[..., : self.cfg.vocab_size], axis=-1)
+        if self.cfg.n_codebooks > 1:
+            tok = tok.reshape(tok.shape[0], -1)[:, : self.cfg.n_codebooks]
+        self._tok = tok.astype(jnp.int32)
+        self.rng_key, _ = jax.random.split(self.rng_key)
+        out = np.asarray(self._tok)
+        self.generated.append(out)
+        self.pos += 1
+        for r in range(len(self.cluster.ranks)):
+            self.cluster.heartbeat(r)
+        return out
+
+    def decode(self, n_tokens, first_token):
+        self.start_decode(first_token)
+        out = []
+        t0 = time.time()
+        for _ in range(n_tokens):
+            out.append(self.step_once())
+        dt = time.time() - t0
+        return out, dt
+
+    # -- transparent serving snapshot ---------------------------------------
+    def checkpoint(self, tag=None):
+        if tag is None:
+            tag = self.pos
+        rt_arrays, rt_meta = self.runtime.snapshot()
+        arrays = {"runtime": rt_arrays}
+        # legacy pos/last_tok keys ride alongside the runtime section so
+        # older tooling keeps parsing serving snapshots
+        extra = {"pos": int(self.pos), "runtime": rt_meta}
+        if self.generated:
+            extra["last_tok"] = np.asarray(self.generated[-1]).tolist()
+        req = self.cluster.checkpoint(tag, arrays, self.mesh,
+                                      extra_rank_state=lambda r: dict(extra))
+        return req
+
+    def restore(self, ckpt, *, new_backend=None, new_world_size=None,
+                rebuild=False):
+        """Resume mid-sequence from a serving snapshot — a committed step
+        dir or an in-RAM ``TierImage``.  ``new_backend`` /
+        ``new_world_size`` / ``rebuild`` go through ``Cluster.restart``:
+        fresh lower halves (possibly a different flavor or a shrunken
+        world) with cache-leaf reads overlapping the descriptor re-bind;
+        restart phase timings land in ``self.cluster.restart_timings``.
+
+        Snapshots carry a runtime-state section (tree skeletons + StateLeaf
+        descriptors), so a FRESH server restores the full decode state —
+        cache treedef included — without running a prefill first."""
+        src = as_source(ckpt)
+        manifest = src.manifest()
+        rs = src.rank_state(0)
+        rt_meta = rs.get("runtime")
+        if rt_meta is not None:
+            # shardings rebuilt from snapshot metadata alone
+            sh = {"runtime": self.runtime.shardings(rt_meta)}
+        elif self.caches is not None:
+            # legacy (pre-runtime-section) snapshot: live cache structure
+            sh = {"caches": jax.tree.map(lambda _: None, self.caches)}
+        else:
+            sh = {"caches": [None] * len(manifest["leaves"])}
+        if new_backend is not None or new_world_size is not None or rebuild:
+            self.cluster = self.cluster.restart(src,
+                                                new_backend=new_backend,
+                                                new_world_size=new_world_size,
+                                                shardings=sh)
+            arrays = self.cluster.restored_arrays
+        else:
+            arrays = load_arrays(src, sh)
+        if rt_meta is not None:
+            plan = translation_plan(
+                manifest.get("backend", self.cluster.backend_name),
+                self.cluster.backend_name, self.cluster.mana(0).backend)
+            self.last_runtime_restore = self.runtime.restore(
+                arrays.get("runtime", {}), rt_meta, plan=plan)
+            RS.warn_skipped(self.last_runtime_restore, "serve")
+            return
+        # legacy restore path: cache leaves + pos/last_tok rank state
+        self.caches = arrays["caches"]
+        self._apply_cursor(rs)
+
+    def recover(self, ckpt_dir, *, new_world_size=None):
+        """Supervisor entry point: rebuild the lower halves (tokens are
+        re-minted — the fabric-direct dropped-token case) on the surviving
+        world and rewind decode to the snapshot position."""
+        self.restore(ckpt_dir, new_world_size=new_world_size, rebuild=True)
+
+    # -- live rescale (zero-downtime elasticity) -----------------------
+    def prepare_leave(self, rank):  # noqa: ARG002 — workload hook shape
+        """Supervisor hook before ``elastic.shrink``: a server has no data
+        pipeline cursor — decode state (caches, pos, seed token) lives in
+        the upper half and is untouched by a live shrink."""
+        return None
+
+    def rescale(self, report):  # noqa: ARG002 — workload hook shape
+        """Supervisor hook after a live rescale: decode continues at the
+        SAME position with the SAME caches — the membership change never
+        touches arrays, so no token is re-minted and none is lost."""
+        return None
+
+    def resume_latest(self, *, new_backend=None):
+        """Resume-from-latest with delta-chain resolution; returns the
+        checkpoint dir or ``None`` when nothing restorable exists."""
+        if self.cluster.writer is None:
+            return None
+        ck = self.cluster.writer.resumable()
+        if ck is None:
+            return None
+        self.restore(ck, new_backend=new_backend)
+        return ck
+
+
+# ---------------------------------------------------------------------------
+# the multi-tenant fleet engine
+# ---------------------------------------------------------------------------
+
+class FleetSession:
+    """One client sequence: prompt, output stream, decode cursor, and the
+    (droppable) dense working copy of its caches."""
+
+    __slots__ = ("sid", "prompt", "max_new", "priority", "first_token",
+                 "generated", "pos", "last_tok", "dense")
+
+    def __init__(self, sid, prompt, *, max_new=8, priority=0, first_token=0):
+        self.sid = sid
+        self.prompt = [int(t) for t in prompt]
+        self.max_new = int(max_new)
+        self.priority = int(priority)
+        self.first_token = int(first_token)
+        self.generated: list[int] = []
+        self.pos = 0
+        self.last_tok: int | None = None
+        self.dense = None           # resident working caches (pool is
+                                    # authoritative; this is droppable)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+    def cursor(self) -> dict:
+        return {"prompt": list(self.prompt), "max_new": self.max_new,
+                "priority": self.priority, "first_token": self.first_token,
+                "generated": list(self.generated), "pos": int(self.pos),
+                "last_tok": self.last_tok}
+
+    @classmethod
+    def from_cursor(cls, sid: str, st: dict) -> "FleetSession":
+        s = cls(sid, st.get("prompt", []), max_new=st.get("max_new", 8),
+                priority=st.get("priority", 0),
+                first_token=st.get("first_token", 0))
+        s.generated = [int(t) for t in st.get("generated", [])]
+        s.pos = int(st.get("pos", 0))
+        lt = st.get("last_tok")
+        s.last_tok = None if lt is None else int(lt)
+        return s
+
+
+class ServeEngine:
+    """Continuous-batching multi-session serving over one model instance.
+
+    Sessions decode at INDEPENDENT positions (B=1 lanes sharing one jitted
+    decode), join the running set the step they are admitted and retire the
+    step they finish.  All cache state lives in the paged pool; the dense
+    per-session working copies are write-through caches over it, dropped on
+    preemption/migration/restore and regathered from pages — so swap
+    round-trips are byte-identical by construction.
+
+    Speaks the supervisor workload protocol: ``step`` is the engine tick,
+    ``checkpoint`` snapshots pool + cursors + RNG through the runtime-state
+    registry, ``recover`` re-homes every in-flight session onto the
+    surviving world (count in ``last_rehomed``, surfaced on the incident).
+    """
+
+    def __init__(self, cfg, *, world_size=2, backend="mpich", ckpt_dir=None,
+                 mesh=None, seed=0, max_len=48, page_size=8, n_pages=64,
+                 max_running=4):
+        if cfg.n_codebooks > 1:
+            raise NotImplementedError("ServeEngine supports single-codebook "
+                                      "models; use Server for codebook archs")
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.mesh = mesh if mesh is not None else (
+            make_host_mesh() if len(jax.devices()) > 1 else None)
+        self.ctx = ShardingCtx(self.mesh, rules_for(cfg, "decode"))
+        self.model = Model(cfg)
+        self.cluster = Cluster(world_size, backend, ckpt_dir=ckpt_dir)
+        self.params = self.model.init(jax.random.key(seed))
+        self.prefill_fn = jax.jit(ST.make_prefill_step(self.model, self.ctx))
+        self.decode_fn = jax.jit(ST.make_decode_step(self.model, self.ctx))
+        self.pool = PagePool(n_pages, page_size)
+        self.sched = ContinuousBatchScheduler(max_running=max_running)
+        self.sessions: dict[str, FleetSession] = {}
+        self.tick = 0
+        self.rng_key = jax.random.key(seed + 1)
+        self.last_runtime_restore = None
+        self.last_rehomed = None
+        self._sid_counter = 0
+        # cache leaf geometry: specs at max_len, per-prompt-length seq axes
+        caches = self.model.cache_abstract(self.ctx, 1, self.max_len)
+        leaves, self._treedef = jax.tree.flatten(caches)
+        self._leaf_specs = [(f"leaf{i:03d}", tuple(l.shape), l.dtype)
+                            for i, l in enumerate(leaves)]
+        self._axis_cache: dict[int, list] = {}
+        # runtime-state providers: page tables + pages (PagedCacheProvider),
+        # the RNG stream, and the fleet cursor (per-session decode cursors +
+        # the scheduler snapshot) — the complete upper-half fleet state
+        self.runtime = RS.RuntimeStateRegistry()
+        self.runtime.register(RS.PagedCacheProvider(
+            "kv_pages", lambda: self.pool))
+        self.runtime.register(RS.RngStateProvider(
+            "rng", lambda: self.rng_key, self._set_rng))
+        self.runtime.register(RS.JsonStateProvider(
+            "fleet_cursor", self._fleet_state, self._apply_fleet))
+
+    # -- runtime provider hooks ---------------------------------------------
+    def _set_rng(self, key):
+        self.rng_key = key
+
+    def _fleet_state(self) -> dict:
+        return {"tick": int(self.tick),
+                "scheduler": self.sched.snapshot(),
+                "sessions": {sid: s.cursor()
+                             for sid, s in self.sessions.items()}}
+
+    def _apply_fleet(self, st: dict) -> None:
+        st = st or {}
+        self.tick = int(st.get("tick", 0))
+        self.sched.restore(st.get("scheduler") or {})
+        self.sessions = {sid: FleetSession.from_cursor(sid, cur)
+                         for sid, cur in (st.get("sessions") or {}).items()}
+        # the restored pool is authoritative; every dense copy is stale
+
+    # -- cache leaf geometry -------------------------------------------------
+    def _seq_axes(self, S: int) -> list:
+        """Per-leaf ``(key, seq_axis | None)`` for a prompt of length ``S``:
+        the axis where the prefill-at-S cache shape differs from the
+        max_len spec is the sequence axis; leaves with identical shapes are
+        block (recurrent) state.  Shape-diff detection instead of the
+        ``shape[-2] == S`` heuristic, so feature dims colliding with S
+        can't misclassify a leaf."""
+        axes = self._axis_cache.get(S)
+        if axes is not None:
+            return axes
+        at_s = jax.tree.leaves(self.model.cache_abstract(self.ctx, 1, S)) \
+            if S else [None] * len(self._leaf_specs)
+        axes = []
+        for (key, shape, _), ls in zip(self._leaf_specs, at_s):
+            if ls is None or tuple(ls.shape) == shape:
+                axes.append((key, None))
+                continue
+            diff = [a for a, (x, y) in enumerate(zip(ls.shape, shape))
+                    if x != y]
+            if len(diff) != 1 or ls.shape[diff[0]] != S \
+                    or shape[diff[0]] != self.max_len:
+                raise NotImplementedError(
+                    f"cache leaf {key} varies with prompt length in a "
+                    f"non-sequence way ({tuple(ls.shape)} vs {shape}); "
+                    "windowed/ring caches need the single-stream Server")
+            axes.append((key, diff[0]))
+        self._axis_cache[S] = axes
+        return axes
+
+    def _max_axes(self) -> list:
+        """Seq axes at max_len geometry (positions -2 by construction for
+        every pageable leaf found via a real prompt length)."""
+        return self._seq_axes(min(self.max_len - 1, 1) or 1)
+
+    # -- session lifecycle ---------------------------------------------------
+    def submit(self, prompt, *, sid=None, priority=0, max_new_tokens=8,
+               first_token=0) -> str:
+        """Queue a new session; it joins the running batch at the next
+        ``step_once`` with a free lane and pool capacity."""
+        if sid is None:
+            self._sid_counter += 1
+            sid = f"s{self._sid_counter:04d}"
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size and prompt.size >= self.max_len:
+            raise ValueError(f"prompt of {prompt.size} tokens >= max_len "
+                             f"{self.max_len}")
+        self.sessions[sid] = FleetSession(
+            sid, prompt.tolist(), max_new=max_new_tokens, priority=priority,
+            first_token=first_token)
+        self.sched.submit(sid, priority=priority)
+        return sid
+
+    def stream(self, sid: str) -> list:
+        """The client-visible token stream (gap- and duplicate-free across
+        preemption, recovery, and migration)."""
+        return list(self.sessions[sid].generated)
+
+    # -- dense <-> pool translation -----------------------------------------
+    def _split_leaves(self, dense_leaves, axes, S):
+        """(token_slices [S, numel], blocks full-array) dicts from dense
+        cache leaves."""
+        toks, blocks = {}, {}
+        for (key, axis), leaf in zip(axes, dense_leaves):
+            arr = np.asarray(leaf)
+            if axis is None:
+                blocks[key] = arr
+            else:
+                toks[key] = np.moveaxis(arr, axis, 0)[:S].reshape(S, -1)
+        return toks, blocks
+
+    def _token_slice(self, dense_leaves, pos):
+        """Write-through extraction: each pageable leaf's single row at
+        ``pos`` plus fresh copies of every block leaf."""
+        axes = self._max_seq_axes
+        toks, blocks = {}, {}
+        for (key, axis), leaf in zip(axes, dense_leaves):
+            arr = np.asarray(leaf)
+            if axis is None:
+                blocks[key] = arr
+            else:
+                toks[key] = np.moveaxis(arr, axis, 0)[pos].reshape(1, -1)
+        return toks, blocks
+
+    @property
+    def _max_seq_axes(self) -> list:
+        axes = getattr(self, "_max_axes_cached", None)
+        if axes is None:
+            # derive from a representative prompt length, then rebase the
+            # axis onto the max_len dense geometry (same axis index: the
+            # seq axis position does not move when only its size grows)
+            probe = max(1, min(4, self.max_len - 1))
+            axes = self._seq_axes(probe)
+            self._max_axes_cached = axes
+        return axes
+
+    def _gather_dense(self, sid: str):
+        """Rebuild the dense max_len working caches from the pool — the
+        byte-exact inverse of the write-through path."""
+        axes = self._max_seq_axes
+        alloc = self.pool.sessions[sid]
+        toks = self.pool.read_tokens(sid)
+        blocks = self.pool.read_blocks(sid)
+        leaves = []
+        for (key, axis), (_, shape, dtype) in zip(axes, self._leaf_specs):
+            if axis is None:
+                arr = blocks.get(key)
+                if arr is None:
+                    arr = np.zeros(shape, dtype)
+                leaves.append(jnp.asarray(arr.reshape(shape)))
+                continue
+            moved = (shape[axis],) + tuple(np.delete(np.array(shape), axis))
+            flat = np.zeros((shape[axis],
+                             int(np.prod(moved[1:], dtype=np.int64))),
+                            dtype=dtype)
+            rows = toks.get(key)
+            if rows is not None and alloc.length:
+                flat[: alloc.length] = rows[: alloc.length]
+            dense = np.moveaxis(flat.reshape(moved), 0, axis)
+            leaves.append(jnp.asarray(np.ascontiguousarray(dense)))
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def _zero_dense(self):
+        leaves = [jnp.zeros(shape, dtype)
+                  for _, shape, dtype in self._leaf_specs]
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    # -- admission / prefill -------------------------------------------------
+    def _prefill(self, sess: FleetSession) -> None:
+        """First admission: run the prompt, scatter its cache rows into
+        freshly-allocated pages, keep the dense copy resident."""
+        S = len(sess.prompt)
+        self.pool.admit(sess.sid, S, priority=sess.priority)
+        if S == 0:
+            # zero-length prompt: no prefill, zero caches, the request's
+            # first_token seeds decode at position 0
+            sess.dense = self._zero_dense()
+            sess.pos = 0
+            sess.last_tok = sess.first_token
+            return
+        batch = {"tokens": jnp.asarray(
+            np.asarray(sess.prompt, np.int32)[None, :])}
+        logits, caches = self.prefill_fn(self.params, batch)
+        axes = self._seq_axes(S)
+        dense_small = jax.tree.leaves(caches)
+        toks, blocks = self._split_leaves(dense_small, axes, S)
+        self.pool.write_tokens(sess.sid, 0, toks)
+        self.pool.write_blocks(sess.sid, blocks)
+        # grow to the max_len dense geometry by zero-padding the seq axis
+        grown = []
+        for (key, axis), leaf, (_, shape, _) in zip(axes, dense_small,
+                                                    self._leaf_specs):
+            if axis is None:
+                grown.append(leaf)
+            else:
+                pad = [(0, 0)] * leaf.ndim
+                pad[axis] = (0, self.max_len - S)
+                grown.append(jnp.pad(leaf, pad))
+        sess.dense = jax.tree.unflatten(self._treedef, grown)
+        sess.pos = S
+        tok0 = int(np.argmax(
+            np.asarray(logits)[0, : self.cfg.vocab_size]))
+        sess.generated.append(tok0)
+        sess.last_tok = tok0
+
+    def _try_admit(self, sid: str) -> bool:
+        """Admit one queued session (prefill, or swap-in if parked),
+        preempting strictly-lower-priority victims on OOM.  Returns False
+        when the pool cannot make room at this priority."""
+        sess = self.sessions[sid]
+        while True:
+            try:
+                if sid in self.pool.parked:
+                    self.pool.unpark(sid)
+                    sess.dense = None      # regathered lazily, byte-exact
+                else:
+                    self._prefill(sess)
+                return True
+            except PoolOOMError:
+                victim = self.pool.preempt_victim(
+                    below_priority=sess.priority,
+                    exclude=set([sid]))
+                if victim is None:
+                    return False
+                self._preempt(victim)
+
+    def _preempt(self, sid: str) -> None:
+        """Swap a session out: its bytes move to the pool's parked store,
+        its pages free, its lane releases; it re-queues at its original
+        arrival position."""
+        self.pool.park(sid)
+        self.sessions[sid].dense = None
+        if self.sched.state(sid) == SCHED.RUNNING:
+            self.sched.preempted(sid)
+
+    def _retire(self, sid: str) -> None:
+        self.pool.drop(sid)
+        self.sessions[sid].dense = None
+        self.sched.retired(sid)
+
+    # -- the engine tick -----------------------------------------------------
+    @property
+    def step(self) -> int:
+        return self.tick
+
+    def step_once(self):
+        """One continuous-batching tick: retire finished sessions, admit
+        from the queue (prefill interleaved with decode), decode one token
+        on every running lane."""
+        for sid in self.sched.running:
+            if self.sessions[sid].done:
+                self._retire(sid)
+        while True:
+            cand = self.sched.next_admission()
+            if cand is None:
+                break
+            if self.sessions[cand].done:      # zero-token request
+                self.sched.retired(cand)
+                continue
+            if not self._try_admit(cand):
+                break                          # head-of-line waits (fairness)
+            self.sched.admitted(cand)
+        for sid in self.sched.running:
+            if self.sched.state(sid) != SCHED.RUNNING:
+                continue      # parked by a mid-decode growth eviction
+            self._decode_one(self.sessions[sid])
+        self.rng_key, _ = jax.random.split(self.rng_key)
+        self.tick += 1
+        for r in range(len(self.cluster.ranks)):
+            self.cluster.heartbeat(r)
+        return None
+
+    def _decode_one(self, sess: FleetSession) -> None:
+        if sess.dense is None:
+            sess.dense = self._gather_dense(sess.sid)
+        tok = jnp.asarray(np.asarray([sess.last_tok], np.int32))
+        logits, new = self.decode_fn(self.params, tok,
+                                     jnp.int32(sess.pos), sess.dense)
+        leaves = jax.tree.leaves(new)
+        toks, blocks = self._token_slice(leaves, sess.pos)
+        while True:
+            try:
+                # capacity check happens BEFORE any scatter, so an OOM
+                # here leaves the pool untouched and the write retries
+                # cleanly after a victim is parked
+                self.pool.write_tokens(sess.sid, sess.pos, toks)
+                break
+            except PoolOOMError:
+                # decode-time growth (the new token crossed a page
+                # boundary): evict equal-or-lower priority, newest first.
+                # Admission readmits only by evicting STRICTLY lower, so
+                # a grower and its victim cannot evict each other forever.
+                victim = self.pool.preempt_victim(
+                    below_priority=sess.priority + 1,
+                    exclude={sess.sid})
+                if victim is not None:
+                    self._preempt(victim)
+                    continue
+                if any(s != sess.sid for s in self.sched.live()):
+                    # everyone else resident outranks us: park OURSELVES
+                    # before the write — pos/stream untouched, so the
+                    # re-decode after unpark replays this exact token
+                    self._preempt(sess.sid)
+                    return
+                raise PoolOOMError(
+                    self.pool.pages_for(sess.pos + 1),
+                    self.pool.free_pages)
+        self.pool.write_blocks(sess.sid, blocks)
+        sess.dense = new
+        nxt = int(np.argmax(np.asarray(logits)[0, : self.cfg.vocab_size]))
+        sess.pos += 1
+        sess.generated.append(nxt)
+        sess.last_tok = nxt
+
+    def run_until_drained(self, *, max_ticks=10_000) -> int:
+        """Drive ticks until no session is queued or running; returns the
+        tick count."""
+        t0 = self.tick
+        while self.sched.live() and self.tick - t0 < max_ticks:
+            self.step_once()
+        return self.tick - t0
+
+    # -- checkpoint / recover ------------------------------------------------
+    def checkpoint(self, tag=None):
+        if tag is None:
+            tag = self.tick
+        rt_arrays, rt_meta = self.runtime.snapshot()
+        extra = {"tick": int(self.tick), "runtime": rt_meta}
+        return self.cluster.checkpoint(tag, {"runtime": rt_arrays},
+                                       self.mesh,
+                                       extra_rank_state=lambda r: dict(extra))
+
+    def restore(self, ckpt, *, new_backend=None, new_world_size=None,
+                rebuild=False):
+        """Resume the whole fleet mid-flight: pool pages, page table,
+        per-session cursors, scheduler state, RNG — possibly under a
+        different flavor/world.  Dense working copies are NOT restored
+        (the pool is authoritative); lanes regather on their next decode."""
+        src = as_source(ckpt)
+        manifest = src.manifest()
+        rt_meta = src.rank_state(0).get("runtime")
+        if rt_meta is None:
+            raise ValueError("not a fleet snapshot: no runtime section")
+        sh = {"runtime": self.runtime.shardings(rt_meta)}
+        if new_backend is not None or new_world_size is not None or rebuild:
+            self.cluster = self.cluster.restart(src,
+                                                new_backend=new_backend,
+                                                new_world_size=new_world_size,
+                                                shardings=sh)
+            arrays = self.cluster.restored_arrays
+        else:
+            arrays = load_arrays(src, sh)
+        plan = translation_plan(
+            manifest.get("backend", self.cluster.backend_name),
+            self.cluster.backend_name, self.cluster.mana(0).backend)
+        self.last_runtime_restore = self.runtime.restore(
+            arrays.get("runtime", {}), rt_meta, plan=plan)
+        RS.warn_skipped(self.last_runtime_restore, "serve-fleet")
+
+    def recover(self, ckpt, *, new_world_size=None):
+        """Supervisor entry point: restore the fleet image onto the
+        surviving world — every in-flight session is RE-HOMED (their pages
+        and cursors come back exactly as snapshotted; replayed ticks
+        re-decode the same tokens, so streams stay duplicate-free)."""
+        self.restore(ckpt, new_world_size=new_world_size, rebuild=True)
+        self.last_rehomed = len(self.sched.live())
+
+    # -- rescale hooks (same contract as Server) -----------------------------
+    def prepare_leave(self, rank):  # noqa: ARG002 — workload hook shape
+        return None
+
+    def rescale(self, report):  # noqa: ARG002 — workload hook shape
+        return None
+
+    def resume_latest(self, *, new_backend=None):
+        if self.cluster.writer is None:
+            return None
+        ck = self.cluster.writer.resumable()
+        if ck is None:
+            return None
+        self.restore(ck, new_backend=new_backend)
+        return ck
+
+    # -- migration support (serving/migrate.py drives these) -----------------
+    def export_session_state(self, sid: str) -> dict:
+        """Cursor + pool payload for one session, ready to ship."""
+        if sid in self.pool.parked:
+            payload, parked = self.pool.parked[sid], True
+        else:
+            payload, parked = self.pool.export_session(sid), False
+        return {"cursor": self.sessions[sid].cursor(),
+                "sched_state": self.sched.state(sid),
+                "parked": parked, "pool": payload}
+
+    def import_session_state(self, sid: str, state: dict) -> None:
+        """Accept a migrated-in session: pool bytes land first (parked on
+        OOM rather than evicting residents), then the cursor and a
+        scheduler ticket; it decodes from its next tick here."""
+        if sid in self.sessions:
+            raise ValueError(f"session {sid!r} already lives here")
+        sess = FleetSession.from_cursor(sid, state["cursor"])
+        self.sessions[sid] = sess
+        self.sched.submit(sid, priority=sess.priority)
+        try:
+            if not state.get("parked"):
+                self.pool.import_session(sid, state["pool"])
+                if self.sched.lanes_free() > 0:
+                    self.sched.admitted(sid)
+                return
+        except PoolOOMError:
+            pass
+        self.pool.park_payload(sid, state["pool"])
+
+    def release_session(self, sid: str) -> None:
+        """Drop a session that migrated away (its stream lives on at the
+        destination)."""
+        self.pool.drop(sid)
+        self.sessions[sid].dense = None
+        self.sched.migrated(sid)

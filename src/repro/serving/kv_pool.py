@@ -1,0 +1,401 @@
+"""Paged KV/recurrent-cache pool: the serving fleet's cache memory.
+
+One fixed-size pool of ``n_pages`` pages, each holding ``page_size`` token
+positions of every *pageable* cache leaf (attention K/V rows, MLA latent
+rows — anything with a sequence axis), plus per-session *block* state for
+the leaves that have none (SSM/mlstm recurrent state, conv tails, window
+ring buffers).  Sessions own ordered page lists — the classic paged-KV
+design — so admission cost is O(pages), not O(max_len), and a fleet packs
+many short sequences into the memory one dense max-len batch would waste.
+
+Physical layout: per leaf key a single ``[n_pages, page_size, numel]``
+array, where ``numel`` flattens the leaf's non-sequence dims.  For an
+attention K/V leaf this is exactly the ``[n_pool_pages, page_size, K*D]``
+layout ``kernels.decode_attention.paged_decode_attention`` consumes;
+:meth:`PagePool.kernel_view` hands the kernel that view plus the int32
+page table / lengths it scalar-prefetches — no copy, no re-layout.
+
+Allocation policy: ``admit`` reserves pages for a prompt, ``extend`` grows
+a session one page at a time as decode crosses page boundaries, ``release``
+returns pages to the free list.  On OOM the caller consults
+:meth:`preempt_victim` — the lowest-priority session (newest arrival among
+ties) — swaps it out via :meth:`export_session`, and retries; the swap
+payload round-trips byte-identically through :meth:`import_session`.
+:meth:`defrag` compacts live pages to the low indices (content-preserving),
+so a long-running fleet's free list never fragments into unusable tails.
+
+The pool is host-side numpy and fully authoritative: the engine's dense
+per-session working caches are a cache OVER this pool (write-through per
+decoded token), dropped on preempt/migrate/restore and regathered from
+pages — which is what makes preemption, migration, and checkpoint restore
+byte-identical by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class PoolOOMError(RuntimeError):
+    """Not enough free pages; caller preempts (or queues) and retries."""
+
+    def __init__(self, needed: int, free: int):
+        self.needed, self.free = needed, free
+        super().__init__(f"page pool exhausted: need {needed} page(s), "
+                         f"{free} free")
+
+
+@dataclass
+class SessionAlloc:
+    """Per-session pool bookkeeping: the block list plus recurrent blocks."""
+    sid: str
+    pages: list = field(default_factory=list)   # ordered pool page indices
+    length: int = 0                             # tokens written
+    priority: int = 0
+    seq: int = 0                                # admission order (fairness)
+    blocks: dict = field(default_factory=dict)  # key -> np.ndarray (copy)
+
+
+class PagePool:
+    """Fixed-size paged allocator for serving-session cache state."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError("n_pages and page_size must be positive")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.stores: dict[str, np.ndarray] = {}   # key -> [P, page, numel]
+        self.sessions: dict[str, SessionAlloc] = {}
+        self.parked: dict[str, dict] = {}         # swapped-out payloads
+        self._free: list[int] = list(range(self.n_pages))
+        self._seq = 0
+
+    # -- capacity -----------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_size) if n_tokens > 0 else 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def stats(self) -> dict:
+        return {"n_pages": self.n_pages, "page_size": self.page_size,
+                "free_pages": self.free_pages, "used_pages": self.used_pages,
+                "sessions": len(self.sessions),
+                "leaf_keys": len(self.stores)}
+
+    # -- allocation ---------------------------------------------------------
+    def _take(self, n: int) -> list:
+        if n > len(self._free):
+            raise PoolOOMError(n, len(self._free))
+        taken, self._free = self._free[:n], self._free[n:]
+        return taken
+
+    def admit(self, sid: str, n_tokens: int, *, priority: int = 0,
+              pages: list | None = None) -> SessionAlloc:
+        """Reserve capacity for ``n_tokens`` (0 is legal: a zero-length
+        prompt owns no pages until its first decode).  ``pages`` pins the
+        exact page ids (restore path: the snapshot's table layout is
+        reproduced bit-for-bit).  Raises :class:`PoolOOMError` untouched —
+        the scheduler's preempt policy runs ABOVE this layer."""
+        if sid in self.sessions:
+            raise ValueError(f"session {sid!r} already admitted")
+        if pages is not None:
+            missing = [p for p in pages if p not in self._free]
+            if missing:
+                raise PoolOOMError(len(pages), len(self._free))
+            self._free = [p for p in self._free if p not in set(pages)]
+            got = list(pages)
+        else:
+            got = self._take(self.pages_for(n_tokens))
+        self._seq += 1
+        alloc = SessionAlloc(sid=sid, pages=got, priority=int(priority),
+                             seq=self._seq)
+        self.sessions[sid] = alloc
+        return alloc
+
+    def ensure_capacity(self, sid: str, n_tokens: int) -> None:
+        """Grow ``sid``'s page list so ``n_tokens`` positions fit."""
+        alloc = self.sessions[sid]
+        need = self.pages_for(n_tokens) - len(alloc.pages)
+        if need > 0:
+            alloc.pages.extend(self._take(need))
+
+    def release(self, sid: str) -> int:
+        """Free every page the session owns; returns the count."""
+        alloc = self.sessions.pop(sid, None)
+        if alloc is None:
+            return 0
+        self._free.extend(alloc.pages)
+        self._free.sort()
+        return len(alloc.pages)
+
+    def preempt_victim(self, below_priority: int | None = None,
+                       exclude: set | None = None) -> str | None:
+        """The OOM policy: the lowest-priority admitted session (newest
+        arrival among ties).  ``below_priority`` restricts to strictly
+        lower-priority victims, so an admission can never evict an equal-
+        or higher-priority session."""
+        exclude = exclude or set()
+        cands = [a for a in self.sessions.values() if a.sid not in exclude]
+        if below_priority is not None:
+            cands = [a for a in cands if a.priority < below_priority]
+        if not cands:
+            return None
+        return min(cands, key=lambda a: (a.priority, -a.seq)).sid
+
+    # -- page I/O -----------------------------------------------------------
+    def _store(self, key: str, numel: int, dtype) -> np.ndarray:
+        st = self.stores.get(key)
+        if st is None:
+            st = np.zeros((self.n_pages, self.page_size, numel), dtype=dtype)
+            self.stores[key] = st
+        elif st.shape[2] != numel:
+            raise ValueError(f"leaf {key!r}: numel {numel} != pool store "
+                             f"{st.shape[2]}")
+        return st
+
+    def write_tokens(self, sid: str, start: int, slices: dict) -> None:
+        """Scatter per-token rows into the session's pages.  ``slices`` maps
+        leaf key -> ``[L, ...]`` (trailing dims flattened); rows land at
+        absolute positions ``start..start+L-1``.  Extends the recorded
+        length — the write-through path of the decode loop."""
+        alloc = self.sessions[sid]
+        lens = {arr.shape[0] for arr in slices.values()}
+        if len(lens) > 1:
+            raise ValueError(f"inconsistent slice lengths {sorted(lens)}")
+        L = lens.pop() if lens else 0
+        if L == 0:
+            return
+        self.ensure_capacity(sid, start + L)
+        for key, arr in slices.items():
+            flat = np.ascontiguousarray(arr).reshape(L, -1)
+            st = self._store(key, flat.shape[1], flat.dtype)
+            for i in range(L):
+                t = start + i
+                page = alloc.pages[t // self.page_size]
+                st[page, t % self.page_size] = flat[i]
+        alloc.length = max(alloc.length, start + L)
+
+    def write_blocks(self, sid: str, blocks: dict) -> None:
+        """Store the session's non-paged (recurrent/window) state blocks."""
+        alloc = self.sessions[sid]
+        for key, arr in blocks.items():
+            alloc.blocks[key] = np.array(arr, copy=True)
+
+    def read_tokens(self, sid: str) -> dict:
+        """Gather every leaf back to dense ``[length, numel]`` arrays."""
+        alloc = self.sessions[sid]
+        out = {}
+        for key, st in self.stores.items():
+            rows = np.zeros((alloc.length, st.shape[2]), dtype=st.dtype)
+            for t in range(alloc.length):
+                page = alloc.pages[t // self.page_size]
+                rows[t] = st[page, t % self.page_size]
+            out[key] = rows
+        return out
+
+    def read_blocks(self, sid: str) -> dict:
+        return {k: np.array(v, copy=True)
+                for k, v in self.sessions[sid].blocks.items()}
+
+    def truncate(self, sid: str, n_tokens: int) -> None:
+        """Rewind a session (cursor replay): drop positions past
+        ``n_tokens`` and free now-unused tail pages."""
+        alloc = self.sessions[sid]
+        if n_tokens >= alloc.length:
+            return
+        alloc.length = int(n_tokens)
+        keep = self.pages_for(alloc.length)
+        tail, alloc.pages = alloc.pages[keep:], alloc.pages[:keep]
+        self._free.extend(tail)
+        self._free.sort()
+
+    # -- swap / migration payloads ------------------------------------------
+    def export_session(self, sid: str) -> dict:
+        """Self-contained byte-exact payload: page-table row + gathered
+        token rows + recurrent blocks.  The unit of swap-preemption and of
+        live migration."""
+        alloc = self.sessions[sid]
+        return {"table": {"length": alloc.length,
+                          "priority": alloc.priority, "seq": alloc.seq},
+                "tokens": self.read_tokens(sid),
+                "blocks": self.read_blocks(sid)}
+
+    def import_session(self, sid: str, payload: dict, *,
+                       priority: int | None = None) -> SessionAlloc:
+        """Re-admit an exported session (swap-in / migrate-in).  Raises
+        :class:`PoolOOMError` before touching any state when pages are
+        short, so a failed import never half-admits."""
+        table = payload["table"]
+        length = int(table["length"])
+        if self.pages_for(length) > len(self._free):
+            raise PoolOOMError(self.pages_for(length), len(self._free))
+        alloc = self.admit(sid, length,
+                           priority=table["priority"] if priority is None
+                           else priority)
+        self.write_tokens(sid, 0, {k: v for k, v in
+                                   payload["tokens"].items()
+                                   if v.shape[0]})
+        alloc.length = length
+        self.write_blocks(sid, payload["blocks"])
+        return alloc
+
+    # -- parking (swap-preemption) ------------------------------------------
+    # A preempted session's bytes move INTO the pool's parked store (host
+    # side, no pages held) instead of out to the engine: parked state is
+    # still pool state, so checkpoints (export_state) and live migration
+    # capture swapped-out sessions exactly like resident ones.
+
+    def park(self, sid: str) -> dict:
+        """Swap a session out: gather its bytes, free its pages, keep the
+        payload in the parked store.  Returns the payload."""
+        payload = self.export_session(sid)
+        self.release(sid)
+        self.parked[sid] = payload
+        return payload
+
+    def park_payload(self, sid: str, payload: dict) -> None:
+        """Park an externally-produced payload (migration-in under OOM)."""
+        if sid in self.sessions:
+            raise ValueError(f"session {sid!r} is admitted; park() it")
+        self.parked[sid] = payload
+
+    def unpark(self, sid: str) -> SessionAlloc:
+        """Swap a parked session back in.  Raises :class:`PoolOOMError`
+        with the payload left parked, so a failed swap-in loses nothing."""
+        payload = self.parked[sid]
+        alloc = self.import_session(sid, payload)   # OOM-safe: checks first
+        del self.parked[sid]
+        return alloc
+
+    def drop(self, sid: str) -> None:
+        """Forget a session entirely (migrated away / client gone)."""
+        self.release(sid)
+        self.parked.pop(sid, None)
+
+    # -- defrag -------------------------------------------------------------
+    def defrag(self) -> dict:
+        """Compact live pages down to the low indices, preserving every
+        session's gathered contents bit-for-bit.  Returns ``{"moved": n}``."""
+        mapping: dict[int, int] = {}
+        next_page = 0
+        for sid in sorted(self.sessions):
+            for p in self.sessions[sid].pages:
+                mapping[p] = next_page
+                next_page += 1
+        moved = 0
+        # relocate through a scratch copy: a page's destination may itself
+        # be another session's source
+        for st in self.stores.values():
+            src = st[sorted(mapping)]
+            for i, old in enumerate(sorted(mapping)):
+                new = mapping[old]
+                if new != old:
+                    st[new] = src[i]
+        for sid in self.sessions:
+            alloc = self.sessions[sid]
+            new_pages = [mapping[p] for p in alloc.pages]
+            moved += sum(1 for a, b in zip(alloc.pages, new_pages) if a != b)
+            alloc.pages = new_pages
+        self._free = [p for p in range(self.n_pages) if p >= next_page]
+        return {"moved": moved, "used": next_page}
+
+    # -- kernel + checkpoint views ------------------------------------------
+    def kernel_view(self, sids: list, k_key: str, v_key: str,
+                    n_kv_heads: int, head_dim: int) -> tuple:
+        """The exact operand set ``paged_decode_attention`` takes:
+        ``(k_pages [P, page, K, D], v_pages, page_table [B, n] int32,
+        lengths [B] int32)``.  Table rows are padded with page 0 (entries
+        past ``lengths`` must be VALID pool indices — the kernel prefetches
+        them unconditionally)."""
+        k_st, v_st = self.stores[k_key], self.stores[v_key]
+        K, D = int(n_kv_heads), int(head_dim)
+        if k_st.shape[2] != K * D:
+            raise ValueError(f"k leaf numel {k_st.shape[2]} != K*D {K * D}")
+        n_max = max((len(self.sessions[s].pages) for s in sids), default=1)
+        n_max = max(n_max, 1)
+        table = np.zeros((len(sids), n_max), dtype=np.int32)
+        lengths = np.zeros((len(sids),), dtype=np.int32)
+        for b, sid in enumerate(sids):
+            alloc = self.sessions[sid]
+            table[b, : len(alloc.pages)] = alloc.pages
+            lengths[b] = alloc.length
+        shape = (self.n_pages, self.page_size, K, D)
+        return (k_st.reshape(shape), v_st.reshape(shape), table, lengths)
+
+    def export_state(self) -> tuple:
+        """Whole-pool snapshot for :class:`~repro.core.runtime_state.
+        PagedCacheProvider`: ``(arrays, table)`` where ``arrays`` holds one
+        subtree per session (token rows + blocks — free pages are NOT
+        serialized) and ``table`` is the JSON page table."""
+        arrays: dict = {}
+        table = {"n_pages": self.n_pages, "page_size": self.page_size,
+                 "seq": self._seq, "sessions": {}, "parked": {}}
+        for sid in sorted(self.sessions):
+            alloc = self.sessions[sid]
+            table["sessions"][sid] = {
+                "pages": list(alloc.pages), "length": alloc.length,
+                "priority": alloc.priority, "seq": alloc.seq}
+            ent = {}
+            toks = {k: v for k, v in self.read_tokens(sid).items()
+                    if v.shape[0]}
+            if toks:
+                ent["tokens"] = toks
+            blocks = self.read_blocks(sid)
+            if blocks:
+                ent["blocks"] = blocks
+            if ent:
+                arrays[sid] = ent
+        for sid in sorted(self.parked):
+            payload = self.parked[sid]
+            table["parked"][sid] = dict(payload["table"])
+            ent = {}
+            toks = {k: v for k, v in payload["tokens"].items() if v.shape[0]}
+            if toks:
+                ent["tokens"] = toks
+            if payload["blocks"]:
+                ent["blocks"] = {k: np.asarray(v)
+                                 for k, v in payload["blocks"].items()}
+            if ent:
+                arrays[f"parked:{sid}"] = ent
+        return arrays, table
+
+    def import_state(self, arrays: dict, table: dict | None) -> None:
+        """Rebuild the pool from a snapshot: sessions land on their EXACT
+        original page ids (the table layout is part of the image), free
+        list is everything else."""
+        table = table or {}
+        self.stores.clear()
+        self.sessions.clear()
+        self.parked.clear()
+        self._free = list(range(self.n_pages))
+        self._seq = int(table.get("seq", 0))
+        for sid, row in sorted((table.get("sessions") or {}).items()):
+            alloc = self.admit(sid, 0, priority=int(row.get("priority", 0)),
+                               pages=list(row.get("pages", [])))
+            alloc.seq = int(row.get("seq", alloc.seq))
+            ent = (arrays or {}).get(sid) or {}
+            toks = ent.get("tokens") or {}
+            if toks:
+                self.write_tokens(sid, 0, {k: np.asarray(v)
+                                           for k, v in toks.items()})
+            alloc.length = int(row.get("length", 0))
+            blocks = ent.get("blocks") or {}
+            if blocks:
+                self.write_blocks(sid, blocks)
+        for sid, row in sorted((table.get("parked") or {}).items()):
+            ent = (arrays or {}).get(f"parked:{sid}") or {}
+            self.parked[sid] = {
+                "table": dict(row),
+                "tokens": {k: np.asarray(v)
+                           for k, v in (ent.get("tokens") or {}).items()},
+                "blocks": {k: np.asarray(v)
+                           for k, v in (ent.get("blocks") or {}).items()}}
+        self._seq = max([self._seq] + [a.seq
+                                       for a in self.sessions.values()])

@@ -292,7 +292,7 @@ def run_serve_cell(base: Path, tier: str) -> dict:
     import numpy as np
 
     from repro.core import elastic
-    from repro.launch.serve import Server
+    from repro.serving.engine import Server
 
     name = f"preempt_notice:serve:mpich:{tier}"
     t0 = time.time()
@@ -358,7 +358,7 @@ def run_serve_kill_cell(base: Path, tier: str) -> dict:
     disarm_all()
     import numpy as np
 
-    from repro.launch.serve import Server
+    from repro.serving.engine import Server
 
     name = f"kill_rank:serve:mpich:{tier}"
     t0 = time.time()
@@ -428,6 +428,157 @@ def run_serve_kill_cell(base: Path, tier: str) -> dict:
             "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
 
 
+def run_fleet_kill_cell(base: Path, tier: str) -> dict:
+    """kill_rank cell on the SERVING FLEET: a rank dies under continuous-
+    batch load (multiple sessions at independent positions, paged pool),
+    the supervisor rewinds to the latest fleet image and RE-HOMES every
+    in-flight session onto the surviving world — the incident must record
+    the re-home count and every per-session token stream must come out
+    gap- and duplicate-free (byte-identical to a fault-free fleet)."""
+    disarm_all()
+    import numpy as np
+
+    from repro.serving.engine import ServeEngine
+
+    name = f"kill_rank:fleet:mpich:{tier}"
+    t0 = time.time()
+    world, ticks = 2, 10
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 256, n, dtype=np.int32) for n in (6, 3, 9)]
+    budgets = [8, 6, 5]
+
+    def _submit_all(engine):
+        return [engine.submit(p, max_new_tokens=m)
+                for p, m in zip(prompts, budgets)]
+
+    # fault-free reference fleet (no snapshots, no supervisor)
+    ref_eng = ServeEngine(tiny_config(), world_size=world, backend="mpich",
+                          max_len=24, page_size=4, n_pages=48, max_running=3)
+    ref_sids = _submit_all(ref_eng)
+    for _ in range(ticks):
+        ref_eng.step_once()
+    ref_streams = [ref_eng.stream(s) for s in ref_sids]
+    assert all(len(st) == m for st, m in zip(ref_streams, budgets))
+
+    eng = ServeEngine(tiny_config(), world_size=world, backend="mpich",
+                      max_len=24, page_size=4, n_pages=48, max_running=3,
+                      ckpt_dir=base / name.replace(":", "_"))
+    sids = _submit_all(eng)
+    try:
+        # snapshots at ticks 3/6/9; the kill at 5 rewinds to the tick-3
+        # image with every session still in flight
+        plan = FaultPlan([FaultSpec("kill_rank", at_step=5,
+                                    rank=world - 1)])
+        with FaultInjector(plan) as injector:
+            sup = Supervisor(eng, injector=injector, lease_s=1.0,
+                             verbose=False,
+                             tier=ReplicaTier() if tier == "ram" else None,
+                             config=SupervisorConfig(backoff_floor_s=0.01,
+                                                     backoff_ceiling_s=0.05))
+            incidents = sup.run(ticks, ckpt_every=CKPT_EVERY)
+        assert injector.fired and incidents, f"{name}: no incident"
+        inc = incidents[0]
+        assert inc.kind == "rank_dead", \
+            f"{name}: classified {inc.kind!r} ({inc.error})"
+        expect_tier = "ram" if tier == "ram" else ("disk", "disk_chain")
+        assert inc.tier == expect_tier if tier == "ram" \
+            else inc.tier in expect_tier, \
+            f"{name}: served by {inc.tier!r}"
+        assert inc.resumed_step < inc.step, \
+            f"{name}: no rewind recorded ({inc.resumed_step}, {inc.step})"
+        assert inc.rehomed and inc.rehomed >= 1, \
+            f"{name}: incident recorded no re-homed sessions "\
+            f"({inc.rehomed!r})"
+        assert len(eng.cluster.survivors()) == world - 1, \
+            f"{name}: recovery world {len(eng.cluster.survivors())}"
+        # every stream gap- and duplicate-free across the re-home
+        for sid, ref_st in zip(sids, ref_streams):
+            assert eng.stream(sid) == ref_st, \
+                f"{name}: stream {sid} diverged after re-home"
+        assert not eng.sched.live(), f"{name}: fleet did not drain"
+    finally:
+        try:
+            eng.cluster.writer.close()
+        except Exception:  # noqa: BLE001 — never mask the cell's verdict
+            pass
+    return {"cell": name, "kind": inc.kind, "rank": inc.rank,
+            "resumed_step": inc.resumed_step, "ckpt": inc.ckpt,
+            "tier": inc.tier, "ladder": inc.ladder, "absorbed": inc.absorbed,
+            "rehomed": inc.rehomed,
+            "world": f"{inc.world_before}->{inc.world_after}",
+            "timings": inc.timings, "wall_s": round(time.time() - t0, 2)}
+
+
+def run_fleet_migrate_cell(base: Path) -> dict:  # noqa: ARG001 — cell shape
+    """Cross-flavor live-migration cell: sessions start decoding on an
+    MPICH-flavor fleet, migrate MID-SEQUENCE to a fabric-flavor fleet over
+    the digest-verified bridge, and finish there byte-identical to an
+    unmigrated reference.  A second pass arms the ``migrate_corrupt``
+    fault: the torn chunk must be rejected, the session must stay live at
+    the source, and its stream must still finish byte-identical."""
+    disarm_all()
+    import numpy as np
+
+    from repro.serving import MigrationError, ServeEngine, migrate_sessions
+
+    name = "migrate_corrupt:fleet:mpich->fabric:live"
+    t0 = time.time()
+
+    def _fleet(backend):
+        return ServeEngine(tiny_config(), world_size=2, backend=backend,
+                           max_len=24, page_size=4, n_pages=48,
+                           max_running=3)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 256, n, dtype=np.int32) for n in (6, 9)]
+    ref_eng = _fleet("mpich")
+    ref_sids = [ref_eng.submit(p, max_new_tokens=8) for p in prompts]
+    ref_eng.run_until_drained()
+    ref_streams = [ref_eng.stream(s) for s in ref_sids]
+
+    # live path: 3 ticks on mpich, then both sessions move to fabric
+    src = _fleet("mpich")
+    sids = [src.submit(p, max_new_tokens=8) for p in prompts]
+    for _ in range(3):
+        src.step_once()
+    dst = _fleet("fabric")
+    rep = migrate_sessions(src, dst, sids)
+    assert rep.sessions == sids and not src.sched.live(), \
+        f"{name}: source still owns migrated sessions"
+    dst.run_until_drained()
+    for sid, ref_st in zip(sids, ref_streams):
+        assert dst.stream(sid) == ref_st, \
+            f"{name}: stream {sid} diverged across the flavor boundary"
+
+    # torn-transfer path: the migrate_corrupt fault flips one chunk's
+    # bytes after its digest was recorded — the receiver must reject
+    src2, dst2 = _fleet("mpich"), _fleet("fabric")
+    c = src2.submit(prompts[0], max_new_tokens=8)
+    for _ in range(2):
+        src2.step_once()
+    plan = FaultPlan([FaultSpec("migrate_corrupt", at_step=0)])
+    with FaultInjector(plan) as injector:
+        injector.on_step(0, src2.cluster)
+        rejected = False
+        try:
+            migrate_sessions(src2, dst2, [c])
+        except MigrationError:
+            rejected = True
+    assert rejected, f"{name}: torn transfer was not rejected"
+    assert src2.sched.state(c) == "RUNNING" and c not in dst2.sessions, \
+        f"{name}: at-most-once placement violated"
+    src2.run_until_drained()
+    assert src2.stream(c) == ref_streams[0], \
+        f"{name}: source stream diverged after rejected migration"
+    return {"cell": name, "kind": "migrate_corrupt", "rank": None,
+            "resumed_step": None, "ckpt": None, "tier": "live",
+            "ladder": [], "absorbed": [],
+            "sessions": len(sids), "chunks": rep.chunks,
+            "bytes": rep.bytes, "world": "2->2",
+            "timings": {"detect_ms": 0.0, "restore_ms": 0.0},
+            "wall_s": round(time.time() - t0, 2)}
+
+
 def select_cells(mode: str) -> list:
     families = sorted(family_reps().values())
     if mode == "full":
@@ -489,7 +640,8 @@ def main() -> int:
     # stream)
     if args.mode in ("smoke", "full"):
         serve_cells = [("preempt_notice", run_serve_cell),
-                       ("kill_rank", run_serve_kill_cell)]
+                       ("kill_rank", run_serve_kill_cell),
+                       ("kill_rank:fleet", run_fleet_kill_cell)]
         for kind, fn in serve_cells:
             for tier in ("ram", "disk"):
                 cells.append((kind, "serve", "mpich", tier))
@@ -506,6 +658,18 @@ def main() -> int:
                     failures.append(f"{kind}:serve:mpich:{tier}: {e}")
                     print(f"  FAIL {kind}:serve:mpich:{tier}: {e}",
                           flush=True)
+        # cross-flavor live-migration cell (bridge transfer, no tier)
+        cells.append(("migrate_corrupt", "serve", "mpich->fabric", "live"))
+        try:
+            r = run_fleet_migrate_cell(base)
+            results.append(r)
+            print(f"  ok {r['cell']:<40} -> {r['kind']:<14} "
+                  f"sessions={r['sessions']} chunks={r['chunks']} "
+                  f"bytes={r['bytes']} [{r['wall_s']}s]", flush=True)
+        except Exception as e:  # noqa: BLE001 — report every cell
+            failures.append(f"migrate_corrupt:serve:mpich->fabric: {e}")
+            print(f"  FAIL migrate_corrupt:serve:mpich->fabric: {e}",
+                  flush=True)
     if args.out:
         Path(args.out).write_text(json.dumps(
             {"bench": "chaos_matrix", "mode": args.mode,

@@ -241,7 +241,7 @@ class _Rig:
         to GEN without interruption."""
         key = (arch, flavor)
         if key not in self._sources:
-            from repro.launch.serve import Server
+            from repro.serving.engine import Server
             cfg = ARCH_CFGS[arch]()
             srv = Server(cfg, world_size=WORLD, backend=flavor,
                          ckpt_dir=self.base / f"{arch}_{flavor}", seed=0)
@@ -272,7 +272,7 @@ class _Rig:
         it, exercising the replay-rewind path on later pairs)."""
         key = (arch, flavor)
         if key not in self._restorers:
-            from repro.launch.serve import Server
+            from repro.serving.engine import Server
             srv = Server(ARCH_CFGS[arch](), world_size=WORLD, backend=flavor,
                          ckpt_dir=self.base / f"{arch}_{flavor}_restorer",
                          seed=0)

@@ -1,0 +1,433 @@
+"""Serving-fleet suite: paged pool, continuous-batching scheduler, the
+multi-tenant engine, and live cross-flavor migration.
+
+Fast tier: pool/scheduler unit edge cases (OOM -> preempt-lowest-priority,
+preempt-then-readmit byte-identical, zero-length prompt, defrag preserves
+contents, all-sessions-retire-same-step) plus the kernel_view parity check
+against the dense decode-attention reference.
+
+Slow tier (``-m slow``): engine end-to-end — continuous batching vs the
+single-stream ``Server`` reference, fleet checkpoint/restore across
+flavors, live migration mid-sequence (byte-identical continuation,
+torn-transfer rejection, >1-page sessions).
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serving.kv_pool import PagePool, PoolOOMError
+from repro.serving.scheduler import (DONE, MIGRATED, QUEUED, RUNNING,
+                                     ContinuousBatchScheduler)
+
+
+def tiny_cfg():
+    return replace(smoke_config("granite-3-2b"), n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_size=256, vocab_pad_multiple=64)
+
+
+# ---------------------------------------------------------------------------
+# fast: page pool
+# ---------------------------------------------------------------------------
+
+def test_pool_admit_write_read_roundtrip(rng):
+    p = PagePool(8, 4)
+    p.admit("a", 6)
+    rows = rng.standard_normal((6, 3)).astype(np.float32)
+    p.write_tokens("a", 0, {"k": rows})
+    p.write_blocks("a", {"ssm": np.ones((2, 5), np.float32)})
+    np.testing.assert_array_equal(p.read_tokens("a")["k"], rows)
+    np.testing.assert_array_equal(p.read_blocks("a")["ssm"],
+                                  np.ones((2, 5), np.float32))
+    assert p.used_pages == 2 and p.sessions["a"].length == 6
+
+
+def test_pool_zero_length_admission_owns_no_pages():
+    p = PagePool(4, 4)
+    p.admit("z", 0)
+    assert p.used_pages == 0 and p.sessions["z"].length == 0
+    assert p.read_tokens("z") == {}
+    # first decode grows it onto its first page
+    p.write_tokens("z", 0, {"k": np.ones((1, 2), np.float32)})
+    assert p.used_pages == 1 and p.sessions["z"].length == 1
+
+
+def test_pool_growth_crosses_page_boundary():
+    p = PagePool(4, 2)
+    p.admit("a", 2)
+    assert len(p.sessions["a"].pages) == 1
+    for t in range(2, 5):
+        p.write_tokens("a", t, {"k": np.full((1, 1), t, np.float32)})
+    assert len(p.sessions["a"].pages) == 3
+    np.testing.assert_array_equal(
+        p.read_tokens("a")["k"][2:, 0], [2.0, 3.0, 4.0])
+
+
+def test_pool_oom_and_victim_policy():
+    p = PagePool(4, 4)
+    p.admit("low", 8, priority=0)
+    p.admit("high", 8, priority=5)
+    with pytest.raises(PoolOOMError):
+        p.admit("newcomer", 4, priority=3)
+    # victim: strictly below the candidate's priority -> only "low"
+    assert p.preempt_victim(below_priority=3) == "low"
+    # nothing strictly below 0 -> no victim, candidate must wait
+    assert p.preempt_victim(below_priority=0) is None
+    # unrestricted: lowest priority wins; newest arrival among ties
+    p2 = PagePool(4, 4)
+    p2.admit("old", 4, priority=1)
+    p2.admit("new", 4, priority=1)
+    assert p2.preempt_victim() == "new"
+
+
+def test_pool_park_unpark_byte_identical(rng):
+    p = PagePool(6, 4)
+    p.admit("a", 9, priority=2)
+    rows = rng.standard_normal((9, 4)).astype(np.float32)
+    p.write_tokens("a", 0, {"k": rows})
+    p.write_blocks("a", {"conv": rng.standard_normal((3,)).astype(np.float32)})
+    before = p.export_session("a")
+    p.park("a")
+    assert "a" not in p.sessions and p.free_pages == 6
+    p.unpark("a")
+    after = p.export_session("a")
+    np.testing.assert_array_equal(before["tokens"]["k"], after["tokens"]["k"])
+    np.testing.assert_array_equal(before["blocks"]["conv"],
+                                  after["blocks"]["conv"])
+    assert before["table"]["length"] == after["table"]["length"]
+
+
+def test_pool_unpark_oom_leaves_payload_parked():
+    p = PagePool(2, 4)
+    p.admit("a", 8)
+    p.write_tokens("a", 0, {"k": np.ones((8, 1), np.float32)})
+    p.park("a")
+    p.admit("b", 8)       # pool now full
+    with pytest.raises(PoolOOMError):
+        p.unpark("a")
+    assert "a" in p.parked     # nothing lost
+    p.release("b")
+    p.unpark("a")
+    assert p.sessions["a"].length == 8
+
+
+def test_pool_defrag_preserves_contents(rng):
+    p = PagePool(8, 2)
+    p.admit("a", 4)
+    p.admit("b", 4)
+    p.admit("c", 4)
+    content = {s: rng.standard_normal((4, 3)).astype(np.float32)
+               for s in ("a", "b", "c")}
+    for s, rows in content.items():
+        p.write_tokens(s, 0, {"k": rows})
+    p.release("b")        # hole in the middle
+    r = p.defrag()
+    assert r["moved"] > 0
+    assert r["used"] == 4 and p.free_pages == 4
+    # compacted pages are the low indices
+    used = sorted(pg for s in p.sessions.values() for pg in s.pages)
+    assert used == list(range(4))
+    for s in ("a", "c"):
+        np.testing.assert_array_equal(p.read_tokens(s)["k"], content[s])
+
+
+def test_pool_export_import_state_roundtrip(rng):
+    p = PagePool(8, 4)
+    p.admit("a", 6, priority=1)
+    p.write_tokens("a", 0, {"k": rng.standard_normal((6, 2)).astype(np.float32)})
+    p.admit("b", 3)
+    p.write_tokens("b", 0, {"k": rng.standard_normal((3, 2)).astype(np.float32)})
+    p.write_blocks("b", {"ssm": np.ones((2, 2), np.float32)})
+    p.park("b")           # parked sessions must ride snapshots too
+    arrays, table = p.export_state()
+    assert "parked:b" in arrays
+    q = PagePool(8, 4)
+    q.import_state(arrays, table)
+    np.testing.assert_array_equal(q.read_tokens("a")["k"],
+                                  p.read_tokens("a")["k"])
+    assert q.sessions["a"].pages == p.sessions["a"].pages   # exact layout
+    np.testing.assert_array_equal(q.parked["b"]["tokens"]["k"],
+                                  p.parked["b"]["tokens"]["k"])
+
+
+def test_pool_truncate_frees_tail_pages():
+    p = PagePool(4, 2)
+    p.admit("a", 7)
+    p.write_tokens("a", 0, {"k": np.arange(7, dtype=np.float32)[:, None]})
+    assert p.used_pages == 4
+    p.truncate("a", 3)
+    assert p.sessions["a"].length == 3 and p.used_pages == 2
+    np.testing.assert_array_equal(p.read_tokens("a")["k"][:, 0],
+                                  [0.0, 1.0, 2.0])
+
+
+def test_kernel_view_matches_dense_decode_attention(rng):
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention import (decode_attention,
+                                               paged_attention_pool_view)
+    K, D, H = 2, 8, 4
+    p = PagePool(16, 4)
+    lens = {"s0": 6, "s1": 11}
+    kv = {}
+    for sid, L in lens.items():
+        p.admit(sid, L)
+        kv[sid] = (rng.standard_normal((L, K * D)).astype(np.float32),
+                   rng.standard_normal((L, K * D)).astype(np.float32))
+        p.write_tokens(sid, 0, {"k": kv[sid][0], "v": kv[sid][1]})
+    q = rng.standard_normal((2, H, D)).astype(np.float32)
+    view = p.kernel_view(["s0", "s1"], "k", "v", K, D)
+    got = np.asarray(paged_attention_pool_view(q, view, interpret=True))
+    S = max(lens.values())
+    for b, sid in enumerate(["s0", "s1"]):
+        L = lens[sid]
+        kd = np.zeros((1, S, K, D), np.float32)
+        vd = np.zeros((1, S, K, D), np.float32)
+        kd[0, :L] = kv[sid][0].reshape(L, K, D)
+        vd[0, :L] = kv[sid][1].reshape(L, K, D)
+        ref = decode_attention(jnp.asarray(q[b : b + 1]), jnp.asarray(kd),
+                               jnp.asarray(vd), jnp.asarray([L], jnp.int32),
+                               interpret=True)
+        np.testing.assert_allclose(got[b], np.asarray(ref)[0],
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fast: scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_priority_then_fifo():
+    s = ContinuousBatchScheduler(max_running=2)
+    s.submit("a", priority=0)
+    s.submit("b", priority=5)
+    s.submit("c", priority=0)
+    assert s.queued() == ["b", "a", "c"]
+    s.admitted(s.next_admission())
+    s.admitted(s.next_admission())
+    assert s.running == ["b", "a"]
+    assert s.next_admission() is None          # lanes full
+
+
+def test_scheduler_preempted_keeps_arrival_seq():
+    s = ContinuousBatchScheduler(max_running=1)
+    s.submit("a")
+    s.submit("b")
+    s.admitted("a")
+    s.preempted("a")
+    # a re-queues AHEAD of b (original seq), not at the back
+    assert s.queued() == ["a", "b"]
+    assert s.tickets["a"].preemptions == 1
+
+
+def test_scheduler_all_retire_same_step_frees_every_lane():
+    s = ContinuousBatchScheduler(max_running=3)
+    for sid in ("a", "b", "c"):
+        s.submit(sid)
+        s.admitted(sid)
+    for sid in ("a", "b", "c"):
+        s.retired(sid)
+    assert s.running == [] and s.lanes_free() == 3
+    assert not s.live()
+    assert all(s.state(x) == DONE for x in ("a", "b", "c"))
+
+
+def test_scheduler_snapshot_restore_roundtrip():
+    s = ContinuousBatchScheduler(max_running=2)
+    s.submit("a", priority=3)
+    s.submit("b")
+    s.admitted("a")
+    s.submit("m")
+    s.admitted("m")
+    s.migrated("m")
+    snap = s.snapshot()
+    t = ContinuousBatchScheduler()
+    t.restore(snap)
+    assert t.running == ["a"] and t.state("b") == QUEUED
+    assert t.state("m") == MIGRATED and t._seq == s._seq
+    assert t.queued() == ["b"]
+
+
+def test_scheduler_duplicate_submit_rejected():
+    s = ContinuousBatchScheduler()
+    s.submit("a")
+    with pytest.raises(ValueError):
+        s.submit("a")
+
+
+# ---------------------------------------------------------------------------
+# fast: warn_skipped (satellite: silently-ignored providers)
+# ---------------------------------------------------------------------------
+
+def test_warn_skipped_prints_once_and_returns_line(capsys):
+    from repro.core import runtime_state as RS
+    line = RS.warn_skipped({"providers": 2, "skipped": ["ghost", "old"]},
+                           "serve")
+    out = capsys.readouterr().out
+    assert "ghost" in out and "old" in out and "serve" in out
+    assert "WARNING" in out and line is not None
+    assert RS.warn_skipped({"providers": 2, "skipped": []}, "serve") is None
+    assert capsys.readouterr().out == ""
+    assert RS.warn_skipped(None, "serve") is None
+
+
+# ---------------------------------------------------------------------------
+# slow: engine end-to-end + migration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_matches_single_stream_server(rng):
+    from repro.serving.engine import ServeEngine, Server
+    cfg = tiny_cfg()
+    prompt = rng.integers(0, 256, 6, dtype=np.int32)
+    srv = Server(cfg, backend="mpich", seed=0)
+    logits = srv.prefill(prompt[None, :], pad_to=24)
+    tok0 = int(np.argmax(np.asarray(logits)[0, : cfg.vocab_size]))
+    toks, _ = srv.decode(7, np.asarray([tok0], np.int32))
+    ref = [tok0] + [int(t[0]) for t in toks]
+
+    eng = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32, max_running=3)
+    a = eng.submit(prompt, max_new_tokens=8)
+    b = eng.submit(rng.integers(0, 256, 3), max_new_tokens=6)
+    z = eng.submit([], max_new_tokens=4)        # zero-length prompt
+    eng.run_until_drained(max_ticks=60)
+    assert eng.stream(a) == ref                 # continuous batching is
+    assert len(eng.stream(b)) == 6              # invisible to each stream
+    assert len(eng.stream(z)) == 4
+    assert not eng.sched.live()
+
+
+@pytest.mark.slow
+def test_engine_preempt_readmit_byte_identical(rng):
+    from repro.serving.engine import ServeEngine, Server
+    cfg = tiny_cfg()
+    prompt = rng.integers(0, 256, 6, dtype=np.int32)
+    srv = Server(cfg, backend="mpich", seed=0)
+    logits = srv.prefill(prompt[None, :], pad_to=24)
+    tok0 = int(np.argmax(np.asarray(logits)[0, : cfg.vocab_size]))
+    toks, _ = srv.decode(7, np.asarray([tok0], np.int32))
+    ref = [tok0] + [int(t[0]) for t in toks]
+
+    # pool too small for both sessions: the high-priority arrival must
+    # swap the low one out, and its readmitted stream must not fork
+    eng = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=6, max_running=2)
+    a = eng.submit(prompt, max_new_tokens=8, priority=0)
+    for _ in range(3):
+        eng.step_once()
+    b = eng.submit(rng.integers(0, 256, 8), max_new_tokens=6, priority=5)
+    eng.run_until_drained(max_ticks=200)
+    assert eng.sched.tickets[a].preemptions >= 1
+    assert eng.stream(a) == ref
+    assert len(eng.stream(b)) == 6
+
+
+@pytest.mark.slow
+def test_engine_checkpoint_restore_cross_flavor(rng, tmp_path):
+    from repro.serving.engine import ServeEngine
+    cfg = tiny_cfg()
+    prompt = rng.integers(0, 256, 6, dtype=np.int32)
+    eng = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32, ckpt_dir=tmp_path)
+    s1 = eng.submit(prompt, max_new_tokens=8)
+    s2 = eng.submit(rng.integers(0, 256, 3), max_new_tokens=6)
+    for _ in range(3):
+        eng.step_once()
+    eng.checkpoint().wait()
+    mid = {s: list(eng.stream(s)) for s in (s1, s2)}
+    eng.run_until_drained()
+    full = {s: eng.stream(s) for s in (s1, s2)}
+
+    fresh = ServeEngine(cfg, backend="fabric", seed=0, max_len=24,
+                        page_size=4, n_pages=32, ckpt_dir=tmp_path)
+    assert fresh.resume_latest() is not None
+    assert {s: fresh.stream(s) for s in (s1, s2)} == mid
+    fresh.run_until_drained()
+    assert {s: fresh.stream(s) for s in (s1, s2)} == full
+    assert fresh.last_runtime_restore["skipped"] == []
+
+
+@pytest.mark.slow
+def test_live_migration_cross_flavor_byte_identical(rng):
+    from repro.serving import ServeEngine, migrate_sessions
+    cfg = tiny_cfg()
+    prompt = rng.integers(0, 256, 6, dtype=np.int32)
+    long_prompt = rng.integers(0, 256, 11, dtype=np.int32)  # spans 3 pages
+
+    ref_eng = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                          page_size=4, n_pages=32)
+    r1 = ref_eng.submit(prompt, max_new_tokens=8)
+    r2 = ref_eng.submit(long_prompt, max_new_tokens=6)
+    ref_eng.run_until_drained()
+
+    src = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+    a = src.submit(prompt, max_new_tokens=8)
+    b = src.submit(long_prompt, max_new_tokens=6)
+    for _ in range(3):
+        src.step_once()
+    dst = ServeEngine(cfg, backend="fabric", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+    rep = migrate_sessions(src, dst, [a, b])
+    assert rep.sessions == [a, b] and rep.chunks > 0
+    assert src.sched.state(a) == MIGRATED and not src.sched.live()
+    dst.run_until_drained()
+    assert dst.stream(a) == ref_eng.stream(r1)   # gap- and duplicate-free
+    assert dst.stream(b) == ref_eng.stream(r2)
+
+
+@pytest.mark.slow
+def test_migration_torn_transfer_rejected(rng):
+    from repro.core import faults as F
+    from repro.serving import MigrationError, ServeEngine, migrate_sessions
+    cfg = tiny_cfg()
+    prompt = rng.integers(0, 256, 6, dtype=np.int32)
+    src = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+    ref = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+    a = src.submit(prompt, max_new_tokens=8)
+    ra = ref.submit(prompt, max_new_tokens=8)
+    for _ in range(2):
+        src.step_once()
+    ref.run_until_drained()
+    dst = ServeEngine(cfg, backend="fabric", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+
+    def flip(name, ctx):
+        m = ctx["msg"]
+        m["data"] = bytes([m["data"][0] ^ 0xFF]) + m["data"][1:]
+        F.disarm("serve.migrate.chunk", flip)
+
+    F.arm("serve.migrate.chunk", flip)
+    try:
+        with pytest.raises(MigrationError):
+            migrate_sessions(src, dst, [a])
+    finally:
+        F.disarm("serve.migrate.chunk")
+    # at-most-once placement: still live at source, absent at destination
+    assert src.sched.state(a) == RUNNING
+    assert a not in dst.sessions
+    src.run_until_drained()
+    assert src.stream(a) == ref.stream(ra)
+
+
+@pytest.mark.slow
+def test_migrate_corrupt_fault_kind_fires_failpoint():
+    from repro.core.faults import (FAULT_KINDS, FaultInjector, FaultPlan,
+                                   FaultSpec, failpoint)
+    assert "migrate_corrupt" in FAULT_KINDS
+    class _StubCluster:
+        def __init__(self):
+            self.events = []
+
+    plan = FaultPlan([FaultSpec(kind="migrate_corrupt", at_step=0)])
+    with FaultInjector(plan) as inj:
+        inj.on_step(0, _StubCluster())
+        msg = {"data": b"\x00" * 8, "sha": "irrelevant"}
+        failpoint("serve.migrate.chunk", msg=msg)
+        assert msg["data"] != b"\x00" * 8          # bytes flipped
+        msg2 = {"data": b"\x00" * 8}
+        failpoint("serve.migrate.chunk", msg=msg2)
+        assert msg2["data"] == b"\x00" * 8         # one-shot

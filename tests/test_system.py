@@ -84,7 +84,7 @@ def test_failure_detection_by_heartbeat(tmp_path):
 
 
 def test_serving_snapshot_roundtrip(tmp_path):
-    from repro.launch.serve import Server
+    from repro.serving.engine import Server
     cfg = TINY
     srv = Server(cfg, ckpt_dir=tmp_path / "sck")
     prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8),
@@ -133,7 +133,7 @@ def test_serve_restore_rewinds_generated_stream(tmp_path):
     """Rewinding pos at restore must also truncate Server.generated — the
     tokens decoded between snapshot and failure would otherwise appear
     twice after the supervisor replays them."""
-    from repro.launch.serve import Server
+    from repro.serving.engine import Server
     cfg = smoke_config("granite-3-2b")
     srv = Server(cfg, ckpt_dir=tmp_path / "g")
     rng = np.random.default_rng(2)

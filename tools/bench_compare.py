@@ -6,7 +6,7 @@ on hard gate regressions (benchmarks/run.py and bench_restart exit non-zero
 when a gate trips).  This tool adds the TREND layer on top: it compares the
 fresh numbers against the repo's committed ``BENCH_ckpt.json`` /
 ``BENCH_restart.json`` / ``BENCH_recovery.json`` / ``BENCH_compute.json``
-within a tolerance band and
+/ ``BENCH_serve.json`` within a tolerance band and
 
   * **warns** (exit 0) when a tracked metric drifted outside the band —
     noisy CI runners make drift-as-failure a flake factory, but the drift
@@ -80,6 +80,25 @@ COMPUTE_METRICS = [
      False, None),
     ("wrapper_speedup", lambda r: r["wrapper_speedup"], True, None),
 ]
+SERVE_METRICS = [
+    # the serving promise: a live migration's latency tail stays bounded —
+    # bench_serve hard-gates the bound itself, here the boolean must hold
+    ("migrate_p99_within_bound",
+     lambda r: 1.0 if r["migrate_p99_within_bound"] else 0.0, True, 1.0),
+    ("migrate_stall_ms", lambda r: r["migrate_stall_ms"], False, None),
+    ("migrate_token_p99_migrate_ms",
+     lambda r: r["migrate_token_p99_migrate_ms"], False, None),
+    # throughput is host-relative: hard-fail only on a >2x collapse vs
+    # the committed baseline; the drift band warns before that
+    ("steady_requests_per_s", lambda r: r["steady_requests_per_s"],
+     True, None, 0.5),
+    ("steady_tokens_per_s", lambda r: r["steady_tokens_per_s"],
+     True, None, 0.5),
+    ("steady_token_p50_ms", lambda r: r["steady_token_p50_ms"],
+     False, None),
+    ("rehome_mttr_ms", lambda r: r["rehome_mttr_ms"], False, None),
+    ("rehome_sessions", lambda r: r["rehome_sessions"], True, 1.0),
+]
 
 
 def _load(path):
@@ -103,6 +122,10 @@ def _recovery_result(payload):
 
 
 def _compute_result(payload):
+    return payload.get("results") if payload else None
+
+
+def _serve_result(payload):
     return payload.get("results") if payload else None
 
 
@@ -168,6 +191,8 @@ def main() -> int:
     ap.add_argument("--recovery-base", default="BENCH_recovery.json")
     ap.add_argument("--compute-fresh", default="BENCH_compute.fresh.json")
     ap.add_argument("--compute-base", default="BENCH_compute.json")
+    ap.add_argument("--serve-fresh", default="BENCH_serve.fresh.json")
+    ap.add_argument("--serve-base", default="BENCH_serve.json")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="relative drift band before a warning (default 25%%)")
     args = ap.parse_args()
@@ -181,7 +206,9 @@ def main() -> int:
             ("Recovery smoke (BENCH_recovery)", args.recovery_fresh,
              args.recovery_base, RECOVERY_METRICS, _recovery_result),
             ("Compute smoke (BENCH_compute)", args.compute_fresh,
-             args.compute_base, COMPUTE_METRICS, _compute_result)]:
+             args.compute_base, COMPUTE_METRICS, _compute_result),
+            ("Serving smoke (BENCH_serve)", args.serve_fresh,
+             args.serve_base, SERVE_METRICS, _serve_result)]:
         fresh = extract(_load(fresh_path))
         if fresh is None:
             all_fail.append(f"{title}: no fresh results at {fresh_path}")
