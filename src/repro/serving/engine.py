@@ -427,6 +427,16 @@ class ServeEngine:
         if prompt.size and prompt.size >= self.max_len:
             raise ValueError(f"prompt of {prompt.size} tokens >= max_len "
                              f"{self.max_len}")
+        if max_new_tokens > 0:
+            # prefill emits the first generated token, so a non-empty
+            # prompt decodes max_new-1 times (a zero-length one max_new
+            # times); the last decode writes its cache row at
+            # max(S, 1) + max_new - 2, which must stay inside max_len
+            last_pos = max(int(prompt.size), 1) + int(max_new_tokens) - 2
+            if last_pos >= self.max_len:
+                raise ValueError(
+                    f"prompt of {prompt.size} tokens + {max_new_tokens} "
+                    f"new tokens overruns max_len {self.max_len}")
         self.sessions[sid] = FleetSession(
             sid, prompt.tolist(), max_new=max_new_tokens, priority=priority,
             first_token=first_token)
@@ -546,10 +556,17 @@ class ServeEngine:
         sess.last_tok = tok0
 
     def _try_admit(self, sid: str) -> bool:
-        """Admit one queued session (prefill, or swap-in if parked),
-        preempting strictly-lower-priority victims on OOM.  Returns False
-        when the pool cannot make room at this priority."""
+        """Admit one queued session (prefill, swap-in if parked, or lane
+        grant if already pool-resident), preempting strictly-lower-priority
+        victims on OOM.  Returns False when the pool cannot make room at
+        this priority."""
         sess = self.sessions[sid]
+        if sid in self.pool.sessions:
+            # migrated in while every lane was busy: pages and bytes are
+            # already resident, the session just needs a lane (the dense
+            # copy regathers on its first decode)
+            sess.dense = None
+            return True
         while True:
             try:
                 if sid in self.pool.parked:
@@ -638,10 +655,13 @@ class ServeEngine:
                 if victim is not None:
                     self._preempt(victim)
                     continue
-                if any(s != sess.sid for s in self.sched.live()):
-                    # everyone else resident outranks us: park OURSELVES
+                if any(s != sess.sid for s in self.pool.sessions):
+                    # every other RESIDENT outranks us: park OURSELVES
                     # before the write — pos/stream untouched, so the
-                    # re-decode after unpark replays this exact token
+                    # re-decode after unpark replays this exact token once
+                    # a resident frees pages.  When nobody else holds
+                    # pages, parking frees nothing and the park/unpark
+                    # cycle would livelock — fall through and raise.
                     self._preempt(sess.sid)
                     return
                 raise PoolOOMError(

@@ -239,6 +239,13 @@ class PagePool:
         alloc = self.admit(sid, length,
                            priority=table["priority"] if priority is None
                            else priority)
+        seq = table.get("seq")
+        if seq is not None:
+            # a swap-in / migrate-in keeps its ORIGINAL arrival position
+            # in preempt_victim tie-breaks, exactly as import_state does
+            # for snapshots; _seq stays monotonic past it
+            alloc.seq = int(seq)
+            self._seq = max(self._seq, alloc.seq)
         self.write_tokens(sid, 0, {k: v for k, v in
                                    payload["tokens"].items()
                                    if v.shape[0]})

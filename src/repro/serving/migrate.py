@@ -21,8 +21,12 @@ then ONE ack back on ``MIGRATE_ACK_TAG``: ``{"ok": bool, sid, error?}``.
 Digest rules (same discipline as the elastic-join shard stream): every
 chunk carries ``sha = container_sha(data)`` computed at export; the
 receiver re-hashes on arrival and a single mismatch fails the WHOLE
-session — the commit/ack handshake is two-phase, so the source releases
-its copy only after the destination acknowledges a fully-verified import.
+session.  The header's StateLeaf descriptors, after re-encoding through
+the destination's ``translation_plan``, are then checked against every
+imported array (canonical dtype + shape) — a descriptor mismatch rejects
+the session the same way.  The commit/ack handshake is two-phase, so the
+source releases its copy only after the destination acknowledges a
+fully-verified import.
 On any failure the session keeps decoding at the source (at-most-once
 placement: it never runs in two places, and never in zero).
 
@@ -188,8 +192,25 @@ def _receive_session(link, dst_engine, plan, report) -> dict:
         sections[msg["section"]][msg["key"]] = \
             arr.reshape(msg["shape"]).copy()
     if error is None:
-        _, n_re = reencode_leaves(header.get("leaves") or [], plan)
+        leaves, n_re = reencode_leaves(header.get("leaves") or [], plan)
         report.reencoded_leaves += n_re
+        # the re-encoded descriptors are the post-transport contract:
+        # every imported array must match the canonical dtype/shape they
+        # advertise, whatever transport alias its bytes rode under — a
+        # mismatch rejects the session exactly like a digest failure
+        for lj in leaves:
+            section, _, key = lj["name"].partition("/")
+            arr = sections.get(section, {}).get(key)
+            if arr is None:
+                error = f"leaf {lj['name']} advertised but never received"
+                break
+            if arr.dtype.name != lj["dtype"] \
+                    or list(arr.shape) != list(lj["shape"]):
+                error = (f"leaf {lj['name']}: received {arr.dtype.name}"
+                         f"{tuple(arr.shape)} != descriptor {lj['dtype']}"
+                         f"{tuple(lj['shape'])}")
+                break
+    if error is None:
         payload = {"table": header.get("table"),
                    "tokens": sections["tokens"],
                    "blocks": sections["blocks"]}

@@ -113,6 +113,22 @@ def test_pool_unpark_oom_leaves_payload_parked():
     assert p.sessions["a"].length == 8
 
 
+def test_pool_import_session_preserves_arrival_seq():
+    p = PagePool(8, 4)
+    p.admit("old", 4, priority=1)
+    p.admit("vic", 4, priority=1)
+    p.park("vic")
+    p.admit("new", 4, priority=1)     # arrives after vic was parked
+    p.unpark("vic")
+    # vic keeps its ORIGINAL arrival position: "new" stays the
+    # newest-arrival tie-break victim after the swap round-trip
+    assert p.sessions["vic"].seq < p.sessions["new"].seq
+    assert p.preempt_victim() == "new"
+    # _seq stays monotonic past the restored seq
+    p.admit("next", 0)
+    assert p.sessions["next"].seq > p.sessions["new"].seq
+
+
 def test_pool_defrag_preserves_contents(rng):
     p = PagePool(8, 2)
     p.admit("a", 4)
@@ -256,6 +272,76 @@ def test_scheduler_duplicate_submit_rejected():
 
 
 # ---------------------------------------------------------------------------
+# fast: migration receiver applies the re-encoded leaf descriptors
+# ---------------------------------------------------------------------------
+
+class _StubLink:
+    def __init__(self, msgs):
+        self.msgs = list(msgs)
+        self.acks = []
+
+    def recv_at_dst(self):
+        return self.msgs.pop(0)
+
+    def ack_to_src(self, msg):
+        self.acks.append(msg)
+
+    def recv_ack(self):
+        return self.acks[-1]
+
+
+class _StubEngine:
+    def __init__(self):
+        self.imported = []
+
+    def import_session_state(self, sid, state):
+        self.imported.append((sid, state))
+
+
+class _StubPlan:
+    runtime = {}
+
+
+def _session_stream(leaf_dtype="float32", leaf_shape=(2, 3)):
+    from repro.core.ckpt_tiers import container_sha
+    arr = np.ones((2, 3), np.float32)
+    data = arr.tobytes()
+    header = {"op": "session", "sid": "s", "cursor": {"prompt": [1, 2]},
+              "sched_state": RUNNING, "parked": False,
+              "table": {"length": 2, "priority": 0, "seq": 1},
+              "leaves": [{"name": "tokens/k", "dtype": leaf_dtype,
+                          "shape": list(leaf_shape),
+                          "mpi_dtype": "MPI_CHAR"}]}
+    chunk = {"op": "chunk", "sid": "s", "section": "tokens", "key": "k",
+             "data": data, "dtype": "float32", "shape": [2, 3],
+             "sha": container_sha(data)}
+    return [header, chunk, {"op": "commit", "sid": "s", "count": 1}]
+
+
+def test_receive_session_rejects_descriptor_mismatch():
+    from repro.serving import migrate as M
+    eng = _StubEngine()
+    rep = M.MigrationReport(src_flavor="a", dst_flavor="b")
+    ack = M._receive_session(_StubLink(_session_stream("float64")), eng,
+                             _StubPlan(), rep)
+    assert not ack["ok"] and "tokens/k" in ack["error"]
+    assert eng.imported == []        # refused before any half-import
+
+
+def test_receive_session_accepts_matching_descriptors():
+    from repro.serving import migrate as M
+    eng = _StubEngine()
+    rep = M.MigrationReport(src_flavor="a", dst_flavor="b")
+    ack = M._receive_session(_StubLink(_session_stream()), eng,
+                             _StubPlan(), rep)
+    assert ack["ok"]
+    (sid, state), = eng.imported
+    assert sid == "s"
+    np.testing.assert_array_equal(state["pool"]["tokens"]["k"],
+                                  np.ones((2, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
 # fast: warn_skipped (satellite: silently-ignored providers)
 # ---------------------------------------------------------------------------
 
@@ -375,6 +461,72 @@ def test_live_migration_cross_flavor_byte_identical(rng):
     dst.run_until_drained()
     assert dst.stream(a) == ref_eng.stream(r1)   # gap- and duplicate-free
     assert dst.stream(b) == ref_eng.stream(r2)
+
+
+@pytest.mark.slow
+def test_submit_rejects_overrunning_max_len(rng):
+    from repro.serving.engine import ServeEngine
+    cfg = tiny_cfg()
+    eng = ServeEngine(cfg, backend="mpich", seed=0, max_len=12,
+                      page_size=4, n_pages=8)
+    with pytest.raises(ValueError):
+        eng.submit(rng.integers(0, 256, 12, dtype=np.int32))  # >= max_len
+    with pytest.raises(ValueError):
+        # 6-token prompt + 8 generated needs 13 cache rows > max_len 12
+        eng.submit(rng.integers(0, 256, 6, dtype=np.int32), max_new_tokens=8)
+    with pytest.raises(ValueError):
+        eng.submit([], max_new_tokens=13)  # zero-length: max_new > max_len
+    # exact fits are accepted
+    eng.submit(rng.integers(0, 256, 6, dtype=np.int32), max_new_tokens=7)
+    eng.submit([], max_new_tokens=12)
+
+
+@pytest.mark.slow
+def test_decode_growth_beyond_pool_capacity_raises(rng):
+    from repro.serving.engine import ServeEngine
+    cfg = tiny_cfg()
+    # the pool holds 2 token positions TOTAL: session a's first decode
+    # needs a second page that does not exist.  With only page-less
+    # QUEUED b around, self-parking would free nothing (park/unpark
+    # livelock); the engine must raise instead of spinning to max_ticks
+    eng = ServeEngine(cfg, backend="mpich", seed=0, max_len=8,
+                      page_size=2, n_pages=1, max_running=2)
+    eng.submit(rng.integers(0, 256, 2, dtype=np.int32), max_new_tokens=4)
+    eng.submit(rng.integers(0, 256, 2, dtype=np.int32), max_new_tokens=2)
+    with pytest.raises(PoolOOMError):
+        eng.run_until_drained(max_ticks=50)
+
+
+@pytest.mark.slow
+def test_migration_into_busy_destination_queues_then_runs(rng):
+    from repro.serving import ServeEngine, migrate_sessions
+    cfg = tiny_cfg()
+    prompt = rng.integers(0, 256, 6, dtype=np.int32)
+
+    ref = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+    r = ref.submit(prompt, max_new_tokens=8)
+    ref.run_until_drained()
+
+    src = ServeEngine(cfg, backend="mpich", seed=0, max_len=24,
+                      page_size=4, n_pages=32)
+    a = src.submit(prompt, sid="mig-a", max_new_tokens=8)
+    for _ in range(3):
+        src.step_once()
+    # destination has ONE lane and it is already occupied: the migrated
+    # session must land pool-resident but QUEUED, then take the lane when
+    # the busy session retires — without re-prefilling into the pool
+    dst = ServeEngine(cfg, backend="fabric", seed=0, max_len=24,
+                      page_size=4, n_pages=32, max_running=1)
+    busy = dst.submit(rng.integers(0, 256, 4, dtype=np.int32),
+                      max_new_tokens=6)
+    dst.step_once()
+    assert dst.sched.lanes_free() == 0
+    migrate_sessions(src, dst, [a])
+    assert dst.sched.state(a) == QUEUED and a in dst.pool.sessions
+    dst.run_until_drained(max_ticks=100)
+    assert dst.stream(a) == ref.stream(r)   # gap- and duplicate-free
+    assert len(dst.stream(busy)) == 6
 
 
 @pytest.mark.slow
